@@ -1,0 +1,69 @@
+"""Paper Fig. 6 (prune Bonito) + Fig. 14 (prune RUBICALL): unstructured
+element vs structured channel pruning with the paper's one-shot protocol
+(prune once -> fine-tune under the mask -> evaluate), locating knees.
+
+RUBICALL trains with its mixed-precision QAT policy disabled for this
+study (pruning is orthogonal to quantization; the paper prunes the
+trained model weights the same way)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import data_iter, eval_identity, train_model
+from repro.config import QuantPolicy, get_config
+from repro.core import pruning
+from repro.models import api
+from repro.training.optimizer import AdamWConfig, adamw_update, \
+    init_opt_state
+
+SPARSITIES = (0.0, 0.15, 0.3, 0.6, 0.85)
+FINETUNE_STEPS = 120
+
+
+def _finetune_masked(cfg, params, state, mask, steps=FINETUNE_STEPS):
+    """SGD under the mask (pruned weights stay zero)."""
+    opt = AdamWConfig(lr=2e-3, total_steps=steps, warmup_steps=2)
+    loss_fn = api.make_loss_fn(cfg)
+    opt_state = init_opt_state(params, opt)
+
+    @jax.jit
+    def step(params, state, opt_state, batch):
+        (l, (_, ns)), g = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, state, batch)
+        g = pruning.apply_mask(g, mask)
+        params, opt_state, _ = adamw_update(params, g, opt_state, opt)
+        params = pruning.apply_mask(params, mask)
+        return params, ns, opt_state, l
+
+    it = data_iter(5)
+    for _ in range(steps):
+        params, state, opt_state, _ = step(params, state, opt_state,
+                                           next(it))
+    return params, state
+
+
+def run(emit):
+    for fig, arch in (("fig6", "bonito-smoke"), ("fig14", "rubicall-smoke")):
+        cfg = get_config(arch)
+        if cfg.quant.enabled:
+            cfg = dataclasses.replace(cfg, quant=QuantPolicy())
+        params0, state0, _ = train_model(cfg, steps=400)
+        for method, masker in (("unstructured", pruning.unstructured_mask),
+                               ("structured",
+                                pruning.structured_channel_mask)):
+            for s in SPARSITIES:
+                if s == 0.0:
+                    p, st = params0, state0
+                    nz = 1.0
+                else:
+                    mask = masker(params0, s)
+                    p = pruning.apply_mask(params0, mask)
+                    p, st = _finetune_masked(cfg, p, state0, mask)
+                    nz = pruning.model_size_bytes(params0, mask) \
+                        / pruning.model_size_bytes(params0)
+                ident = eval_identity(cfg, p, st)
+                emit(f"{fig}_prune[{arch.split('-')[0]},{method},s={s}]",
+                     0.0, f"identity={ident:.4f};size_frac={nz:.3f}")

@@ -1,0 +1,28 @@
+"""Paper Fig. 7 + Fig. 8: static quantization sweep on the Bonito-style
+baseline — accuracy (read identity on held-out synthetic reads) and model
+size per <weight, activation> configuration."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import eval_identity, train_model
+from repro.config import get_config
+from repro.core.quant.fake_quant import quant_dequant_params
+from repro.core.pruning import model_size_bytes
+
+SWEEP = [("fp32", 0), ("<16,16>", 16), ("<8,8>", 8), ("<8,4>", 8),
+         ("<4,8>", 4), ("<4,4>", 4), ("<3,2>", 3)]
+
+
+def run(emit):
+    cfg = get_config("bonito-smoke")
+    params, state, _ = train_model(cfg, steps=300)
+    base_size = model_size_bytes(params)
+    for name, wbits in SWEEP:
+        p = quant_dequant_params(params, wbits) if wbits else params
+        ident = eval_identity(cfg, p, state)
+        size = model_size_bytes(params, bits=wbits or 32)
+        emit(f"fig7_quant_acc[{name}]", 0.0,
+             f"identity={ident:.4f}")
+        emit(f"fig8_quant_size[{name}]", 0.0,
+             f"size_ratio={base_size / size:.2f}x")

@@ -1,0 +1,29 @@
+"""§Roofline: read every dry-run cell JSON and emit the three roofline
+terms + bottleneck + MODEL_FLOPS/HLO ratio (the deliverable table)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def run(emit):
+    if not RESULTS.exists():
+        emit("roofline", 0.0, "no dry-run results yet — run "
+             "`python -m repro.launch.dryrun --all`")
+        return
+    for f in sorted(RESULTS.glob("*.json")):
+        r = json.loads(f.read_text())
+        if "skipped" in r:
+            emit(f"roofline[{r['cell']}]", 0.0, "SKIP:" + r["skipped"][:40])
+            continue
+        t = r["roofline"]
+        ratio = r.get("useful_flops_ratio")
+        emit(f"roofline[{r['cell']}]",
+             t["step_time_lower_bound_s"] * 1e6,
+             f"compute_ms={t['compute_s']*1e3:.2f};"
+             f"memory_ms={t['memory_s']*1e3:.2f};"
+             f"collective_ms={t['collective_s']*1e3:.2f};"
+             f"bound={t['bottleneck']};"
+             f"useful_flops={ratio:.3f}" if ratio else "n/a")

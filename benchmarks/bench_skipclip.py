@@ -1,0 +1,77 @@
+"""Paper Fig. 13: SkipClip stride sweep — validation accuracy while skip
+connections are removed one per `stride` epochs under KD; plus the
+Supplementary S1 manual-removal contrast (all skips cut at once, no KD)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import data_iter, eval_identity, train_model
+from repro.config import get_config
+from repro.core.skipclip import (SkipClipConfig, gates_for_epoch,
+                                 make_skipclip_loss)
+from repro.models import api
+from repro.training.optimizer import AdamWConfig, adamw_update, \
+    init_opt_state
+
+STEPS_PER_EPOCH = 40
+EPOCHS = 8
+
+
+def run(emit):
+    t_cfg = get_config("bonito-smoke")
+    s_cfg = get_config("bonito-smoke")   # student: same family, skips gated
+    t_params, t_state, _ = train_model(t_cfg, steps=300)
+
+    for stride in (1, 2, 3):
+        sc = SkipClipConfig(stride=stride)
+        loss_fn = make_skipclip_loss(s_cfg, t_cfg, sc)
+        rng = jax.random.key(42)
+        params = api.init_params(rng, s_cfg)
+        state = api.init_model_state(s_cfg)
+        opt = AdamWConfig(lr=3e-3, total_steps=EPOCHS * STEPS_PER_EPOCH,
+                          warmup_steps=2)
+        opt_state = init_opt_state(params, opt)
+
+        @jax.jit
+        def step(params, state, opt_state, batch, gates):
+            (l, (m, ns)), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, state, t_params, t_state, batch, gates)
+            params, opt_state, _ = adamw_update(params, g, opt_state, opt)
+            return params, ns, opt_state, l
+
+        it = data_iter(9)
+        for epoch in range(EPOCHS):
+            gates = gates_for_epoch(s_cfg.n_blocks, epoch, stride)
+            for _ in range(STEPS_PER_EPOCH):
+                params, state, opt_state, l = step(params, state,
+                                                   opt_state, next(it),
+                                                   gates)
+            removed = int(s_cfg.n_blocks - float(jnp.sum(gates)))
+            ident = eval_identity(s_cfg, params, state, n_batches=2)
+            emit(f"fig13_skipclip[stride={stride},epoch={epoch}]", 0.0,
+                 f"identity={ident:.4f};skips_removed={removed}")
+        emit(f"fig13_skipclip[stride={stride}]", 0.0,
+             f"final_identity={ident:.4f};skips_removed={removed}")
+
+    # Supplementary S1: manual removal (no KD, gates=0 from the start)
+    params, state, _ = train_model(s_cfg, steps=300)
+    ident_with = eval_identity(s_cfg, params, state, n_batches=2)
+    from repro.models.basecaller import model as bc
+    import numpy as np
+    from repro.models.basecaller.ctc import greedy_decode
+    gates0 = jnp.zeros((s_cfg.n_blocks,))
+    fwd = jax.jit(lambda p, s, x: bc.forward(p, s, x, s_cfg, train=False,
+                                             skip_gates=gates0)[0])
+    from benchmarks.common import data_iter as di
+    from repro.data.align import identity as ident_fn
+    idents = []
+    for _, b in zip(range(2), di(77)):
+        lp = fwd(params, state, b["signal"])
+        for call, lab, ln in zip(greedy_decode(np.asarray(lp)),
+                                 np.asarray(b["labels"]),
+                                 np.asarray(b["label_lengths"])):
+            idents.append(ident_fn(call, lab[:ln]))
+    emit("figS1_manual_skip_removal", 0.0,
+         f"identity_with_skips={ident_with:.4f};"
+         f"identity_cut_no_finetune={float(np.mean(idents)):.4f}")

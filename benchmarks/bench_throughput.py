@@ -1,0 +1,109 @@
+"""Paper Fig. 9/10 + Table S1: basecaller family comparison.
+
+Two views:
+1. measured CPU wall-time per chunk (relative speeds; this container has
+   no TPU), and
+2. the v5e analytical roofline projection — per-model step-time lower
+   bound from flops/bytes at the model's precision policy, which is the
+   TPU-native version of the paper's BOPs-based throughput estimate.
+   RUBICALL-MP (int8-capable mixed precision) vs RUBICALL-FP (same arch,
+   fp32) reproduces the paper's MP-vs-FP speedup mechanism.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import CHUNK, wall_time_per_call
+from repro.analysis.roofline import HBM_BW, PEAK_BF16, PEAK_INT8
+from repro.config import QuantPolicy, get_config
+from repro.models import api
+from repro.models.basecaller import model as bc
+
+
+def _roofline_step_time(cfg, batch: int, chunk: int, bits_w: int,
+                        bits_a: int) -> float:
+    """max(compute, memory) for one forward over (batch, chunk)."""
+    flops = 0.0
+    bytes_ = 0.0
+    t = chunk
+    c_in = 1
+    peak = PEAK_INT8 if 0 < max(bits_w, bits_a) <= 8 else PEAK_BF16
+    for i in range(cfg.n_blocks):
+        c_out = cfg.channels[i]
+        k = cfg.kernel_sizes[i]
+        t = t // cfg.strides[i]
+        for r in range(cfg.repeats[i]):
+            cin = c_in if r == 0 else c_out
+            flops += 2.0 * batch * t * (k * cin + cin * c_out)
+            wb = (k * cin + cin * c_out) * (bits_w or 32) / 8
+            ab = batch * t * (cin + c_out) * (bits_a or 32) / 8
+            bytes_ += wb + ab
+        if cfg.use_skips:
+            flops += 2.0 * batch * t * c_in * c_out
+            bytes_ += c_in * c_out * (bits_w or 32) / 8
+        c_in = c_out
+    return max(flops / peak, bytes_ / HBM_BW)
+
+
+def run(emit):
+    rng = jax.random.key(0)
+    batch = 2
+    sig = jax.random.normal(rng, (batch, CHUNK, 1), jnp.float32)
+
+    rows = {}
+    for arch in ("causalcall", "bonito", "rubicall"):
+        cfg = get_config(arch + "-smoke")
+        params = api.init_params(rng, cfg)
+        state = api.init_model_state(cfg)
+        fwd = jax.jit(lambda p, s, x, c=cfg: bc.forward(p, s, x, c,
+                                                        train=False)[0])
+        us = wall_time_per_call(fwd, params, state, sig, iters=3)
+        rows[arch] = us
+        emit(f"fig10_cpu_walltime[{arch}]", us, "relative CPU proxy")
+
+    # v5e roofline projections at FULL configs (paper's main table)
+    full_batch, full_chunk = 32, 4096
+    for arch, bw, ba, name in (
+        ("causalcall", 0, 0, "causalcall-fp"),
+        ("bonito", 0, 0, "bonito-fp"),
+        ("rubicall", 0, 0, "rubicall-fp"),
+        ("rubicall", 8, 8, "rubicall-mp"),
+    ):
+        cfg = get_config(arch)
+        t = _roofline_step_time(cfg, full_batch, full_chunk, bw, ba)
+        # basecalling throughput: bases/sec = samples/sec / dwell(~9) etc.;
+        # report kilo-samples/s of signal as the hardware-level rate
+        ksps = full_batch * full_chunk / t / 1e3
+        emit(f"fig9_v5e_roofline[{name}]", t * 1e6,
+             f"signal_ksamples_per_s={ksps:.0f}")
+        rows[name] = t
+
+    mp_speedup = rows["rubicall-fp"] / rows["rubicall-mp"]
+    vs_bonito = rows["bonito-fp"] / rows["rubicall-mp"]
+    vs_causal = rows["causalcall-fp"] / rows["rubicall-mp"]
+    emit("fig10_speedups", 0.0,
+         f"rubicall_mp_vs_fp={mp_speedup:.2f}x;"
+         f"vs_bonito={vs_bonito:.2f}x;vs_causalcall={vs_causal:.2f}x")
+
+    # Table S1-style size/param table
+    for arch in ("causalcall", "bonito", "rubicall"):
+        cfg = get_config(arch)
+        n = api.count_params_analytic(cfg)
+        from repro.core.quant.policy import quantize_tree, tree_size_bytes
+        ps = jax.eval_shape(lambda c=cfg: api.init_params(rng, c))
+        fp_bytes = sum(l.size * 4 for l in jax.tree.leaves(ps))
+        if cfg.quant.enabled:
+            # mixed-precision storage: honour the per-layer policy
+            mp_bytes = 0
+            for path, leaf in jax.tree_util.tree_flatten_with_path(ps)[0]:
+                tag = "/".join(str(getattr(k, "key", k)) for k in path)
+                wb, _ = cfg.quant.bits_for(tag)
+                mp_bytes += leaf.size * (wb or 32) / 8
+        else:
+            mp_bytes = fp_bytes
+        emit(f"tableS1[{arch}]", 0.0,
+             f"params={n};fp32_MB={fp_bytes/1e6:.2f};"
+             f"policy_MB={mp_bytes/1e6:.2f}")

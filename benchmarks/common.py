@@ -1,0 +1,90 @@
+"""Shared benchmark harness: short smoke-scale basecaller training on the
+squiggle simulator + read-identity evaluation (the CPU-feasible stand-in
+for the paper's ONT accuracy metric — relative orderings are the target,
+see DESIGN.md §8)."""
+from __future__ import annotations
+
+import time
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, get_config
+from repro.data.align import identity
+from repro.data.squiggle import SquiggleConfig, batches
+from repro.models import api
+from repro.models.basecaller import model as bc
+from repro.models.basecaller.ctc import greedy_decode
+from repro.training.optimizer import AdamWConfig, init_opt_state
+
+CHUNK = 512
+BATCH = 8
+
+# Benchmark-scale simulator: 3-mer pore model, fixed dwell, low noise —
+# chosen so smoke-scale models reach non-trivial read identity inside a
+# CPU-minutes budget. Relative orderings (quant/prune/skipclip deltas) are
+# the validation target, not ONT-absolute accuracy (DESIGN.md §8).
+SIM = dict(chunk_len=CHUNK, k=3, dwell_jitter=False, mean_dwell=8.0,
+           noise=0.08, drift=0.0)
+
+
+def data_iter(seed: int = 0):
+    for b in batches(SquiggleConfig(seed=1234 + seed, **SIM), BATCH):
+        yield {k: jnp.asarray(v) for k, v in b.items()}
+
+
+def train_model(cfg: ModelConfig, steps: int = 300, lr: float = 5e-3,
+                skip_gates=None, seed: int = 0):
+    rng = jax.random.key(seed)
+    params = api.init_params(rng, cfg)
+    state = api.init_model_state(cfg)
+    opt = AdamWConfig(lr=lr, total_steps=steps, warmup_steps=3)
+    loss_fn = api.make_loss_fn(cfg)
+
+    if skip_gates is None:
+        step = jax.jit(api.make_train_step(cfg, opt, n_micro=1))
+        carry = api.TrainCarry(params, init_opt_state(params, opt), state)
+        it = data_iter(seed)
+        for _ in range(steps):
+            carry, m = step(carry, next(it))
+        return carry.params, carry.model_state, float(m["loss"])
+    raise NotImplementedError
+
+
+def eval_identity(cfg: ModelConfig, params, state, n_batches: int = 4,
+                  seed: int = 77) -> float:
+    """Mean read identity of greedy-decoded calls vs truth."""
+    it = data_iter(seed)
+    fwd = jax.jit(lambda p, s, x: bc.forward(p, s, x, cfg, train=False)[0])
+    idents = []
+    for _ in range(n_batches):
+        b = next(it)
+        lp = fwd(params, state, b["signal"])
+        calls = greedy_decode(np.asarray(lp))
+        for call, lab, ln in zip(calls, np.asarray(b["labels"]),
+                                 np.asarray(b["label_lengths"])):
+            idents.append(identity(call, lab[:ln]))
+    return float(np.mean(idents))
+
+
+def eval_ctc_loss(cfg: ModelConfig, params, state, n_batches: int = 4,
+                  seed: int = 77) -> float:
+    from repro.models.basecaller.ctc import ctc_loss
+    it = data_iter(seed)
+    fwd = jax.jit(lambda p, s, x: bc.forward(p, s, x, cfg, train=False)[0])
+    tot = []
+    for _ in range(n_batches):
+        b = next(it)
+        lp = fwd(params, state, b["signal"])
+        tot.append(float(ctc_loss(lp, b["labels"], b["label_lengths"])))
+    return float(np.mean(tot))
+
+
+def wall_time_per_call(fn, *args, iters: int = 5) -> float:
+    fn(*args)                       # compile
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6      # us

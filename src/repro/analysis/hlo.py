@@ -1,0 +1,455 @@
+"""Static analyzer for post-SPMD scheduled HLO text.
+
+Why: ``compiled.cost_analysis()`` counts a ``while`` body ONCE, but our
+models scan over layers/microbatches, so flops / bytes / collective bytes
+must be scaled by loop trip counts (available in the while op's
+``backend_config={"known_trip_count":{"n":...}}``). This module parses the
+HLO text, builds the computation call graph, and accumulates:
+
+- ``dot_flops`` / ``conv_flops``: 2 * result_elems * contraction_size for
+  every dot / convolution (covers >99% of model flops; elementwise ignored
+  and reported separately via xla's single-iteration estimate).
+- ``hbm_bytes``: per top-level instruction in scheduled HLO (post-fusion),
+  operands + result bytes — fusion-internal ops never touch HBM, so this
+  approximates true HBM traffic the way XLA's own bytes-accessed does.
+- ``collective_bytes``: per collective kind, max(result, operands) bytes.
+
+All quantities are PER DEVICE / PER PARTITION (SPMD HLO has per-shard
+shapes), which is exactly what the per-chip roofline terms need.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 0.5, "u4": 0.5, "pred": 1, "c64": 8, "c128": 16,
+    "token": 0, "s2": 0.25, "u2": 0.25,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+
+def _shape_bytes_elems(shape_str: str) -> Tuple[float, float]:
+    """Total bytes and element count for a (possibly tuple) shape string."""
+    total_b = 0.0
+    total_e = 0.0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        elems = 1.0
+        if dims:
+            for d in dims.split(","):
+                elems *= int(d)
+        total_e += elems
+        total_b += elems * _DTYPE_BYTES[dt]
+    return total_b, total_e
+
+
+def _dims_of(shape_str: str) -> List[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str          # result shape string
+    opcode: str
+    operands: List[str]
+    raw: str
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    by_name: Dict[str, Instr]
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^)]*\)|[a-z][\w\[\],.{}/*]*)\s+"
+    r"([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry_name = None
+    for line in text.splitlines():
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr and ("->" in line):
+            cur = Computation(hdr.group(2), [], {})
+            comps[hdr.group(2)] = cur
+            if hdr.group(1):
+                entry_name = hdr.group(2)
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        root, name, shape, opcode, rest = m.groups()
+        # operand names: %foo references inside the parens (first level ok)
+        operands = re.findall(r"%([\w.\-]+)", rest)
+        ins = Instr(name, shape, opcode, operands, line, bool(root))
+        cur.instrs.append(ins)
+        cur.by_name[name] = ins
+    if entry_name:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _dot_flops(ins: Instr) -> float:
+    out_b, out_e = _shape_bytes_elems(ins.shape)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.raw)
+    if not m or not ins.operands:
+        return 0.0
+    return out_e  # caller multiplies by 2*contraction
+
+def _contraction_size(comp: Computation, ins: Instr) -> float:
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.raw)
+    if not m:
+        return 0.0
+    cdims = [int(x) for x in m.group(1).split(",")] if m.group(1) else []
+    lhs = comp.by_name.get(ins.operands[0]) if ins.operands else None
+    if lhs is None:
+        return 0.0
+    dims = _dims_of(lhs.shape)
+    size = 1.0
+    for c in cdims:
+        if c < len(dims):
+            size *= dims[c]
+    return size
+
+
+def _conv_flops(comp: Computation, ins: Instr) -> float:
+    _, out_e = _shape_bytes_elems(ins.shape)
+    if len(ins.operands) < 2:
+        return 0.0
+    rhs = comp.by_name.get(ins.operands[1])
+    if rhs is None:
+        return 0.0
+    kdims = _dims_of(rhs.shape)
+    if not kdims:
+        return 0.0
+    # rhs (kernel) total elems / output-features ~ per-output MACs
+    m = re.search(r"dim_labels=\S*?_(\w+?)->", ins.raw)
+    kelems = 1.0
+    for d in kdims:
+        kelems *= d
+    # approximation: per output element, MACs = kernel_elems / out_features
+    out_feat = kdims[-1]
+    macs = kelems / max(out_feat, 1)
+    fgc = re.search(r"feature_group_count=(\d+)", ins.raw)
+    if fgc:
+        pass  # grouped convs already reflected in kernel shape
+    return 2.0 * out_e * macs
+
+
+@dataclasses.dataclass
+class Costs:
+    dot_flops: float = 0.0
+    conv_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    # bytes excluding convert/copy instructions — XLA:CPU promotes bf16
+    # dots to f32 with explicit converts and inserts layout copies that a
+    # TPU lowering would not materialise; this is the TPU-estimate bound.
+    hbm_bytes_tpu_est: float = 0.0
+    # bytes attributable to blockwise-attention chunk tensors (result
+    # shape ending in the (Qc=512, Kc=1024) chunk signature) — the traffic
+    # the Pallas flash kernel keeps in VMEM on TPU. §Perf uses this for
+    # the kernel-substitution accounting.
+    attn_chunk_bytes: float = 0.0
+    collectives: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Costs", mult: float = 1.0):
+        self.dot_flops += other.dot_flops * mult
+        self.conv_flops += other.conv_flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.hbm_bytes_tpu_est += other.hbm_bytes_tpu_est * mult
+        self.attn_chunk_bytes += other.attn_chunk_bytes * mult
+        for k, v in other.collectives.items():
+            self.collectives[k] = self.collectives.get(k, 0.0) + v * mult
+
+    @property
+    def flops(self):
+        return self.dot_flops + self.conv_flops
+
+    @property
+    def collective_bytes(self):
+        return sum(self.collectives.values())
+
+
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+
+
+_TRANSPARENT = ("convert", "bitcast", "copy", "reshape")
+
+
+def _is_transparent_fusion(comps: Dict[str, Computation], ins: Instr) -> bool:
+    """Fusion whose body is only converts/bitcasts/copies — a pure dtype
+    normalization the CPU backend inserts (bf16 unsupported); a TPU
+    lowering consumes the source directly."""
+    if ins.opcode != "fusion":
+        return False
+    m = re.search(r"calls=%([\w.\-]+)", ins.raw)
+    callee = comps.get(m.group(1)) if m else None
+    if callee is None or not callee.instrs:
+        return False
+    return all(i.opcode in _TRANSPARENT + ("parameter",)
+               for i in callee.instrs)
+
+
+_DEQUANT_OPS = _TRANSPARENT + ("parameter", "multiply", "broadcast",
+                               "constant")
+
+
+def _is_dequant_fusion(comps: Dict[str, Computation], comp: Computation,
+                       ins: Instr) -> bool:
+    """convert(int)*scale fusions (weight dequantization): the Pallas
+    qmatmul kernel performs this in VMEM, so a TPU lowering never writes
+    the dequantized tensor to HBM. Признак: body is converts/multiplies/
+    broadcasts with at most ONE large operand (the packed weights)."""
+    if ins.opcode != "fusion":
+        return False
+    m = re.search(r"calls=%([\w.\-]+)", ins.raw)
+    callee = comps.get(m.group(1)) if m else None
+    if callee is None or not callee.instrs:
+        return False
+    if not all(i.opcode in _DEQUANT_OPS for i in callee.instrs):
+        return False
+    res_b, _ = _shape_bytes_elems(ins.shape)
+    large = 0
+    for op in ins.operands:
+        o = comp.by_name.get(op)
+        if o is not None and _shape_bytes_elems(o.shape)[0] > res_b / 4:
+            large += 1
+    return large <= 1
+
+
+def _passthrough_bytes(comps: Dict[str, Computation], comp: Computation,
+                       o: Instr) -> float:
+    """Effective bytes to read o's output on TPU when o fuses into its
+    consumer: the largest source operand's storage bytes."""
+    best = 0.0
+    for op in o.operands:
+        src = comp.by_name.get(op)
+        if src is not None:
+            best = max(best, _shape_bytes_elems(src.shape)[0])
+    return best
+
+
+def _unwrap_root(callee: Computation) -> Optional[Instr]:
+    """Root instruction, looking through convert/bitcast chains (XLA:CPU's
+    float-normalization wraps bf16 ops in converts that a TPU lowering
+    would not have)."""
+    root = next((i for i in callee.instrs if i.is_root),
+                callee.instrs[-1] if callee.instrs else None)
+    seen = 0
+    while root is not None and root.opcode in _TRANSPARENT and \
+            root.operands and seen < 8:
+        nxt = callee.by_name.get(root.operands[0])
+        if nxt is None:
+            break
+        root = nxt
+        seen += 1
+    return root
+
+
+def _slice_uses(callee: Computation, param: Instr):
+    """Transitive uses of a fusion parameter, looking through transparent
+    ops. Returns (uses, all_slice_like)."""
+    frontier = [param.name]
+    uses, ok = [], True
+    hops = 0
+    while frontier and hops < 64:
+        hops += 1
+        name = frontier.pop()
+        for u in callee.instrs:
+            if name in u.operands:
+                if u.opcode in _TRANSPARENT:
+                    frontier.append(u.name)
+                elif u.opcode in ("dynamic-slice", "slice",
+                                  "dynamic-update-slice"):
+                    uses.append((u, name))
+                else:
+                    ok = False
+    return uses, ok
+
+
+def _effective_operand_bytes(comps: Dict[str, Computation],
+                             comp: Computation, ins: Instr) -> Tuple[float, float]:
+    """(operand_bytes, result_bytes) with slice-awareness.
+
+    dynamic-slice reads only the sliced window; dynamic-update-slice
+    writes only the update region (XLA emits these in place). The same
+    holds when they are the body of a fusion: a fusion parameter consumed
+    ONLY by a dynamic-slice inside touches slice-sized bytes, and a fusion
+    rooted at dynamic-update-slice writes update-sized bytes. Without this
+    the KV-cache scan would count the full stacked cache once per layer.
+    """
+    res_bytes, _ = _shape_bytes_elems(ins.shape)
+    if ins.opcode in ("dynamic-slice", "slice"):
+        return res_bytes, res_bytes           # read the window, write result
+    if ins.opcode == "dynamic-update-slice":
+        upd = comp.by_name.get(ins.operands[1]) if len(ins.operands) > 1 else None
+        ub = _shape_bytes_elems(upd.shape)[0] if upd else res_bytes
+        return ub, ub                          # in-place: read+write update
+    op_bytes = 0.0
+    callee = None
+    if ins.opcode == "fusion":
+        m = re.search(r"calls=%([\w.\-]+)", ins.raw)
+        callee = comps.get(m.group(1)) if m else None
+    # fusion rooted at DUS (possibly behind converts) writes only the
+    # update region
+    if callee is not None:
+        root = _unwrap_root(callee)
+        if root is not None and root.opcode == "dynamic-update-slice":
+            upd = callee.by_name.get(root.operands[1]) \
+                if len(root.operands) > 1 else None
+            if upd is not None:
+                res_bytes = min(res_bytes, _shape_bytes_elems(upd.shape)[0])
+    for pi, op in enumerate(ins.operands):
+        o = comp.by_name.get(op)
+        if o is None:
+            continue
+        b = _shape_bytes_elems(o.shape)[0]
+        # converts / dequant multiplies fuse into consumers on TPU: charge
+        # the source storage bytes (e.g. int8 weights read at 1 B/elem,
+        # not the f32 they dequantize into). One-hop unwrap.
+        if o.opcode in _TRANSPARENT and o.operands:
+            src = comp.by_name.get(o.operands[0])
+            if src is not None:
+                b = min(b, _shape_bytes_elems(src.shape)[0])
+        elif (_is_transparent_fusion(comps, o)
+              or _is_dequant_fusion(comps, comp, o)) and o.operands:
+            b = min(b, max(_passthrough_bytes(comps, comp, o), 1.0))
+        if callee is not None:
+            # does parameter pi feed only slice-type ops inside the fusion
+            # (transitively through converts/bitcasts)?
+            param = None
+            for ci in callee.instrs:
+                if ci.opcode == "parameter" and f"parameter({pi})" in ci.raw:
+                    param = ci
+                    break
+            if param is not None:
+                uses, ok = _slice_uses(callee, param)
+                if uses and ok:
+                    slice_b = 0.0
+                    for u, via in uses:
+                        if u.opcode == "dynamic-update-slice" and \
+                                u.operands and u.operands[0] == via:
+                            upd = callee.by_name.get(u.operands[1]) \
+                                if len(u.operands) > 1 else None
+                            slice_b += _shape_bytes_elems(upd.shape)[0] \
+                                if upd else 0.0
+                        else:
+                            slice_b += _shape_bytes_elems(u.shape)[0]
+                    b = min(b, slice_b)
+        op_bytes += b
+    return op_bytes, res_bytes
+
+
+def _analyze_comp(comps: Dict[str, Computation], cname: str,
+                  memo: Dict[str, Costs], top_level: bool = True) -> Costs:
+    if cname in memo:
+        return memo[cname]
+    comp = comps.get(cname)
+    c = Costs()
+    if comp is None:
+        memo[cname] = c
+        return c
+    memo[cname] = c  # placeholder guards recursion
+    for ins in comp.instrs:
+        op_bytes, res_bytes = _effective_operand_bytes(comps, comp, ins)
+        if ins.opcode == "while":
+            trip = 1
+            mt = _TRIP_RE.search(ins.raw)
+            if mt:
+                trip = int(mt.group(1))
+            body = re.search(r"body=%([\w.\-]+)", ins.raw)
+            if body:
+                sub = _analyze_comp(comps, body.group(1), {}, top_level=True)
+                c.add(sub, trip)
+            continue
+        if ins.opcode in ("conditional",):
+            for called in re.findall(r"(?:branch_computations=\{|true_computation=%|false_computation=%)([\w.\-,% ]+)",
+                                     ins.raw):
+                for b in re.findall(r"[\w.\-]+", called):
+                    c.add(_analyze_comp(comps, b, {}, top_level=True), 1.0)
+            continue
+        if ins.opcode == "fusion":
+            called = re.search(r"calls=%([\w.\-]+)", ins.raw)
+            if called:
+                sub = _analyze_comp(comps, called.group(1), memo,
+                                    top_level=False)
+                # only flops from inside fusions; bytes counted at this level
+                fc = Costs(dot_flops=sub.dot_flops, conv_flops=sub.conv_flops,
+                           collectives=dict(sub.collectives))
+                c.add(fc, 1.0)
+            if top_level:
+                c.hbm_bytes += res_bytes + op_bytes
+                if not (_is_transparent_fusion(comps, ins)
+                        or _is_dequant_fusion(comps, comp, ins)):
+                    c.hbm_bytes_tpu_est += res_bytes + op_bytes
+                    dims = _dims_of(ins.shape)
+                    if len(dims) >= 2 and tuple(dims[-2:]) in (
+                            (512, 1024), (1024, 512)):
+                        c.attn_chunk_bytes += res_bytes + op_bytes
+            continue
+        if ins.opcode == "dot":
+            c.dot_flops += 2.0 * _shape_bytes_elems(ins.shape)[1] * \
+                _contraction_size(comp, ins)
+        elif ins.opcode == "convolution":
+            c.conv_flops += _conv_flops(comp, ins)
+        elif ins.opcode.startswith(COLLECTIVE_KINDS):
+            kind = next(k for k in COLLECTIVE_KINDS if ins.opcode.startswith(k))
+            moved = max(res_bytes, op_bytes)
+            c.collectives[kind] = c.collectives.get(kind, 0.0) + moved
+        elif ins.opcode in ("call", "custom-call"):
+            called = re.search(r"(?:calls|to_apply)=%([\w.\-]+)", ins.raw)
+            if called:
+                c.add(_analyze_comp(comps, called.group(1), {},
+                                    top_level=True), 1.0)
+        if top_level and ins.opcode not in ("parameter", "constant",
+                                            "get-tuple-element", "tuple",
+                                            "bitcast"):
+            c.hbm_bytes += res_bytes + op_bytes
+            if ins.opcode not in ("convert", "copy", "transpose"):
+                c.hbm_bytes_tpu_est += res_bytes + op_bytes
+                dims = _dims_of(ins.shape)
+                if len(dims) >= 2 and tuple(dims[-2:]) in ((512, 1024),
+                                                           (1024, 512)):
+                    c.attn_chunk_bytes += res_bytes + op_bytes
+    return c
+
+
+def analyze_hlo_text(text: str) -> Dict[str, float]:
+    comps = parse_hlo(text)
+    entry = "__entry__" if "__entry__" in comps else next(iter(comps))
+    c = _analyze_comp(comps, entry, {}, top_level=True)
+    return {
+        "dot_flops": c.dot_flops,
+        "conv_flops": c.conv_flops,
+        "flops": c.flops,
+        "hbm_bytes": c.hbm_bytes,
+        "hbm_bytes_tpu_est": c.hbm_bytes_tpu_est,
+        "attn_chunk_bytes": c.attn_chunk_bytes,
+        "collective_bytes": c.collective_bytes,
+        **{f"coll_{k}": v for k, v in sorted(c.collectives.items())},
+    }

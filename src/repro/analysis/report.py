@@ -1,0 +1,79 @@
+"""Render EXPERIMENTS.md tables from the dry-run cell records.
+
+Usage: PYTHONPATH=src python -m repro.analysis.report > /tmp/tables.md
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/2**30:.1f}"
+
+
+def load():
+    cells = {}
+    for f in sorted(RESULTS.glob("*.json")):
+        r = json.loads(f.read_text())
+        cells[f.stem] = r
+    return cells
+
+
+def baseline_table(cells):
+    print("| arch | shape | mesh | compute s | memory s | collective s |"
+          " bound | bytes/dev GiB | useful-flops | compile s |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for key, r in cells.items():
+        if key.count("__") > 2:
+            continue                      # variants listed separately
+        arch, shape, mesh = key.split("__")
+        if "skipped" in r:
+            print(f"| {arch} | {shape} | {mesh} | — | — | — | "
+                  f"SKIP (full-attn) | — | — | — |")
+            continue
+        t = r["roofline"]
+        uf = r.get("useful_flops_ratio")
+        ufs = f"{uf:.3f}" if uf is not None else "-"
+        print(f"| {arch} | {shape} | {mesh} | {t['compute_s']:.3f} | "
+              f"{t['memory_s']:.3f} | {t['collective_s']:.3f} | "
+              f"{t['bottleneck'].replace('_s','')} | "
+              f"{fmt_bytes(r.get('bytes_per_device'))} | {ufs} | "
+              f"{r.get('compile_s','-')} |")
+
+
+def variant_table(cells):
+    print("| cell | variant | compute s | memory s | collective s |"
+          " args-bytes s | bound |")
+    print("|---|---|---|---|---|---|---|")
+    for key, r in cells.items():
+        if "skipped" in r:
+            continue
+        parts = key.split("__")
+        variant = parts[3] if len(parts) > 3 else "baseline"
+        base = "__".join(parts[:3])
+        if not any((k.count("__") > 2 and "__".join(
+                k.split("__")[:3]) == base) for k in cells):
+            continue
+        t = r["roofline"]
+        print(f"| {base} | {variant} | {t['compute_s']:.3f} | "
+              f"{t['memory_s']:.3f} | {t['collective_s']:.3f} | "
+              f"{r.get('args_memory_s', 0):.4f} | "
+              f"{t['bottleneck'].replace('_s','')} |")
+
+
+def main():
+    cells = load()
+    print("## Baseline roofline table (single-pod 16x16 + multi-pod "
+          "2x16x16)\n")
+    baseline_table(cells)
+    print("\n## Hillclimb variants\n")
+    variant_table(cells)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Roofline-term computation from dry-run artifacts.
+
+TPU v5e constants (per chip):
+- 197 TFLOP/s bf16 peak (MXU); int8 ~2x -> 394 TFLOP/s
+- 819 GB/s HBM bandwidth
+- ~50 GB/s/link ICI; we charge collectives against ONE link per chip
+  (conservative lower-bound bandwidth; a bidirectional ring on one torus
+  axis can reach ~2x). Cross-pod ('pod' axis) traffic rides DCI, charged at
+  the same 50 GB/s for simplicity and noted in EXPERIMENTS.md.
+
+All inputs are PER-DEVICE quantities (the HLO analyzer parses post-SPMD
+per-partition shapes).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+PEAK_BF16 = 197e12
+PEAK_INT8 = 394e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+HBM_PER_CHIP = 16 * 1024 ** 3     # v5e 16 GB
+
+
+def roofline_terms(hlo: Dict[str, float], *, int8_frac: float = 0.0
+                   ) -> Dict[str, float]:
+    """hlo: output of analyze_hlo_text. int8_frac: fraction of dot flops
+    executing on the int8 MXU path (quantized serving)."""
+    flops = hlo["flops"]
+    eff_peak = PEAK_BF16 * (1 - int8_frac) + PEAK_INT8 * int8_frac
+    compute_s = flops / eff_peak
+    # prefer the TPU-estimate bytes (CPU lowering inserts converts/copies
+    # that would not exist on the TPU target); raw bytes kept in the record.
+    memory_s = hlo.get("hbm_bytes_tpu_est", hlo["hbm_bytes"]) / HBM_BW
+    coll_s = hlo["collective_bytes"] / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    total = sum(terms.values())
+    return {
+        **terms,
+        "bottleneck": dom,
+        "step_time_lower_bound_s": bound,
+        "roofline_fraction": bound / total if total else 0.0,
+    }
+
+
+def model_flops(n_active_params: int, tokens: int, train: bool) -> float:
+    """The 6ND / 2ND convention (fwd+bwd vs fwd-only)."""
+    return (6.0 if train else 2.0) * n_active_params * tokens

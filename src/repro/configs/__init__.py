@@ -1,0 +1,5 @@
+"""One module per selectable architecture (``--arch <id>``).
+
+Assigned pool (10) + the paper's own basecaller family (3).
+Import side-effect registers into :mod:`repro.config`.
+"""

@@ -1,0 +1,10 @@
+"""RUBICON core: the paper's contribution as composable JAX modules.
+
+- ``core.quant``    — mixed-precision quantization (QAT fake-quant, packed
+                      int serving, per-layer <weight, activation> policies).
+- ``core.qabas``    — quantization-aware differentiable NAS (supernet,
+                      binarized path sampling, TPU latency estimator).
+- ``core.skipclip`` — gradual skip-connection removal under KD.
+- ``core.distill``  — knowledge-distillation losses.
+- ``core.pruning``  — one-shot L1 unstructured / structured pruning.
+"""

@@ -1,0 +1,27 @@
+"""Knowledge-distillation losses (paper: KL divergence with temperature).
+
+Used by SkipClip (teacher = Bonito with skips, student = QABAS model) and
+by the generic LM distillation path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kd_loss(student_logits: jax.Array, teacher_logits: jax.Array,
+            tau: float = 2.0) -> jax.Array:
+    """KL(teacher || student) over the last axis, with temperature
+    softening, scaled by tau^2 (standard Hinton correction so gradient
+    magnitude is independent of tau)."""
+    t = jax.nn.log_softmax(teacher_logits.astype(jnp.float32) / tau, axis=-1)
+    s = jax.nn.log_softmax(student_logits.astype(jnp.float32) / tau, axis=-1)
+    kl = jnp.sum(jnp.exp(t) * (t - s), axis=-1)
+    return jnp.mean(kl) * tau * tau
+
+
+def skipclip_loss(student_loss: jax.Array, distill: jax.Array,
+                  alpha: float = 0.9) -> jax.Array:
+    """Paper Eq. 2 (sign corrected: both terms are minimised losses):
+    L = alpha * L_S + (1 - alpha) * L_D."""
+    return alpha * student_loss + (1.0 - alpha) * distill

@@ -1,0 +1,81 @@
+"""One-shot L1 pruning: unstructured (element) and structured (channel).
+
+Paper Figs. 6 & 14: prune at a target sparsity, then fine-tune to
+convergence. Unstructured gives the best compression but irregular
+sparsity (no TPU win); structured removes whole output channels —
+dense math stays dense, so it maps directly to smaller MXU tiles.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _prunable(path: str, leaf) -> bool:
+    return hasattr(leaf, "ndim") and leaf.ndim >= 2 and \
+        any(k in path for k in ("dw", "pw", "kernel", "wi", "wg", "wo"))
+
+
+def _paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [("/".join(str(getattr(k, "key", k)) for k in p), l)
+            for p, l in flat]
+
+
+def unstructured_mask(params, sparsity: float):
+    """Global magnitude threshold over prunable weights -> 0/1 mask tree."""
+    mags = [jnp.abs(l).reshape(-1) for p, l in _paths(params)
+            if _prunable(p, l)]
+    allw = jnp.concatenate(mags)
+    k = int(sparsity * allw.size)
+    thresh = jnp.sort(allw)[k - 1] if k > 0 else -jnp.inf
+
+    def one(path, leaf):
+        if _prunable(path, leaf):
+            return (jnp.abs(leaf) > thresh).astype(leaf.dtype)
+        return jnp.ones_like(leaf)
+
+    flat = jax.tree_util.tree_flatten_with_path(params)
+    leaves = [one("/".join(str(getattr(k, "key", k)) for k in p), l)
+              for p, l in flat[0]]
+    return jax.tree_util.tree_unflatten(flat[1], leaves)
+
+
+def structured_channel_mask(params, sparsity: float):
+    """Per-layer: zero the lowest-L1 output channels (last axis)."""
+    def one(path, leaf):
+        if not _prunable(path, leaf):
+            return jnp.ones_like(leaf)
+        norms = jnp.sum(jnp.abs(leaf), axis=tuple(range(leaf.ndim - 1)))
+        k = int(sparsity * norms.size)
+        if k == 0:
+            return jnp.ones_like(leaf)
+        thresh = jnp.sort(norms)[k - 1]
+        keep = (norms > thresh).astype(leaf.dtype)
+        return jnp.broadcast_to(keep, leaf.shape)
+
+    flat = jax.tree_util.tree_flatten_with_path(params)
+    leaves = [one("/".join(str(getattr(k, "key", k)) for k in p), l)
+              for p, l in flat[0]]
+    return jax.tree_util.tree_unflatten(flat[1], leaves)
+
+
+def apply_mask(params, mask):
+    return jax.tree.map(lambda p, m: p * m, params, mask)
+
+
+def sparsity_of(mask) -> float:
+    tot = sum(m.size for m in jax.tree.leaves(mask))
+    nz = sum(float(jnp.sum(m != 0)) for m in jax.tree.leaves(mask))
+    return 1.0 - nz / tot
+
+
+def model_size_bytes(params, mask=None, bits: int = 32) -> float:
+    """Size honouring pruning (nonzero weights only) and quantization."""
+    if mask is None:
+        n = sum(l.size for l in jax.tree.leaves(params))
+    else:
+        n = sum(float(jnp.sum(m != 0)) for m in jax.tree.leaves(mask))
+    return n * bits / 8.0

@@ -1,0 +1,3 @@
+from repro.core.qabas.space import SearchSpace, DEFAULT_SPACE
+from repro.core.qabas.latency import latency_table, expected_latency
+from repro.core.qabas.search import QABASConfig, run_search, derive_config

@@ -1,0 +1,127 @@
+"""QABAS bilevel search loop.
+
+Alternates:
+  1. weight step  — minimise CTC loss on D_train at sampled paths;
+  2. arch step    — minimise CTC(D_eval) + lambda * (E[lat] - L_tar)/L_tar
+                    wrt alpha/beta (paper's L_QABAS, lambda = 0.6).
+
+``derive_config`` takes the argmax op / quant per block and emits a
+:class:`ModelConfig` of the basecaller family — the RUBICALL candidate
+that is then retrained to convergence (with SkipClip/KD).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, QuantPolicy
+from repro.core.qabas.latency import expected_latency, latency_table
+from repro.core.qabas.space import SearchSpace
+from repro.core.qabas.supernet import (init_arch_params, init_supernet,
+                                       sample_paths, supernet_forward)
+from repro.models.basecaller.ctc import ctc_loss
+from repro.training.optimizer import (AdamWConfig, adamw_update,
+                                      init_opt_state)
+
+
+@dataclasses.dataclass(frozen=True)
+class QABASConfig:
+    lam: float = 0.6              # paper's lambda
+    target_latency: float = 5e-4  # L_tar (s) on the v5e estimator
+    lr_w: float = 2e-3            # paper's AdamW settings
+    lr_arch: float = 3e-3
+    channels: int = 64
+    chunk: int = 512
+    steps: int = 40
+    batch: int = 8
+
+
+def run_search(rng, space: SearchSpace, qc: QABASConfig,
+               data_iter: Iterator[Dict]) -> Tuple[Dict, Dict, Dict]:
+    """Returns (supernet_params, arch_params, history)."""
+    r_init, r_loop = jax.random.split(jax.random.key(0) if rng is None
+                                      else rng)
+    params = init_supernet(r_init, space, channels=qc.channels)
+    arch = init_arch_params(space)
+    opt_w_cfg = AdamWConfig(lr=qc.lr_w, total_steps=qc.steps, warmup_steps=0,
+                            schedule="const")
+    opt_a_cfg = AdamWConfig(lr=qc.lr_arch, total_steps=qc.steps,
+                            warmup_steps=0, schedule="const",
+                            weight_decay=0.0)
+    opt_w = init_opt_state(params, opt_w_cfg)
+    opt_a = init_opt_state(arch, opt_a_cfg)
+    table = latency_table(space, chunk=qc.chunk, channels=qc.channels)
+
+    def ctc_of(params_, arch_, batch, op_idx, q_idx):
+        logp = supernet_forward(params_, arch_, batch["signal"],
+                                op_idx, q_idx, space)
+        return ctc_loss(logp, batch["labels"], batch["label_lengths"])
+
+    @jax.jit
+    def w_step(params_, opt_w_, arch_, batch, key):
+        op_idx, q_idx = sample_paths(key, arch_, space)
+        loss, g = jax.value_and_grad(ctc_of)(params_, arch_, batch,
+                                             op_idx, q_idx)
+        params_, opt_w_, _ = adamw_update(params_, g, opt_w_, opt_w_cfg)
+        return params_, opt_w_, loss
+
+    def arch_obj(arch_, params_, batch, op_idx, q_idx):
+        l_train = ctc_of(params_, arch_, batch, op_idx, q_idx)
+        a_p = jax.nn.softmax(arch_["alpha"], axis=-1)
+        b_p = jax.nn.softmax(arch_["beta"], axis=-1)
+        lat = expected_latency(a_p, b_p, table)
+        l_reg = (lat - qc.target_latency) / qc.target_latency
+        return l_train + qc.lam * l_reg, (l_train, lat)
+
+    @jax.jit
+    def a_step(arch_, opt_a_, params_, batch, key):
+        op_idx, q_idx = sample_paths(key, arch_, space)
+        (loss, (lt, lat)), g = jax.value_and_grad(
+            arch_obj, has_aux=True)(arch_, params_, batch, op_idx, q_idx)
+        arch_, opt_a_, _ = adamw_update(arch_, g, opt_a_, opt_a_cfg)
+        return arch_, opt_a_, loss, lat
+
+    hist = {"w_loss": [], "a_loss": [], "latency": []}
+    for step in range(qc.steps):
+        key = jax.random.fold_in(r_loop, step)
+        batch = next(data_iter)
+        params, opt_w, lw = w_step(params, opt_w, arch, batch, key)
+        ev = next(data_iter)
+        arch, opt_a, la, lat = a_step(arch, opt_a, params, ev,
+                                      jax.random.fold_in(key, 1))
+        hist["w_loss"].append(float(lw))
+        hist["a_loss"].append(float(la))
+        hist["latency"].append(float(lat))
+    return params, arch, hist
+
+
+def derive_config(arch: Dict, space: SearchSpace, *, channels: int,
+                  name: str = "qabas-derived") -> ModelConfig:
+    """argmax over alpha/beta -> concrete basecaller ModelConfig."""
+    ops = jnp.argmax(arch["alpha"], axis=-1)
+    quants = jnp.argmax(arch["beta"], axis=-1)
+    kernels, overrides = [], []
+    b_out = 0
+    for b in range(space.n_blocks):
+        oi = int(ops[b])
+        if space.include_identity and oi == len(space.kernel_options):
+            continue      # identity: layer removed
+        kernels.append(space.kernel_options[oi])
+        overrides.append((f"block{b_out:02d}", tuple(
+            int(v) for v in space.quant_options[int(quants[b])])))
+        b_out += 1
+    n = len(kernels)
+    if n == 0:            # degenerate search — keep one block
+        kernels, overrides, n = [space.kernel_options[0]], \
+            [("block00", space.quant_options[0])], 1
+    return ModelConfig(
+        name=name, family="basecaller", n_layers=n, d_model=channels,
+        n_blocks=n, channels=(channels,) * n, kernel_sizes=tuple(kernels),
+        strides=(3,) + (1,) * (n - 1), repeats=(1,) * n, use_skips=False,
+        n_bases=5, vocab_size=5,
+        quant=QuantPolicy(weight_bits=8, act_bits=8,
+                          overrides=tuple(overrides)),
+        source="QABAS search output")

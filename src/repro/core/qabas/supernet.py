@@ -1,0 +1,119 @@
+"""QABAS over-parameterised supernet with ProxylessNAS-style binarized
+path sampling.
+
+Every block holds weights for ALL candidate ops (weight sharing). A step
+samples TWO candidate ops and TWO quant choices per block (ProxylessNAS
+memory trick), computes only those paths (``lax.switch``), and mixes them
+with renormalised architecture probabilities — gradients flow to the
+sampled entries of alpha/beta through the mixture weights.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qabas.space import SearchSpace
+from repro.core.quant.fake_quant import fake_quant
+from repro.models.basecaller.blocks import conv1d
+from repro.models.lm.common import truncated_normal_init
+
+Params = Dict
+
+
+def init_supernet(rng, space: SearchSpace, *, channels: int,
+                  n_bases: int = 5) -> Params:
+    keys = jax.random.split(rng, space.n_blocks + 2)
+    C = channels
+    blocks = []
+    for b in range(space.n_blocks):
+        ks = jax.random.split(keys[b], len(space.kernel_options) + 1)
+        ops = {}
+        for i, k in enumerate(space.kernel_options):
+            ops[f"op{i}_k{k}"] = {
+                "dw": truncated_normal_init(ks[i], (k, 1, C), stddev=0.2),
+                "pw": truncated_normal_init(ks[-1], (1, C, C)),
+            }
+        ops["gamma"] = jnp.ones((C,), jnp.float32)   # light norm per block
+        blocks.append(ops)
+    return {
+        "stem": truncated_normal_init(keys[-2], (9, 1, C), stddev=0.2),
+        "blocks": blocks,
+        "head": truncated_normal_init(keys[-1], (1, C, n_bases)),
+    }
+
+
+def init_arch_params(space: SearchSpace) -> Params:
+    return {"alpha": jnp.zeros((space.n_blocks, space.n_ops)),
+            "beta": jnp.zeros((space.n_blocks, space.n_quant))}
+
+
+def sample_paths(rng, arch: Params, space: SearchSpace
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Two ops + two quant choices per block, Gumbel top-2 by alpha/beta."""
+    r1, r2 = jax.random.split(rng)
+    g_a = jax.random.gumbel(r1, arch["alpha"].shape)
+    g_b = jax.random.gumbel(r2, arch["beta"].shape)
+    op_idx = jnp.argsort(-(arch["alpha"] + g_a), axis=-1)[:, :2]
+    q_idx = jnp.argsort(-(arch["beta"] + g_b), axis=-1)[:, :2]
+    return op_idx, q_idx
+
+
+def _apply_op(ops: Params, x: jax.Array, op_index, quant_bits,
+              space: SearchSpace) -> jax.Array:
+    """lax.switch over candidate ops; identity is the last branch."""
+    C = x.shape[-1]
+    wb, ab = quant_bits
+
+    def op_branch(i):
+        k = space.kernel_options[i]
+        p = ops[f"op{i}_k{k}"]
+
+        def run(xx):
+            dw = fake_quant(p["dw"], wb, axis=2)
+            pw = fake_quant(p["pw"], wb, axis=2)
+            xx = fake_quant(xx, ab)
+            h = conv1d(xx, dw.astype(xx.dtype), groups=C)
+            h = conv1d(h, pw.astype(xx.dtype))
+            # parameter-free norm keeps supernet activations bounded
+            h = h * jax.lax.rsqrt(jnp.mean(jnp.square(h), axis=(1, 2),
+                                           keepdims=True) + 1e-5)
+            return jax.nn.relu(h * ops["gamma"].astype(xx.dtype))
+        return run
+
+    branches = [op_branch(i) for i in range(len(space.kernel_options))]
+    if space.include_identity:
+        branches.append(lambda xx: xx)
+    return jax.lax.switch(op_index, branches, x)
+
+
+def supernet_forward(params: Params, arch: Params, x: jax.Array,
+                     op_idx: jax.Array, q_idx: jax.Array,
+                     space: SearchSpace) -> jax.Array:
+    """x: (B, S, 1) -> CTC log-probs. op_idx/q_idx: (n_blocks, 2)."""
+    h = conv1d(x, params["stem"], stride=3)
+    h = jax.nn.relu(h)
+    for b, ops in enumerate(params["blocks"]):
+        # renormalised two-path mixture weights (differentiable wrt arch)
+        a_pair = jnp.take(arch["alpha"][b], op_idx[b])
+        w_a = jax.nn.softmax(a_pair)
+        b_pair = jnp.take(arch["beta"][b], q_idx[b])
+        w_b = jax.nn.softmax(b_pair)
+        y = 0.0
+        for ii in range(2):
+            for jj in range(2):
+                bits = tuple(space.quant_options[0])  # static default
+                # static switch over quant options for correct bits
+                def quant_branch(qi):
+                    def run(xx):
+                        return _apply_op(ops, xx, op_idx[b][ii],
+                                         space.quant_options[qi], space)
+                    return run
+                yq = jax.lax.switch(
+                    q_idx[b][jj],
+                    [quant_branch(qi) for qi in range(space.n_quant)], h)
+                y = y + w_a[ii] * w_b[jj] * yq
+        h = y
+    logits = conv1d(h, params["head"])
+    return jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)

@@ -1,0 +1,4 @@
+from repro.core.quant.fake_quant import fake_quant, quant_dequant_params
+from repro.core.quant.policy import (PackedTensor, dequantize, pack_int4,
+                                     quantize_tensor, quantize_tree,
+                                     tree_size_bytes, unpack_int4)

@@ -1,0 +1,51 @@
+"""Symmetric fake-quantization for QAT (straight-through estimator).
+
+This is the in-graph form of the paper's mixed-precision execution: during
+training / search, values are rounded to the b-bit grid but kept in float;
+gradients flow through unchanged (STE). Serving converts to true packed
+integers via :mod:`repro.core.quant.policy`.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _scales(x: jax.Array, bits: int, axis: Optional[int]) -> jax.Array:
+    qmax = 2.0 ** (bits - 1) - 1.0
+    if axis is None:
+        amax = jnp.max(jnp.abs(x))
+    else:
+        red = tuple(i for i in range(x.ndim) if i != axis)
+        amax = jnp.max(jnp.abs(x), axis=red, keepdims=True)
+    return jnp.maximum(amax, 1e-8) / qmax
+
+
+def fake_quant(x: jax.Array, bits: int, axis: Optional[int] = None) -> jax.Array:
+    """Round x to a symmetric b-bit grid, straight-through gradient
+    (``x + sg(q(x) - x)`` — exact pass-through everywhere, including the
+    clip boundary; scale is an observer statistic, not a grad path).
+
+    ``axis`` selects per-channel scales (reduce over all other axes);
+    ``None`` = per-tensor.
+    """
+    if bits <= 0 or bits >= 32:
+        return x
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    s = jax.lax.stop_gradient(_scales(xf, bits, axis))
+    qmax = 2.0 ** (bits - 1) - 1.0
+    q = jnp.clip(jnp.round(xf / s), -qmax - 1, qmax) * s
+    return (xf + jax.lax.stop_gradient(q - xf)).astype(dt)
+
+
+def quant_dequant_params(params, bits: int, per_channel: bool = True):
+    """Fake-quant every >=2D leaf of a param tree (static quantization —
+    same precision everywhere; used for the paper's Fig. 7/8 sweep)."""
+    def one(x):
+        if x.ndim >= 2:
+            return fake_quant(x, bits, axis=x.ndim - 1 if per_channel else None)
+        return x
+    return jax.tree.map(one, params)

@@ -1,0 +1,99 @@
+"""Flash attention (causal, GQA-aware) Pallas kernel — prefill hot-spot.
+
+Grid (B*H, Tq, Tk) with the KV axis innermost; online-softmax state
+(m, l, acc) lives in VMEM scratch across the sequential KV steps. Causal
+block skipping: KV blocks strictly above the diagonal write nothing and
+early-exit via pl.when — on TPU these grid steps cost only the (tiny)
+control overhead, which is how the kernel achieves the ~2x win over the
+masked-dense XLA fallback that the roofline analysis charges.
+
+Block shapes default to (128, 128) — MXU-aligned, and the working set
+(q, k, v tiles + fp32 scratch) stays well under the 128 MB VMEM budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+INTERPRET = jax.default_backend() == "cpu"
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, bq: int, bk: int,
+                  nk: int):
+    iq, ik = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _body():
+        q = q_ref[0].astype(jnp.float32)              # (bq, d)
+        k = k_ref[0].astype(jnp.float32)              # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal:
+        # skip blocks strictly above the diagonal
+        pl.when(ik * bk <= iq * bq + bq - 1)(_body)
+    else:
+        _body()
+
+    @pl.when(ik == nk - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_p(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, bq: int = 128, bk: int = 128,
+                      interpret: bool | None = None) -> jax.Array:
+    """q: (BH, Sq, d); k, v: (BH, Sk, d) — heads pre-folded into batch
+    (GQA repeat handled by ops.py without materialisation via indexing).
+    Returns (BH, Sq, d)."""
+    BH, Sq, d = q.shape
+    Sk = k.shape[1]
+    bq, bk = min(bq, Sq), min(bk, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0
+    nq, nk = Sq // bq, Sk // bk
+    interpret = INTERPRET if interpret is None else interpret
+    kern = functools.partial(_flash_kernel, scale=d ** -0.5, causal=causal,
+                             bq=bq, bk=bk, nk=nk)
+    return pl.pallas_call(
+        kern,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

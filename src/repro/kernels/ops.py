@@ -1,0 +1,85 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) and False on TPU;
+the wrappers also own layout glue (GQA head folding, halo padding,
+PackedTensor unwrapping) so models call a clean API.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant.policy import PackedTensor
+from repro.kernels.flash_attention import flash_attention_p
+from repro.kernels.qconv1d import qconv1d_block_p
+from repro.kernels.qmatmul import qmatmul_p
+from repro.kernels.ssd_scan import ssd_scan_p
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def qmatmul(x: jax.Array, w, scale=None, *, bits: int = 8,
+            interpret=None) -> jax.Array:
+    """x: (..., K) @ quantized w -> (..., N). Accepts a PackedTensor or a
+    raw (int8 data, scale) pair."""
+    if isinstance(w, PackedTensor):
+        bits, scale, w = w.bits, w.scale, w.data
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    scale2 = jnp.asarray(scale, jnp.float32).reshape(1, -1)
+    out = qmatmul_p(x2, w, scale2, bits=bits, interpret=interpret)
+    return out.reshape(lead + (out.shape[-1],))
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, interpret=None) -> jax.Array:
+    """q: (B, Sq, H, d); k/v: (B, Sk, Hkv, d) — GQA folded into batch rows
+    so each kernel row sees one (head, kv-head) pair without repeat."""
+    B, Sq, H, d = q.shape
+    Hkv = k.shape[2]
+    group = H // Hkv
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, d)
+    # kv row for query head h is h // group
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), group, axis=1).reshape(
+        B * H, k.shape[1], d)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), group, axis=1).reshape(
+        B * H, v.shape[1], d)
+    o = flash_attention_p(qf, kf, vf, causal=causal, interpret=interpret)
+    return o.reshape(B, H, Sq, d).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "interpret"))
+def qconv1d_block(x: jax.Array, dw, pw, gamma, beta, *, relu: bool = True,
+                  interpret=None) -> jax.Array:
+    """x: (B, T, C); dw/pw: PackedTensor (int8). Fused RUBICALL block."""
+    k = dw.orig_shape[0]
+    pad = (k - 1) // 2
+    xp = jnp.pad(x, ((0, 0), (pad, k - 1 - pad), (0, 0)))
+    return qconv1d_block_p(
+        xp, dw.data.reshape(k, -1), pw.data,
+        jnp.asarray(dw.scale, jnp.float32).reshape(1, -1),
+        jnp.asarray(pw.scale, jnp.float32).reshape(1, -1),
+        gamma.reshape(1, -1).astype(jnp.float32),
+        beta.reshape(1, -1).astype(jnp.float32),
+        relu=relu, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunk_scan(x, dt, A, Bm, Cm, D, *, chunk: int = 256,
+                   interpret=None):
+    """x: (B, S, nh, hd); dt: (B, S, nh); A/D: (nh,); Bm/Cm: (B, S, N).
+
+    Folds (batch, head) into kernel rows; B/C shared across heads."""
+    B, S, nh, hd = x.shape
+    N = Bm.shape[-1]
+    xr = x.transpose(0, 2, 1, 3).reshape(B * nh, S, hd)
+    dtr = dt.transpose(0, 2, 1).reshape(B * nh, S)
+    Ar = jnp.tile(A, B)
+    Dr = jnp.tile(D, B)
+    Br = jnp.repeat(Bm[:, None], nh, axis=1).reshape(B * nh, S, N)
+    Cr = jnp.repeat(Cm[:, None], nh, axis=1).reshape(B * nh, S, N)
+    y = ssd_scan_p(xr, dtr, Ar, Br, Cr, Dr, chunk=chunk,
+                   interpret=interpret)
+    return y.reshape(B, nh, S, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def qmatmul_ref(x, w_q, scale, *, bits: int = 8):
+    """x (M,K) @ dequant(w_q) (K,N) * scale."""
+    if bits == 4:
+        from repro.core.quant.policy import unpack_int4
+        w = unpack_int4(w_q)
+    else:
+        w = w_q
+    wf = w.astype(jnp.float32) * scale
+    return jnp.dot(x.astype(jnp.float32), wf).astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q/k/v: (BH, S, d) — dense softmax attention."""
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * d ** -0.5
+    if causal:
+        Sq, Sk = q.shape[1], k.shape[1]
+        mask = jnp.arange(Sk)[None, :] <= jnp.arange(Sq)[:, None]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def qconv1d_block_ref(x, dw_q, pw_q, dw_scale, pw_scale, gamma, beta, *,
+                      relu: bool = True):
+    """x: (B, T + k - 1, C) pre-padded; int8 weights + scales."""
+    k, C = dw_q.shape
+    T = x.shape[1] - (k - 1)
+    dw = dw_q.astype(jnp.float32) * dw_scale
+    pw = pw_q.astype(jnp.float32) * pw_scale
+    xf = x.astype(jnp.float32)
+    acc = sum(xf[:, i:i + T] * dw[i] for i in range(k))
+    y = jnp.einsum("btc,cd->btd", acc, pw)
+    y = y * gamma + beta
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y.astype(x.dtype)
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm, D):
+    """Sequential (exact) SSD recurrence. x: (BH,S,hd); dt: (BH,S);
+    A/D: (BH,); Bm/Cm: (BH,S,N)."""
+    BH, S, hd = x.shape
+    N = Bm.shape[-1]
+
+    def per_bh(xb, dtb, Ab, Bb, Cb, Db):
+        def step(h, inp):
+            xt, dtt, bt, ct = inp
+            decay = jnp.exp(dtt * Ab)
+            h = decay * h + dtt * jnp.outer(xt, bt)          # (hd, N)
+            y = h @ ct + Db * xt
+            return h, y
+        h0 = jnp.zeros((hd, N), jnp.float32)
+        _, ys = jax.lax.scan(step, h0, (xb.astype(jnp.float32),
+                                        dtb.astype(jnp.float32),
+                                        Bb.astype(jnp.float32),
+                                        Cb.astype(jnp.float32)))
+        return ys
+
+    ys = jax.vmap(per_bh)(x, dt, A, Bm, Cm, D)
+    return ys.astype(x.dtype)

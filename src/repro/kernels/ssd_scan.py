@@ -1,0 +1,92 @@
+"""Mamba-2 SSD chunked-scan kernel (long-context hot-spot).
+
+Grid (B*nh, T_chunks) with the chunk axis innermost (sequential on TPU):
+per step, the intra-chunk quadratic term runs on the MXU and the carried
+state (hd x N) lives in VMEM scratch across chunk steps — the cross-chunk
+recurrence never touches HBM. x/B/C tiles stream through VMEM once.
+
+Shapes per grid step: x (Q, hd), Bm/Cm (Q, N), decay cumsums (Q,).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+INTERPRET = jax.default_backend() == "cpu"
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, o_ref, h_ref, *,
+                nchunks: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)                 # (Q, hd)
+    dt = dt_ref[0].astype(jnp.float32)               # (Q, 1)
+    A = a_ref[0, 0]                                  # scalar decay rate
+    Bm = b_ref[0].astype(jnp.float32)                # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)                # (Q, N)
+    D = d_ref[0, 0]
+
+    la = dt[:, 0] * A                                # (Q,) log decay
+    cum = jnp.cumsum(la)
+    total = cum[-1]
+
+    # intra-chunk: M[t,s] = (C_t.B_s) exp(cum_t - cum_s) dt_s, causal
+    G = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Q, Q)
+    Q = G.shape[0]
+    it = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    is_ = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    decay = jnp.exp(cum[:, None] - cum[None, :])
+    M = jnp.where(it >= is_, G * decay * dt[:, 0][None, :], 0.0)
+    y = jax.lax.dot_general(M, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # inter-chunk: y += exp(cum_t) * C_t . h_prev
+    h = h_ref[...]                                   # (hd, N)
+    y = y + jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cm, h, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    y = y + D * x
+    o_ref[0] = y.astype(o_ref.dtype)
+
+    # state update: h = exp(total) h + sum_s exp(total - cum_s) dt_s x_s B_s^T
+    w = (jnp.exp(total - cum) * dt[:, 0])[:, None]   # (Q, 1)
+    s_chunk = jax.lax.dot_general(x * w, Bm, (((0,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    h_ref[...] = jnp.exp(total) * h + s_chunk
+
+
+def ssd_scan_p(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+               Cm: jax.Array, D: jax.Array, *, chunk: int = 256,
+               interpret: bool | None = None) -> jax.Array:
+    """x: (BH, S, hd); dt: (BH, S); A, D: (BH,); Bm/Cm: (BH, S, N).
+    One (batch*head) per grid row. Returns y (BH, S, hd)."""
+    BH, S, hd = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    T = S // Q
+    interpret = INTERPRET if interpret is None else interpret
+    kern = functools.partial(_ssd_kernel, nchunks=T)
+    return pl.pallas_call(
+        kern,
+        grid=(BH, T),
+        in_specs=[
+            pl.BlockSpec((1, Q, hd), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, Q, 1), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, 1), lambda b, t: (b, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, 1), lambda b, t: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Q, hd), lambda b, t: (b, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), x.dtype),
+        scratch_shapes=[pltpu.VMEM((hd, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt[..., None], A[:, None], Bm, Cm, D[:, None])

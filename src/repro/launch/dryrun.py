@@ -1,0 +1,247 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+ShapeDtypeStruct stand-ins (no allocation), record memory_analysis,
+cost_analysis and the HLO-derived roofline terms.
+
+Usage:
+    python -m repro.launch.dryrun --arch llama3-405b --shape train_4k
+    python -m repro.launch.dryrun --arch llama3-405b --shape decode_32k --multi-pod
+    python -m repro.launch.dryrun --all            # every applicable cell
+Results cached as JSON under results/dryrun/ (one file per cell; reruns
+skip existing files unless --force).
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (ASSIGNED_ARCHS, PAPER_ARCHS, SHAPES, ModelConfig,
+                          ShapeConfig, get_config, shape_applicable)
+from repro.launch.mesh import make_production_mesh
+from repro.models import api
+from repro.parallel import sharding as shd
+from repro.training.optimizer import AdamWConfig, init_opt_state
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _mem_dict(ma) -> dict:
+    keys = ("generated_code_size_in_bytes", "argument_size_in_bytes",
+            "output_size_in_bytes", "alias_size_in_bytes",
+            "temp_size_in_bytes")
+    return {k: getattr(ma, k, None) for k in keys}
+
+
+VARIANTS = ("", "w8", "w4", "kvq8", "bf16attn", "micro4", "opt8",
+            "qc1024", "tri")
+# Hillclimb variants (§Perf):
+#   w8/w4     — weight-only int8/int4 serving quantization (decode)
+#   kvq8      — f8 KV-cache storage (decode)
+#   bf16attn  — bf16 blockwise-attention scores (train/prefill)
+#   micro4    — 4 grad-accum microbatches instead of token-rule (train)
+#   opt8      — int8-quantized AdamW moments (train memory)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+               serve_dtype=jnp.bfloat16, variant: str = ""):
+    """Returns (jitted_fn, args_structs) ready to .lower()."""
+    import os
+    if variant == "bf16attn":
+        os.environ["REPRO_ATTN_BF16"] = "1"
+    else:
+        os.environ.pop("REPRO_ATTN_BF16", None)
+    if variant == "qc1024":
+        os.environ["REPRO_ATTN_QCHUNK"] = "1024"
+    else:
+        os.environ.pop("REPRO_ATTN_QCHUNK", None)
+    if variant == "tri":
+        os.environ["REPRO_ATTN_TRI"] = "1"
+    else:
+        os.environ.pop("REPRO_ATTN_TRI", None)
+    if variant == "kvq8":
+        serve_dtype = jnp.float8_e4m3fn
+    params_struct = jax.eval_shape(
+        lambda: api.init_params(jax.random.key(0), cfg))
+    if variant in ("w8", "w4"):
+        from repro.config import QuantPolicy
+        from repro.core.quant.policy import quantize_tree
+        bits = 8 if variant == "w8" else 4
+        params_struct = jax.eval_shape(
+            lambda p: quantize_tree(p, QuantPolicy(weight_bits=bits)),
+            params_struct)
+    psh = shd.param_shardings(params_struct, cfg, mesh)
+    bspecs = api.batch_specs(cfg, shape, tuple(mesh.axis_names))
+    bstruct = api.batch_struct(cfg, shape)
+    bsh = shd.shardings_like(bstruct, bspecs, mesh)
+
+    if shape.kind == "train" or cfg.family == "basecaller":
+        dp = int(mesh.devices.size) // int(dict(zip(
+            mesh.axis_names, mesh.devices.shape)).get("model", 1))
+        n_micro = api.n_microbatches(cfg, shape.global_batch, shape.seq_len,
+                                     dp=dp)
+        if variant == "micro4":
+            n_micro = min(4, n_micro)
+        opt_cfg = AdamWConfig(state_bits=8 if variant == "opt8" else 0)
+        opt_struct = jax.eval_shape(lambda p: init_opt_state(p, opt_cfg),
+                                    params_struct)
+        ospecs = shd.opt_state_specs(opt_struct, params_struct, cfg)
+        osh = shd.shardings_like(opt_struct, ospecs, mesh)
+        mstate_struct = jax.eval_shape(lambda: api.init_model_state(cfg))
+        msh = jax.tree.map(
+            lambda _: jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec()), mstate_struct)
+        step = api.make_train_step(cfg, opt_cfg, n_micro)
+        carry = api.TrainCarry(params_struct, opt_struct, mstate_struct)
+        carry_sh = api.TrainCarry(psh, osh, msh)
+        fn = jax.jit(step, in_shardings=(carry_sh, bsh),
+                     donate_argnums=(0,))
+        return fn, (carry, bstruct), {"n_micro": n_micro}
+
+    if shape.kind == "prefill":
+        step = api.make_prefill_step(cfg)
+        fn = jax.jit(step, in_shardings=(psh, bsh))
+        return fn, (params_struct, bstruct), {}
+
+    # decode
+    from repro.models.lm import transformer as tfm
+    cache_struct = jax.eval_shape(
+        lambda: tfm.init_caches(cfg, shape.global_batch, shape.seq_len,
+                                cache_dtype=serve_dtype))
+    csh = shd.shardings_like(cache_struct, shd.cache_spec_tree(cfg), mesh)
+    step = api.make_decode_step(cfg)
+    tok_sh = shd.to_shardings(
+        jax.sharding.PartitionSpec(
+            ("pod", "data") if shape.global_batch > 1 else None, None), mesh)
+    t_sh = shd.to_shardings(jax.sharding.PartitionSpec(), mesh)
+    fn = jax.jit(step, in_shardings=(psh, csh, tok_sh, t_sh),
+                 donate_argnums=(1,))
+    args = (params_struct, cache_struct,
+            jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32))
+    return fn, args, {}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             force: bool = False, save_hlo: bool = False,
+             variant: str = "") -> dict:
+    tag = f"{arch}__{shape_name}__{'pod2' if multi_pod else 'pod1'}"
+    if variant:
+        tag += f"__{variant}"
+    out = RESULTS / f"{tag}.json"
+    if out.exists() and not force:
+        return json.loads(out.read_text())
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not shape_applicable(cfg, shape):
+        rec = {"cell": tag, "skipped": "long_500k needs sub-quadratic attn "
+               "(full-attention arch) — see DESIGN.md"}
+        RESULTS.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(rec, indent=1))
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with mesh:
+        fn, args, extra = build_cell(cfg, shape, mesh, variant=variant)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = _mem_dict(compiled.memory_analysis())
+        cost = compiled.cost_analysis() or {}
+        hlo_text = compiled.as_text()
+
+    from repro.analysis.hlo import analyze_hlo_text
+    from repro.analysis.roofline import model_flops, roofline_terms
+    hlo = analyze_hlo_text(hlo_text)
+    terms = roofline_terms(
+        hlo, int8_frac=0.9 if variant in ("w8", "w4") else 0.0)
+    n_chips = int(mesh.devices.size)
+    n_active = api.active_params(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mf = model_flops(n_active, tokens, shape.kind == "train")
+    rec = {
+        "cell": tag, "arch": arch, "shape": shape_name,
+        "variant": variant,
+        # decode is one pass over all live arguments (weights + caches);
+        # argument bytes / HBM bw is the exact per-step traffic floor and
+        # is where storage-quantization wins show without CPU-HLO noise.
+        "args_memory_s": (mem.get("argument_size_in_bytes") or 0) / 819e9,
+        "n_chips": n_chips,
+        "params_total": api.count_params_analytic(cfg),
+        "params_active": n_active,
+        "tokens_per_step": tokens,
+        "memory_analysis": mem,
+        "bytes_per_device": (mem.get("argument_size_in_bytes") or 0)
+        + (mem.get("output_size_in_bytes") or 0)
+        + (mem.get("temp_size_in_bytes") or 0)
+        - (mem.get("alias_size_in_bytes") or 0),
+        "xla_flops_1iter": cost.get("flops"),
+        "hlo": hlo,
+        "roofline": terms,
+        "model_flops_global": mf,
+        "model_flops_per_chip": mf / n_chips,
+        "useful_flops_ratio": (mf / n_chips) / hlo["flops"]
+        if hlo["flops"] else None,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        **extra,
+    }
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(rec, indent=1))
+    if save_hlo:
+        (RESULTS / f"{tag}.hlo.txt").write_text(hlo_text)
+    return rec
+
+
+def all_cells(include_paper: bool = True):
+    for arch in ASSIGNED_ARCHS:
+        for shape in SHAPES:
+            yield arch, shape
+    if include_paper:
+        yield "rubicall", "train_4k"   # the paper's own arch (bonus row)
+        yield "bonito", "train_4k"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--variant", default="", choices=VARIANTS)
+    args = ap.parse_args()
+
+    cells = ([(args.arch, args.shape, args.multi_pod)] if not args.all
+             else [(a, s, mp) for (a, s) in all_cells()
+                   for mp in (False, True)])
+    for arch, shape, mp in cells:
+        tag = f"{arch}__{shape}__{'pod2' if mp else 'pod1'}"
+        try:
+            rec = run_cell(arch, shape, mp, force=args.force,
+                           save_hlo=args.save_hlo, variant=args.variant)
+            if "skipped" in rec:
+                print(f"[skip] {tag}: {rec['skipped']}")
+            else:
+                r = rec["roofline"]
+                print(f"[ok]   {tag}: compute {r['compute_s']*1e3:.2f}ms "
+                      f"memory {r['memory_s']*1e3:.2f}ms "
+                      f"coll {r['collective_s']*1e3:.2f}ms "
+                      f"<- {r['bottleneck']}  "
+                      f"(compile {rec['compile_s']}s)")
+        except Exception as e:
+            print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
+            traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Serving launcher: batched autoregressive decode with optional
+weight-only quantization (the RUBICALL-MP idea applied to LM serving).
+
+``python -m repro.launch.serve --arch qwen1.5-4b --smoke --tokens 32``
+runs prefill on a synthetic prompt batch, then a decode loop; ``--wbits
+8|4`` quantizes matmul weights to packed integers first (dequant-on-read,
+halving/quartering weight HBM traffic — see benchmarks/serve_quant.py
+for the roofline deltas).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import QuantPolicy, get_config
+from repro.models import api
+from repro.models.lm import transformer as tfm
+
+
+def quantize_for_serving(params, wbits: int):
+    from repro.core.quant.policy import quantize_tree
+    policy = QuantPolicy(weight_bits=wbits, act_bits=0)
+    return quantize_tree(params, policy)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-4b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--wbits", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch + ("-smoke" if args.smoke else ""))
+    rng = jax.random.key(0)
+    params = api.init_params(rng, cfg)
+    if args.wbits:
+        # dequantize-on-load path for the XLA fallback; Pallas qmatmul is
+        # the TPU path (kernels/ops.py)
+        from repro.core.quant.policy import PackedTensor, dequantize, \
+            quantize_tree
+        qt = quantize_for_serving(params, args.wbits)
+        params = jax.tree.map(
+            lambda l: dequantize(l, jnp.dtype(cfg.dtype))
+            if isinstance(l, PackedTensor) else l, qt,
+            is_leaf=lambda l: isinstance(l, PackedTensor))
+        print(f"[serve] weights quantized to int{args.wbits} "
+              f"(packed storage; dequant-on-read)")
+
+    batch = api.make_smoke_batch(rng, cfg, args.batch, args.prompt_len)
+    cache_len = args.prompt_len + args.tokens + cfg.frontend_tokens
+
+    kw = {}
+    if cfg.family == "vlm":
+        kw["patch_embeds"] = batch["patch_embeds"]
+    if cfg.family == "audio":
+        from repro.models.lm import encdec
+        kw["enc_out"] = encdec.encode(params["encoder"], batch["frames"],
+                                      cfg)
+    t0 = time.time()
+    logits, caches = jax.jit(
+        lambda p, tk: tfm.prefill(p, tk, cfg, cache_len=cache_len, **kw)
+    )(params, batch["tokens"])
+    print(f"[serve] prefill {args.batch}x{args.prompt_len} in "
+          f"{time.time()-t0:.2f}s")
+
+    step = jax.jit(lambda p, c, tok, t: tfm.decode_step(p, c, tok, t, cfg))
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    out_tokens = [tok]
+    t0 = time.time()
+    pos0 = args.prompt_len + (cfg.frontend_tokens
+                              if cfg.family == "vlm" else 0)
+    for i in range(args.tokens - 1):
+        logits, caches = step(params, caches, tok,
+                              jnp.asarray(pos0 + i, jnp.int32))
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out_tokens.append(tok)
+    dt = time.time() - t0
+    total = args.batch * (args.tokens - 1)
+    print(f"[serve] decoded {total} tokens in {dt:.2f}s "
+          f"({total/max(dt,1e-9):.1f} tok/s)")
+    print("[serve] sample:", jnp.concatenate(out_tokens, 1)[0][:16])
+
+
+if __name__ == "__main__":
+    main()

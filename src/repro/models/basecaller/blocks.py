@@ -1,0 +1,166 @@
+"""Quantized 1-D conv blocks — the RUBICALL/Bonito building material.
+
+Block = R repeats of [grouped (depthwise) conv -> pointwise conv -> BN ->
+quantized ReLU], with an optional skip branch (pointwise projection of the
+block input, added before the last activation — QuartzNet/Bonito style).
+
+Skip branches are gated by a per-block ``skip_gate`` in [0, 1] so SkipClip
+can anneal them away without retracing; a gate of exactly 0 is
+algebraically identical to the skip-free (RUBICALL) topology.
+
+TPU notes: the depthwise+pointwise pair is the Pallas ``qconv1d`` hot-spot
+(VMEM-tiled over time); XLA path uses conv_general_dilated (NWC).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.lm.common import Params, truncated_normal_init
+
+State = Dict[str, jax.Array]
+
+
+def _maybe_quant(w: jax.Array, x: jax.Array, cfg: ModelConfig, tag: str):
+    if cfg.quant.enabled:
+        from repro.core.quant.fake_quant import fake_quant
+        wb, ab = cfg.quant.bits_for(tag)
+        if wb:
+            w = fake_quant(w, wb, axis=w.ndim - 1)
+        if ab:
+            x = fake_quant(x, ab, axis=None)
+    return w, x
+
+
+def conv1d(x: jax.Array, w: jax.Array, *, stride: int = 1, groups: int = 1,
+           dilation: int = 1, causal: bool = False) -> jax.Array:
+    """x: (B, S, Cin); w: (K, Cin//groups, Cout)."""
+    K = w.shape[0]
+    if causal:
+        pad = ((dilation * (K - 1), 0),)
+    else:
+        total = dilation * (K - 1)
+        pad = ((total // 2, total - total // 2),)
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride,), padding=pad,
+        rhs_dilation=(dilation,), feature_group_count=groups,
+        dimension_numbers=("NWC", "WIO", "NWC"))
+
+
+def make_bn_params(c: int) -> Params:
+    return {"scale": jnp.ones((c,), jnp.float32),
+            "bias": jnp.zeros((c,), jnp.float32)}
+
+
+def make_bn_state(c: int) -> State:
+    return {"mean": jnp.zeros((c,), jnp.float32),
+            "var": jnp.ones((c,), jnp.float32)}
+
+
+def batchnorm(p: Params, s: State, x: jax.Array, *, train: bool,
+              momentum: float = 0.9) -> Tuple[jax.Array, State]:
+    xf = x.astype(jnp.float32)
+    if train:
+        mean = jnp.mean(xf, axis=(0, 1))
+        var = jnp.var(xf, axis=(0, 1))
+        new_s = {"mean": momentum * s["mean"] + (1 - momentum) * mean,
+                 "var": momentum * s["var"] + (1 - momentum) * var}
+    else:
+        mean, var = s["mean"], s["var"]
+        new_s = s
+    y = (xf - mean) * jax.lax.rsqrt(var + 1e-5) * p["scale"] + p["bias"]
+    return y.astype(x.dtype), new_s
+
+
+def make_sep_conv_params(rng, c_in: int, c_out: int, k: int) -> Params:
+    r = jax.random.split(rng, 2)
+    return {
+        "dw": truncated_normal_init(r[0], (k, 1, c_in), stddev=0.2),
+        "pw": truncated_normal_init(r[1], (1, c_in, c_out)),
+        "bn": make_bn_params(c_out),
+    }
+
+
+def sep_conv_state(c_out: int) -> State:
+    return {"bn": make_bn_state(c_out)}
+
+
+def sep_conv(p: Params, s: State, x: jax.Array, cfg: ModelConfig, tag: str,
+             *, stride: int = 1, dilation: int = 1, causal: bool = False,
+             train: bool = True, relu: bool = True
+             ) -> Tuple[jax.Array, State]:
+    c_in = x.shape[-1]
+    dw, xq = _maybe_quant(p["dw"].astype(x.dtype), x, cfg, tag + "/dw")
+    h = conv1d(xq, dw, stride=stride, groups=c_in, dilation=dilation,
+               causal=causal)
+    pw, hq = _maybe_quant(p["pw"].astype(x.dtype), h, cfg, tag + "/pw")
+    h = conv1d(hq, pw)
+    h, bn_s = batchnorm(p["bn"], s["bn"], h, train=train)
+    if relu:
+        h = jax.nn.relu(h)
+        if cfg.quant.enabled:
+            from repro.core.quant.fake_quant import fake_quant
+            _, ab = cfg.quant.bits_for(tag + "/act")
+            if ab:
+                h = fake_quant(h, ab)
+    return h, {"bn": bn_s}
+
+
+def make_block_params(rng, cfg: ModelConfig, i: int, c_in: int) -> Params:
+    """Block i of the config's channels/kernel_sizes/repeats tables."""
+    c_out = cfg.channels[i]
+    k = cfg.kernel_sizes[i]
+    reps = cfg.repeats[i]
+    keys = jax.random.split(rng, reps + 1)
+    p: Params = {f"rep{j}": make_sep_conv_params(
+        keys[j], c_in if j == 0 else c_out, c_out, k) for j in range(reps)}
+    if cfg.use_skips:
+        p["skip_pw"] = truncated_normal_init(keys[-1], (1, c_in, c_out))
+        p["skip_bn"] = make_bn_params(c_out)
+    return p
+
+
+def block_state(cfg: ModelConfig, i: int) -> State:
+    c_out = cfg.channels[i]
+    s: State = {f"rep{j}": sep_conv_state(c_out)
+                for j in range(cfg.repeats[i])}
+    if cfg.use_skips:
+        s["skip_bn"] = make_bn_state(c_out)
+    return s
+
+
+def block_forward(p: Params, s: State, x: jax.Array, cfg: ModelConfig,
+                  i: int, *, train: bool = True,
+                  skip_gate: Optional[jax.Array] = None,
+                  dilation: int = 1, causal: bool = False
+                  ) -> Tuple[jax.Array, State]:
+    reps = cfg.repeats[i]
+    stride = cfg.strides[i]
+    tag = f"block{i:02d}"
+    new_s: State = {}
+    h = x
+    for j in range(reps):
+        last = (j == reps - 1)
+        h, ns = sep_conv(p[f"rep{j}"], s[f"rep{j}"], h, cfg, f"{tag}/rep{j}",
+                         stride=stride if j == 0 else 1,
+                         dilation=dilation, causal=causal,
+                         train=train, relu=not last)
+        new_s[f"rep{j}"] = ns
+    if cfg.use_skips and "skip_pw" in p:
+        gate = 1.0 if skip_gate is None else skip_gate
+        sk = conv1d(x, p["skip_pw"].astype(x.dtype))
+        if stride > 1:
+            sk = sk[:, ::stride]
+        sk, bn_s = batchnorm(p["skip_bn"], s["skip_bn"], sk, train=train)
+        new_s["skip_bn"] = bn_s
+        h = h + gate * sk
+    h = jax.nn.relu(h)
+    if cfg.quant.enabled:
+        from repro.core.quant.fake_quant import fake_quant
+        _, ab = cfg.quant.bits_for(tag + "/act")
+        if ab:
+            h = fake_quant(h, ab)
+    return h, new_s

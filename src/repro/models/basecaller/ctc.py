@@ -1,0 +1,115 @@
+"""Connectionist Temporal Classification: loss (log-space forward algorithm
+via ``lax.scan``) + greedy / prefix-beam decoders.
+
+Alphabet: index 0 = CTC blank; 1..4 = A, C, G, T (paper's 5-way head).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG = -1e30
+BLANK = 0
+
+
+def ctc_loss(log_probs: jax.Array, labels: jax.Array,
+             label_lengths: jax.Array,
+             input_lengths: jax.Array = None) -> jax.Array:
+    """Mean negative log-likelihood.
+
+    log_probs: (B, T, V) log-softmax outputs; labels: (B, L) in [1, V) padded
+    with 0; label_lengths: (B,). input_lengths defaults to T.
+    """
+    B, T, V = log_probs.shape
+    L = labels.shape[1]
+    U = 2 * L + 1
+    if input_lengths is None:
+        input_lengths = jnp.full((B,), T, jnp.int32)
+
+    # extended sequence z: blank, l1, blank, l2, ..., blank
+    z = jnp.zeros((B, U), jnp.int32)
+    z = z.at[:, 1::2].set(labels)
+    u_len = 2 * label_lengths + 1
+
+    # can we skip from u-2 (different label and not blank)?
+    z_shift2 = jnp.pad(z, ((0, 0), (2, 0)))[:, :U]
+    can_skip = (z != BLANK) & (z != z_shift2)
+    u_valid = jnp.arange(U)[None, :] < u_len[:, None]
+
+    lp0 = log_probs[:, 0]                                   # (B, V)
+    alpha0 = jnp.full((B, U), NEG)
+    alpha0 = alpha0.at[:, 0].set(jnp.take_along_axis(lp0, z[:, :1], 1)[:, 0])
+    has1 = (u_len > 1)
+    alpha0 = alpha0.at[:, 1].set(
+        jnp.where(has1, jnp.take_along_axis(lp0, z[:, 1:2], 1)[:, 0], NEG))
+
+    def step(alpha, lp_t):
+        stay = alpha
+        prev1 = jnp.pad(alpha, ((0, 0), (1, 0)), constant_values=NEG)[:, :U]
+        prev2 = jnp.pad(alpha, ((0, 0), (2, 0)), constant_values=NEG)[:, :U]
+        prev2 = jnp.where(can_skip, prev2, NEG)
+        m = jnp.maximum(jnp.maximum(stay, prev1), prev2)
+        tot = m + jnp.log(jnp.exp(stay - m) + jnp.exp(prev1 - m)
+                          + jnp.exp(prev2 - m) + 1e-38)
+        emit = jnp.take_along_axis(lp_t, z, axis=1)
+        out = jnp.where(u_valid, tot + emit, NEG)
+        return out, None
+
+    alpha, _ = jax.lax.scan(step, alpha0,
+                            jnp.swapaxes(log_probs[:, 1:], 0, 1))
+    # final: alpha[U-1] + alpha[U-2] at the (per-sample) last valid u
+    idx_last = (u_len - 1)[:, None]
+    a_last = jnp.take_along_axis(alpha, idx_last, axis=1)[:, 0]
+    a_prev = jnp.take_along_axis(alpha, jnp.maximum(idx_last - 1, 0), 1)[:, 0]
+    m = jnp.maximum(a_last, a_prev)
+    ll = m + jnp.log(jnp.exp(a_last - m) + jnp.exp(a_prev - m) + 1e-38)
+    return -jnp.mean(ll)
+
+
+def greedy_decode(log_probs: np.ndarray) -> List[np.ndarray]:
+    """argmax -> collapse repeats -> drop blanks. log_probs: (B, T, V)."""
+    out = []
+    ids = np.asarray(jnp.argmax(log_probs, axis=-1))
+    for row in ids:
+        collapsed = row[np.insert(row[1:] != row[:-1], 0, True)]
+        out.append(collapsed[collapsed != BLANK])
+    return out
+
+
+def beam_decode(log_probs: np.ndarray, beam: int = 5) -> np.ndarray:
+    """Prefix beam search for one sequence. log_probs: (T, V)."""
+    lp = np.asarray(log_probs, np.float64)
+    T, V = lp.shape
+    beams = {(): (0.0, -np.inf)}    # prefix -> (logp_blank, logp_nonblank)
+
+    def lse(*xs):
+        xs = [x for x in xs if x > -np.inf]
+        if not xs:
+            return -np.inf
+        m = max(xs)
+        return m + np.log(sum(np.exp(x - m) for x in xs))
+
+    for t in range(T):
+        new = {}
+        for prefix, (pb, pnb) in beams.items():
+            for v in range(V):
+                p = lp[t, v]
+                if v == BLANK:
+                    nb = new.get(prefix, (-np.inf, -np.inf))
+                    new[prefix] = (lse(nb[0], pb + p, pnb + p), nb[1])
+                else:
+                    ext = prefix + (v,)
+                    nb = new.get(ext, (-np.inf, -np.inf))
+                    if prefix and prefix[-1] == v:
+                        new[ext] = (nb[0], lse(nb[1], pb + p))
+                        same = new.get(prefix, (-np.inf, -np.inf))
+                        new[prefix] = (same[0], lse(same[1], pnb + p))
+                    else:
+                        new[ext] = (nb[0], lse(nb[1], pb + p, pnb + p))
+        beams = dict(sorted(new.items(),
+                            key=lambda kv: -lse(*kv[1]))[:beam])
+    best = max(beams.items(), key=lambda kv: lse(*kv[1]))[0]
+    return np.asarray(best, np.int32)

@@ -1,0 +1,68 @@
+"""Basecaller model family: RUBICALL (skip-free, mixed-precision), the
+Bonito-style teacher (skips, FP), and the Causalcall-style TCN — one
+parametric implementation driven by :class:`ModelConfig`.
+
+Input: normalized squiggle chunks (B, S, 1). Output: CTC log-probs
+(B, S/stem_stride, 5).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.basecaller import blocks as bl
+from repro.models.basecaller.ctc import ctc_loss
+from repro.models.lm.common import Params, truncated_normal_init
+
+State = Dict[str, jax.Array]
+
+
+def init_params(rng, cfg: ModelConfig) -> Params:
+    keys = jax.random.split(rng, cfg.n_blocks + 1)
+    p: Params = {}
+    c_in = 1
+    for i in range(cfg.n_blocks):
+        p[f"block{i:02d}"] = bl.make_block_params(keys[i], cfg, i, c_in)
+        c_in = cfg.channels[i]
+    p["head_pw"] = truncated_normal_init(keys[-1], (1, c_in, cfg.n_bases))
+    return p
+
+
+def init_state(cfg: ModelConfig) -> State:
+    return {f"block{i:02d}": bl.block_state(cfg, i)
+            for i in range(cfg.n_blocks)}
+
+
+def forward(params: Params, state: State, signal: jax.Array,
+            cfg: ModelConfig, *, train: bool = True,
+            skip_gates: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, State]:
+    """signal: (B, S, 1) -> (log_probs (B, T, n_bases), new_state).
+
+    ``skip_gates``: (n_blocks,) in [0,1] — SkipClip's anneal handle.
+    """
+    x = signal.astype(cfg.dtype)
+    new_state: State = {}
+    causal = cfg.name.startswith("causalcall")
+    for i in range(cfg.n_blocks):
+        gate = None if skip_gates is None else skip_gates[i]
+        dilation = 2 ** (i % 5) if causal else 1
+        x, ns = bl.block_forward(params[f"block{i:02d}"],
+                                 state[f"block{i:02d}"], x, cfg, i,
+                                 train=train, skip_gate=gate,
+                                 dilation=dilation, causal=causal)
+        new_state[f"block{i:02d}"] = ns
+    logits = bl.conv1d(x, params["head_pw"].astype(x.dtype))
+    return jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1), new_state
+
+
+def loss_fn(params: Params, state: State, batch: Dict, cfg: ModelConfig,
+            *, skip_gates: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, Tuple[Dict, State]]:
+    log_probs, new_state = forward(params, state, batch["signal"], cfg,
+                                   train=True, skip_gates=skip_gates)
+    loss = ctc_loss(log_probs, batch["labels"], batch["label_lengths"])
+    return loss, ({"ctc_loss": loss}, new_state)

@@ -1,0 +1,58 @@
+"""Whisper-style encoder (bidirectional) over stub audio frame embeddings.
+
+The conv frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed log-mel frame embeddings (B, n_frames, d_model); the encoder
+adds sinusoidal positions and runs bidirectional attention blocks.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.lm import attention as attn_mod
+from repro.models.lm.common import (Params, make_mlp_params,
+                                    make_rmsnorm_params, mlp, rmsnorm)
+
+
+def sinusoidal(n: int, d: int) -> jax.Array:
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def init_encoder(rng, cfg: ModelConfig) -> Params:
+    keys = jax.random.split(rng, cfg.n_enc_layers)
+
+    def one(k):
+        r = jax.random.split(k, 2)
+        return {"ln1": make_rmsnorm_params(cfg.d_model),
+                "attn": attn_mod.make_attn_params(r[0], cfg),
+                "ln2": make_rmsnorm_params(cfg.d_model),
+                "ffn": make_mlp_params(r[1], cfg.d_model, cfg.d_ff,
+                                       gated=False)}
+    return {"blocks": jax.vmap(one)(keys),
+            "final_norm": make_rmsnorm_params(cfg.d_model)}
+
+
+def encode(params: Params, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """frames: (B, F, d) stub embeddings -> (B, F, d) encoder states."""
+    B, F, d = frames.shape
+    x = frames.astype(cfg.dtype) + sinusoidal(F, d).astype(cfg.dtype)[None]
+    positions = jnp.arange(F, dtype=jnp.int32)[None, :].repeat(B, 0)
+
+    def step(xc, pl):
+        h = rmsnorm(pl["ln1"], xc, cfg.norm_eps)
+        a, _ = attn_mod.attn_forward(pl["attn"], h, positions, cfg,
+                                     causal=False)
+        xc = xc + a
+        h2 = rmsnorm(pl["ln2"], xc, cfg.norm_eps)
+        xc = xc + mlp(pl["ffn"], h2, cfg=cfg, tag="enc/mlp", act="gelu")
+        return xc, None
+
+    fn = jax.checkpoint(step) if cfg.remat else step
+    x, _ = jax.lax.scan(fn, x, params["blocks"])
+    return rmsnorm(params["final_norm"], x, cfg.norm_eps)

@@ -1,0 +1,158 @@
+"""Multi-head Latent Attention (DeepSeek-V3).
+
+Prefill expands the compressed latent into per-head K/V and runs the
+blockwise kernel; decode uses the *absorbed* form — attention scores and
+values computed directly in the (kv_lora_rank + rope) latent space, so the
+cache is (B, S, 576) instead of (B, S, 128, 256): a 56x cache-byte
+reduction, which is the whole point of MLA on a memory-bound decode.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.models.lm.attention import NEG_INF, blockwise_attn
+from repro.models.lm.common import (BATCH_AXES, Params, constrain, dense,
+                                    make_dense_params, make_rmsnorm_params,
+                                    rmsnorm)
+from repro.models.lm.rope import apply_rope
+
+
+def _dims(cfg: ModelConfig):
+    return (cfg.n_heads, cfg.mla_q_lora_rank, cfg.mla_kv_lora_rank,
+            cfg.mla_qk_nope_dim, cfg.mla_qk_rope_dim, cfg.mla_v_dim)
+
+
+def make_mla_params(rng, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    H, qr, kvr, nope, rope_d, vd = _dims(cfg)
+    r = jax.random.split(rng, 6)
+    return {
+        "wdq": make_dense_params(r[0], d, qr),
+        "wuq": make_dense_params(r[1], qr, H * (nope + rope_d)),
+        "wdkv": make_dense_params(r[2], d, kvr + rope_d),
+        "wukv": make_dense_params(r[3], kvr, H * (nope + vd)),
+        "wo": make_dense_params(r[4], H * vd, d),
+        "q_norm": make_rmsnorm_params(qr),
+        "kv_norm": make_rmsnorm_params(kvr),
+    }
+
+
+def _project_q(p, x, positions, cfg):
+    B, S, _ = x.shape
+    H, qr, kvr, nope, rope_d, vd = _dims(cfg)
+    cq = rmsnorm(p["q_norm"], dense(p["wdq"], x, cfg=cfg, tag="mla/wdq"),
+                 cfg.norm_eps)
+    q = dense(p["wuq"], cq, cfg=cfg, tag="mla/wuq").reshape(B, S, H, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, head_dim=rope_d, theta=cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(p, x, positions, cfg):
+    B, S, _ = x.shape
+    H, qr, kvr, nope, rope_d, vd = _dims(cfg)
+    ckv = dense(p["wdkv"], x, cfg=cfg, tag="mla/wdkv")
+    c, k_rope = ckv[..., :kvr], ckv[..., kvr:]
+    c = rmsnorm(p["kv_norm"], c, cfg.norm_eps)
+    k_rope = apply_rope(k_rope, positions, head_dim=rope_d, theta=cfg.rope_theta)
+    return c, k_rope            # (B,S,kvr), (B,S,rope_d)
+
+
+def mla_forward(p: Params, x: jax.Array, positions: jax.Array,
+                cfg: ModelConfig) -> Tuple[jax.Array, Dict]:
+    """Training/prefill: expand latent to per-head K/V, blockwise attention."""
+    B, S, _ = x.shape
+    H, qr, kvr, nope, rope_d, vd = _dims(cfg)
+    q_nope, q_rope = _project_q(p, x, positions, cfg)
+    c, k_rope = _project_kv_latent(p, x, positions, cfg)
+
+    kv = dense(p["wukv"], c, cfg=cfg, tag="mla/wukv").reshape(
+        B, S, H, nope + vd)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None], (B, S, H, rope_d))], -1)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    q = constrain(q, P(BATCH_AXES, None, "model", None))
+    k = constrain(k, P(BATCH_AXES, None, "model", None))
+    v = constrain(v, P(BATCH_AXES, None, "model", None))
+    o = blockwise_attn(q, k, v, causal=True)
+    o = o.reshape(B, S, H * vd)
+    o = constrain(o, P(BATCH_AXES, None, "model"))
+    out = dense(p["wo"], o, cfg=cfg, tag="mla/wo")
+    return out, {"c": c, "k_rope": k_rope}
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                   dtype=jnp.bfloat16) -> Dict:
+    _, _, kvr, _, rope_d, _ = _dims(cfg)
+    return {"c": jnp.zeros((batch, cache_len, kvr), dtype),
+            "k_rope": jnp.zeros((batch, cache_len, rope_d), dtype),
+            "pos": jnp.full((cache_len,), -(10 ** 9), jnp.int32)}
+
+
+def mla_cache_specs():
+    return {"c": P(BATCH_AXES, "model", None),
+            "k_rope": P(BATCH_AXES, "model", None),
+            "pos": P(None)}
+
+
+def fill_mla_cache(cache: Dict, kv: Dict) -> Dict:
+    S = kv["c"].shape[1]
+    return {"c": cache["c"].at[:, :S].set(kv["c"].astype(cache["c"].dtype)),
+            "k_rope": cache["k_rope"].at[:, :S].set(
+                kv["k_rope"].astype(cache["k_rope"].dtype)),
+            "pos": cache["pos"].at[:S].set(jnp.arange(S, dtype=jnp.int32))}
+
+
+def mla_decode(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
+               cfg: ModelConfig) -> Tuple[jax.Array, Dict]:
+    """Absorbed-form decode over the latent cache. x: (B, 1, d)."""
+    B = x.shape[0]
+    H, qr, kvr, nope, rope_d, vd = _dims(cfg)
+    pos2 = t[None, None] if t.ndim == 0 else t
+    q_nope, q_rope = _project_q(p, x, pos2, cfg)          # (B,1,H,*)
+    c_new, kr_new = _project_kv_latent(p, x, pos2, cfg)   # (B,1,kvr)
+
+    L = cache["c"].shape[1]
+    slot = (t % L).astype(jnp.int32)
+    c_new = constrain(c_new, P(BATCH_AXES, None, None))
+    kr_new = constrain(kr_new, P(BATCH_AXES, None, None))
+    c = jax.lax.dynamic_update_slice_in_dim(
+        cache["c"], c_new.astype(cache["c"].dtype), slot, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), slot, axis=1)
+    pos = cache["pos"].at[slot].set(t.astype(jnp.int32))
+
+    # weight absorption: score in latent space. q replicated over 'model',
+    # latent cache sequence-sharded (flash-decoding pattern).
+    from repro.models.lm.common import kernel_of
+    c = constrain(c, P(BATCH_AXES, "model", None))
+    k_rope = constrain(k_rope, P(BATCH_AXES, "model", None))
+    wukv = kernel_of(p["wukv"], jnp.float32).reshape(kvr, H, nope + vd)
+    w_uk = wukv[..., :nope]                               # (kvr, H, nope)
+    w_uv = wukv[..., nope:]                               # (kvr, H, vd)
+    qf = constrain(q_nope.reshape(B, H, nope),
+                   P(BATCH_AXES, None, None)).astype(c.dtype)
+    q_abs = jnp.einsum("bhn,rhn->bhr", qf, w_uk.astype(c.dtype))
+    # latent cache read once in storage dtype, fp32 accumulation
+    s = jnp.einsum("bhr,blr->bhl", q_abs, c,
+                   preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bhp,blp->bhl",
+                       q_rope.reshape(B, H, rope_d).astype(k_rope.dtype),
+                       k_rope, preferred_element_type=jnp.float32)
+    s = constrain(s, P(BATCH_AXES, None, "model"))
+    s = s * ((nope + rope_d) ** -0.5)
+    s = jnp.where(((pos >= 0) & (pos <= t))[None, None, :], s, NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhl,blr->bhr", prob.astype(c.dtype), c,
+                       preferred_element_type=jnp.float32)
+    o = jnp.einsum("bhr,rhv->bhv", o_lat.astype(c.dtype),
+                   w_uv.astype(c.dtype))
+    o = o.reshape(B, 1, H * vd).astype(x.dtype)
+    out = dense(p["wo"], o, cfg=cfg, tag="mla/wo")
+    return out, {"c": c, "k_rope": k_rope, "pos": pos}

@@ -1,0 +1,123 @@
+"""Mixture-of-Experts FFN — GShard-style token-choice top-k with capacity.
+
+Expert weights are stacked (E, d, ff) and sharded E -> 'model' (expert
+parallelism on the fixed production mesh). The dispatch/combine einsums
+contract over tokens sharded on 'data', so GSPMD materialises the
+token<->expert reshard as all-to-all/reduce-scatter collectives — the
+collective-bound roofline term for the MoE archs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.models.lm.common import (BATCH_AXES, Params, constrain, dense,
+                                    make_dense_params, truncated_normal_init)
+
+
+def make_moe_params(rng, cfg: ModelConfig) -> Params:
+    d, ff, E = cfg.d_model, cfg.moe_d_ff or cfg.d_ff, cfg.n_experts
+    r = jax.random.split(rng, 6)
+    p = {
+        "router": make_dense_params(r[0], d, E, stddev=0.006),
+        "wi": truncated_normal_init(r[1], (E, d, ff)),
+        "wg": truncated_normal_init(r[2], (E, d, ff)),
+        "wo": truncated_normal_init(r[3], (E, ff, d)),
+    }
+    if cfg.n_shared_experts:
+        from repro.models.lm.common import make_mlp_params
+        p["shared"] = make_mlp_params(r[4], d, ff * cfg.n_shared_experts)
+    return p
+
+
+def _top_k_dispatch(gates: jax.Array, k: int, capacity: int
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """gates: (G, S, E) softmax probs. Returns (dispatch (G,S,E,C) bool-ish,
+    combine (G,S,E,C) f32, aux load-balance loss)."""
+    G, S, E = gates.shape
+    combine = jnp.zeros((G, S, E, capacity), jnp.float32)
+    dispatch = jnp.zeros((G, S, E, capacity), jnp.bool_)
+    remaining = gates
+    # iterative top-1 x k (GShard): positions via causal cumsum per expert.
+    counts = jnp.zeros((G, E), jnp.int32)
+    me = jnp.mean(gates, axis=1)                       # (G, E) mean prob
+    ce = jnp.zeros((G, E), jnp.float32)                # fraction routed
+    for _ in range(k):
+        idx = jnp.argmax(remaining, axis=-1)           # (G, S)
+        onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)
+        prob = jnp.sum(gates * onehot, axis=-1)        # (G, S)
+        pos = counts[:, None, :] + (jnp.cumsum(onehot, axis=1) - onehot)
+        pos_tok = jnp.sum(pos * onehot, axis=-1)       # (G, S)
+        fits = pos_tok < capacity
+        pos_oh = jax.nn.one_hot(pos_tok.astype(jnp.int32), capacity,
+                                dtype=jnp.float32)     # (G,S,C)
+        upd = (onehot * (prob * fits)[..., None])[..., None] * pos_oh[:, :, None, :]
+        combine = combine + upd
+        dispatch = dispatch | (upd > 0)
+        counts = counts + jnp.sum(onehot, axis=1).astype(jnp.int32)
+        ce = ce + jnp.mean(onehot, axis=1)
+        remaining = remaining * (1.0 - onehot)
+    # renormalise combine weights over selected experts (top-k softmax norm)
+    denom = jnp.sum(combine, axis=(2, 3), keepdims=True)
+    combine = combine / jnp.maximum(denom, 1e-9)
+    aux = jnp.mean(jnp.sum(me * ce, axis=-1)) * (E / k)
+    return dispatch, combine, aux
+
+
+def moe_ffn(p: Params, x: jax.Array, cfg: ModelConfig, *,
+            capacity_factor: float = 1.25,
+            decode: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y, aux_loss). Batch dim doubles as the GShard group.
+
+    ``decode=True`` switches to weight-stationary sharding: the dispatched
+    token tensor shards d over 'data' so the FSDP-sharded expert weights
+    are contracted in place (no per-step expert-weight all-gather — the
+    same fix as the dense decode path; per-layer collectives become
+    O(tokens x d) instead of O(expert params)).
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.experts_per_tok
+    dt = x.dtype
+    if decode and S == 1:
+        # fold the batch into ONE dispatch group: capacity is provisioned
+        # per (group x expert), so per-token groups waste E*4 slots per
+        # token (128x at deepseek scale). One group -> slots ~ B*k*cf.
+        y, aux = moe_ffn(p, x.reshape(1, B, d), cfg,
+                         capacity_factor=capacity_factor, decode=True)
+        return y.reshape(B, S, d), aux
+    capacity = max(int(math.ceil(S * k / E * capacity_factor)), 4)
+
+    logits = dense(p["router"], x, cfg=cfg, tag="moe/router",
+                   quantize=False).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)
+    dispatch, combine, aux = _top_k_dispatch(gates, k, capacity)
+
+    xe = jnp.einsum("gsec,gsd->egcd", dispatch.astype(dt), x)
+    if decode:
+        xe = constrain(xe, P("model", None, None, "data"))
+    else:
+        xe = constrain(xe, P("model", BATCH_AXES, None, None))
+    from repro.models.lm.common import kernel_of
+    wi, wg, wo = (kernel_of(p["wi"], dt), kernel_of(p["wg"], dt),
+                  kernel_of(p["wo"], dt))
+    h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", xe, wg)) * \
+        jnp.einsum("egcd,edf->egcf", xe, wi)
+    if decode:
+        h = constrain(h, P("model", None, None, None))
+    ye = jnp.einsum("egcf,efd->egcd", h, wo)
+    ye = constrain(ye, P("model", None, None, "data") if decode
+                   else P("model", BATCH_AXES, None, None))
+    y = jnp.einsum("gsec,egcd->gsd", combine.astype(dt), ye)
+    y = constrain(y, P(None, None, "data") if decode
+                  else P(BATCH_AXES, None, None))
+
+    if "shared" in p:
+        from repro.models.lm.common import mlp
+        y = y + mlp(p["shared"], x, cfg=cfg, tag="moe/shared",
+                    hidden_spec=P(None, None, "model") if decode else None)
+    return y, aux.astype(jnp.float32)

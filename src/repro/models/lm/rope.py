@@ -1,0 +1,46 @@
+"""Rotary position embeddings: standard (llama-style) and 2d/half-dim
+(chatglm-style, rotary on the first half of head_dim only)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies for ``head_dim//2`` rotation planes."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def _rotate(x: jax.Array, positions: jax.Array, inv_freq: jax.Array) -> jax.Array:
+    """Apply rotation to the leading ``2*len(inv_freq)`` features of x.
+
+    x: (..., S, head_dim); positions: broadcastable to (..., S).
+    Pairs features as (x[2i], x[2i+1]) — interleaved convention.
+    """
+    rot = 2 * inv_freq.shape[0]
+    xr, xp = x[..., :rot], x[..., rot:]
+    ang = positions[..., None].astype(jnp.float32) * inv_freq  # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1 = xr[..., 0::2].astype(jnp.float32)
+    x2 = xr[..., 1::2].astype(jnp.float32)
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    y = jnp.stack([y1, y2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    return jnp.concatenate([y, xp], axis=-1) if xp.shape[-1] else y
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, head_dim: int,
+               theta: float = 10000.0, two_d: bool = False) -> jax.Array:
+    """x: (B, S, H, hd) or (B, S, hd); positions: (B, S) or (S,).
+
+    ``two_d=True`` rotates only the first half of head_dim (chatglm3);
+    the remainder passes through (positional "2d" split).
+    """
+    rot_dim = head_dim // 2 if two_d else head_dim
+    inv = rope_freqs(rot_dim, theta)
+    if x.ndim == 4:   # (B,S,H,hd): positions broadcast over heads
+        pos = positions[:, :, None] if positions.ndim == 2 else positions[None, :, None]
+    else:
+        pos = positions if positions.ndim == 2 else positions[None, :]
+    return _rotate(x, pos, inv)

@@ -1,0 +1,197 @@
+"""Mamba-2 (SSD — state-space duality) block, chunked.
+
+Per head h with scalar decay A_h < 0:
+    state_t = exp(dt_t A_h) state_{t-1} + dt_t * B_t (x) x_t
+    y_t     = C_t . state_t + D_h x_t
+
+The chunked algorithm (chunk Q): intra-chunk term is an attention-like
+masked matmul with decay weights; inter-chunk states carried by a
+``lax.scan`` of O(S/Q) steps. Decode keeps O(1) state per layer — this is
+why the SSM/hybrid archs run the ``long_500k`` shape.
+
+Pallas twin: ``repro.kernels.ssd_scan`` (TPU hot-spot).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.models.lm.common import (BATCH_AXES, Params, constrain, dense,
+                                    make_dense_params, truncated_normal_init)
+
+
+def ssm_dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = d_in // cfg.ssm_headdim
+    N = cfg.ssm_state
+    conv_ch = d_in + 2 * N       # x, B, C go through the causal conv
+    return d_in, nh, N, conv_ch
+
+
+def make_ssm_params(rng, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    d_in, nh, N, conv_ch = ssm_dims(cfg)
+    r = jax.random.split(rng, 5)
+    return {
+        "in_proj": make_dense_params(r[0], d, 2 * d_in + 2 * N + nh),
+        "conv_w": truncated_normal_init(r[1], (cfg.ssm_conv, conv_ch), stddev=0.1),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(r[2], (nh,), minval=jnp.log(1e-3),
+                                       maxval=jnp.log(1e-1))))),
+        "out_proj": make_dense_params(r[3], d_in, d),
+    }
+
+
+def _split_proj(zxbcdt: jax.Array, cfg: ModelConfig):
+    d_in, nh, N, _ = ssm_dims(cfg)
+    z = zxbcdt[..., :d_in]
+    x = zxbcdt[..., d_in:2 * d_in]
+    Bm = zxbcdt[..., 2 * d_in:2 * d_in + N]
+    Cm = zxbcdt[..., 2 * d_in + N:2 * d_in + 2 * N]
+    dt = zxbcdt[..., 2 * d_in + 2 * N:]
+    return z, x, Bm, Cm, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array = None) -> jax.Array:
+    """Depthwise causal conv, width K. xbc: (B,S,C); w: (K,C)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros_like(xbc[:, :K - 1])
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1]] * w[i].astype(xbc.dtype)
+              for i in range(K))
+    return jax.nn.silu(out + b.astype(xbc.dtype))
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, D: jax.Array, chunk: int,
+                init_state: jax.Array = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B,S,nh,hd); dt: (B,S,nh); A: (nh,); Bm/Cm: (B,S,N).
+
+    Returns (y (B,S,nh,hd), final_state (B,nh,hd,N)).
+    """
+    Bsz, S, nh, hd = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    while S % Q:
+        Q -= 1
+    T = S // Q
+    f32 = jnp.float32
+
+    xr = x.reshape(Bsz, T, Q, nh, hd).astype(f32)
+    dtr = dt.reshape(Bsz, T, Q, nh).astype(f32)
+    Br = Bm.reshape(Bsz, T, Q, N).astype(f32)
+    Cr = Cm.reshape(Bsz, T, Q, N).astype(f32)
+
+    la = dtr * A[None, None, None, :]                   # log decay per step
+    cum = jnp.cumsum(la, axis=2)                        # (B,T,Q,nh)
+    total = cum[:, :, -1]                               # (B,T,nh)
+
+    # intra-chunk (attention-like): M[t,s] = C_t.B_s * exp(cum_t - cum_s) * dt_s
+    G = jnp.einsum("btqn,btsn->btqs", Cr, Br)           # (B,T,Q,Q)
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,T,Q,S=Q,nh)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    M = G[..., None] * decay * dtr[:, :, None, :, :]    # (B,T,Q,Q,nh)
+    M = jnp.where(causal[None, None, :, :, None], M, 0.0)
+    y_intra = jnp.einsum("btqsh,btshd->btqhd", M, xr)
+
+    # chunk contribution to state: sum_s exp(total - cum_s) dt_s B_s (x) x_s
+    w_state = jnp.exp(total[:, :, None, :] - cum) * dtr  # (B,T,Q,nh)
+    S_chunk = jnp.einsum("btqh,btqn,btqhd->bthdn", w_state, Br, xr)
+
+    # inter-chunk scan
+    h0 = (jnp.zeros((Bsz, nh, hd, N), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def step(h, inp):
+        tot_t, s_t = inp                                # (B,nh), (B,nh,hd,N)
+        h_prev = h
+        h = h * jnp.exp(tot_t)[:, :, None, None] + s_t
+        return h, h_prev
+
+    (h_fin, h_prevs) = jax.lax.scan(
+        step, h0, (total.transpose(1, 0, 2), S_chunk.transpose(1, 0, 2, 3, 4)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)          # (B,T,nh,hd,N)
+
+    y_inter = jnp.einsum("btqn,btqh,bthdn->btqhd",
+                         Cr, jnp.exp(cum), h_prevs)
+    y = y_intra + y_inter + D[None, None, None, :, None] * xr
+    return y.reshape(Bsz, S, nh, hd).astype(x.dtype), h_fin
+
+
+def ssm_forward(p: Params, x: jax.Array, cfg: ModelConfig
+                ) -> Tuple[jax.Array, Dict]:
+    """Train/prefill. x: (B,S,d). Returns (y, final ssm state dict)."""
+    B, S, d = x.shape
+    d_in, nh, N, conv_ch = ssm_dims(cfg)
+    zxbcdt = dense(p["in_proj"], x, cfg=cfg, tag="ssm/in_proj")
+    z, xs, Bm, Cm, dtr = _split_proj(zxbcdt, cfg)
+    xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    conv_state = xbc[:, -(cfg.ssm_conv - 1):]           # for decode handoff
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs, Bm, Cm = (xbc[..., :d_in], xbc[..., d_in:d_in + N],
+                  xbc[..., d_in + N:])
+    xs = constrain(xs, P(BATCH_AXES, None, "model"))
+    dtv = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, h = ssd_chunked(xs.reshape(B, S, nh, cfg.ssm_headdim), dtv, A, Bm, Cm,
+                       p["D"], cfg.ssm_chunk)
+    y = y.reshape(B, S, d_in) * jax.nn.silu(z)
+    y = constrain(y, P(BATCH_AXES, None, "model"))
+    out = dense(p["out_proj"], y, cfg=cfg, tag="ssm/out_proj")
+    return out, {"h": h.astype(jnp.float32), "conv": conv_state}
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict:
+    d_in, nh, N, conv_ch = ssm_dims(cfg)
+    return {"h": jnp.zeros((batch, nh, cfg.ssm_headdim, N), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype)}
+
+
+def ssm_cache_specs():
+    return {"h": P(BATCH_AXES, "model", None, None),
+            "conv": P(BATCH_AXES, None, "model")}
+
+
+def ssm_decode(p: Params, x: jax.Array, cache: Dict, cfg: ModelConfig
+               ) -> Tuple[jax.Array, Dict]:
+    """One-token decode with O(1) state. x: (B,1,d)."""
+    B = x.shape[0]
+    d_in, nh, N, conv_ch = ssm_dims(cfg)
+    hd = cfg.ssm_headdim
+    zxbcdt = dense(p["in_proj"], x, cfg=cfg, tag="ssm/in_proj")
+    z, xs, Bm, Cm, dtr = _split_proj(zxbcdt[:, 0], cfg)
+
+    xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)        # (B, conv_ch)
+    window = jnp.concatenate([cache["conv"].astype(xbc.dtype),
+                              xbc[:, None]], axis=1)    # (B, K, C)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out).astype(x.dtype)
+    xs = conv_out[..., :d_in].reshape(B, nh, hd)
+    Bm = conv_out[..., d_in:d_in + N]
+    Cm = conv_out[..., d_in + N:]
+
+    dtv = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])  # (B,nh)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dtv * A[None, :])                   # (B,nh)
+    h = cache["h"] * decay[:, :, None, None] + \
+        jnp.einsum("bh,bn,bhd->bhdn", dtv, Bm.astype(jnp.float32),
+                   xs.astype(jnp.float32))
+    y = jnp.einsum("bn,bhdn->bhd", Cm.astype(jnp.float32), h) + \
+        p["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, 1, d_in).astype(x.dtype) * jax.nn.silu(z[:, None])
+    out = dense(p["out_proj"], y, cfg=cfg, tag="ssm/out_proj")
+    new_cache = {"h": h, "conv": window[:, 1:]}
+    return out, new_cache

@@ -1,0 +1,443 @@
+"""Decoder-only transformer assembly for every LM-family arch.
+
+Layers are organised into *groups* of structurally-identical blocks; each
+group stacks its params along a leading axis and is consumed by
+``lax.scan`` (HLO size O(#groups), not O(depth)). Heterogeneous stacks
+(deepseek dense->moe prefix, hymba full/SWA interleave) are just multiple
+groups.
+
+Block kinds:
+  dense       norm -> GQA attn -> norm -> (Swi)GLU
+  moe         norm -> GQA attn -> norm -> MoE FFN (+shared)
+  mla_dense   norm -> MLA      -> norm -> GLU (deepseek first layers)
+  mla_moe     norm -> MLA      -> norm -> MoE
+  ssm         norm -> Mamba-2 (no MLP)
+  hybrid_full norm -> (attn || SSM) mean -> norm -> GLU   (global attn)
+  hybrid_swa  same but sliding-window attention
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.models.lm import attention as attn_mod
+from repro.models.lm import mla as mla_mod
+from repro.models.lm import moe as moe_mod
+from repro.models.lm import ssm as ssm_mod
+from repro.models.lm.common import (BATCH_AXES, Params, constrain,
+                                    cross_entropy, dense, make_dense_params,
+                                    make_mlp_params, make_rmsnorm_params,
+                                    mlp, rmsnorm, truncated_normal_init)
+
+# ---------------------------------------------------------------------------
+# Layer plan
+
+
+def layer_plan(cfg: ModelConfig) -> List[Tuple[str, int]]:
+    L = cfg.n_layers
+    if cfg.family in ("dense", "vlm"):
+        return [("dense", L)]
+    if cfg.family == "moe":
+        if cfg.mla:
+            nd = min(cfg.n_dense_layers, L)
+            plan = []
+            if nd:
+                plan.append(("mla_dense", nd))
+            if L - nd:
+                plan.append(("mla_moe", L - nd))
+            return plan
+        return [("moe", L)]
+    if cfg.family == "ssm":
+        return [("ssm", L)]
+    if cfg.family == "hybrid":
+        full = sorted({0, L // 2, L - 1})
+        plan: List[Tuple[str, int]] = []
+        prev = -1
+        for f in full:
+            gap = f - prev - 1
+            if gap > 0:
+                plan.append(("hybrid_swa", gap))
+            plan.append(("hybrid_full", 1))
+            prev = f
+        tail = L - 1 - full[-1]
+        if tail > 0:
+            plan.append(("hybrid_swa", tail))
+        return plan
+    if cfg.family == "audio":
+        return [("xdec", L)]
+    raise ValueError(cfg.family)
+
+
+def _block_window(cfg: ModelConfig, kind: str) -> int:
+    return cfg.sliding_window if kind == "hybrid_swa" else 0
+
+
+# ---------------------------------------------------------------------------
+# Block init / forward / decode
+
+
+def init_block(rng, cfg: ModelConfig, kind: str) -> Params:
+    r = jax.random.split(rng, 6)
+    d = cfg.d_model
+    p: Params = {"ln1": make_rmsnorm_params(d)}
+    if kind in ("dense", "moe", "hybrid_full", "hybrid_swa", "xdec"):
+        p["attn"] = attn_mod.make_attn_params(r[0], cfg)
+    if kind in ("mla_dense", "mla_moe"):
+        p["attn"] = mla_mod.make_mla_params(r[0], cfg)
+    if kind == "ssm":
+        p["ssm"] = ssm_mod.make_ssm_params(r[1], cfg)
+        return p
+    if kind.startswith("hybrid"):
+        p["ssm"] = ssm_mod.make_ssm_params(r[1], cfg)
+    p["ln2"] = make_rmsnorm_params(d)
+    if kind in ("moe", "mla_moe"):
+        p["ffn"] = moe_mod.make_moe_params(r[2], cfg)
+    elif kind == "mla_dense":
+        p["ffn"] = make_mlp_params(r[2], d, cfg.dense_d_ff or cfg.d_ff)
+    elif kind == "xdec":
+        p["xattn"] = attn_mod.make_attn_params(r[3], cfg)
+        p["ln_x"] = make_rmsnorm_params(d)
+        p["ffn"] = make_mlp_params(r[2], d, cfg.d_ff, gated=False)
+    else:
+        p["ffn"] = make_mlp_params(r[2], d, cfg.d_ff)
+    return p
+
+
+def _mixer_forward(p, x, positions, cfg, kind):
+    """Token mixer (attention / MLA / SSM / parallel hybrid) -> (y, kv)."""
+    if kind in ("mla_dense", "mla_moe"):
+        return mla_mod.mla_forward(p["attn"], x, positions, cfg)
+    if kind == "ssm":
+        return ssm_mod.ssm_forward(p["ssm"], x, cfg)
+    if kind.startswith("hybrid"):
+        w = _block_window(cfg, kind)
+        ya, kv = attn_mod.attn_forward(p["attn"], x, positions, cfg, window=w)
+        ys, st = ssm_mod.ssm_forward(p["ssm"], x, cfg)
+        return 0.5 * (ya + ys), {"kv": kv, "ssm": st}
+    return attn_mod.attn_forward(p["attn"], x, positions, cfg)
+
+
+def block_forward(p: Params, x: jax.Array, positions: jax.Array,
+                  cfg: ModelConfig, kind: str,
+                  enc_kv: Optional[Dict] = None
+                  ) -> Tuple[jax.Array, jax.Array, Dict]:
+    """Returns (x_out, aux_loss, cache_kv)."""
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    mix, kv = _mixer_forward(p, h, positions, cfg, kind)
+    x = x + mix
+    x = constrain(x, P(BATCH_AXES, None, None))
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "ssm":
+        return x, aux, kv
+    if kind == "xdec" and enc_kv is not None:
+        hx = rmsnorm(p["ln_x"], x, cfg.norm_eps)
+        xa = _cross_attn(p["xattn"], hx, enc_kv, cfg)
+        x = x + xa
+    h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if kind in ("moe", "mla_moe"):
+        y, aux = moe_mod.moe_ffn(p["ffn"], h2, cfg)
+    else:
+        act = "gelu" if cfg.family == "audio" else "silu"
+        y = mlp(p["ffn"], h2, cfg=cfg, tag="mlp", act=act)
+    x = x + y
+    x = constrain(x, P(BATCH_AXES, None, None))
+    return x, aux, kv
+
+
+def _cross_attn(p, x, enc_kv, cfg):
+    """Cross-attention against precomputed encoder K/V (whisper decode)."""
+    B, S, _ = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = x.dtype
+    q = dense(p["wq"], x, cfg=cfg, tag="xattn/wq").reshape(B, S, H, hd)
+    k = jnp.repeat(enc_kv["k"], H // Hkv, axis=2)      # (B, Se, H, hd)
+    v = jnp.repeat(enc_kv["v"], H // Hkv, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    prob = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", prob, v.astype(jnp.float32))
+    o = o.reshape(B, S, H * hd).astype(dt)
+    return dense(p["wo"], o, cfg=cfg, tag="xattn/wo")
+
+
+def enc_kv_for_layer(p: Params, enc_out: jax.Array, cfg: ModelConfig) -> Dict:
+    """Precompute a decoder layer's cross-attention K/V from encoder output."""
+    B, Se, _ = enc_out.shape
+    Hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    k = dense(p["wk"], enc_out, cfg=cfg, tag="xattn/wk").reshape(B, Se, Hkv, hd)
+    v = dense(p["wv"], enc_out, cfg=cfg, tag="xattn/wv").reshape(B, Se, Hkv, hd)
+    return {"k": k, "v": v}
+
+
+# Weight-stationary decode sharding (Pope et al. style): the residual
+# stream shards d_model over 'data' with batch replicated in the matmuls,
+# so FSDP-sharded weights are consumed in place (no per-layer weight
+# all-gather); activation reshards are O(B x d). Attention/caches keep
+# batch over 'data' and sequence over 'model' (flash-decoding).
+DECODE_RESID = P(None, None, "data")
+
+
+def block_decode(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
+                 cfg: ModelConfig, kind: str,
+                 enc_kv: Optional[Dict] = None) -> Tuple[jax.Array, Dict]:
+    x = constrain(x, DECODE_RESID)
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if kind in ("mla_dense", "mla_moe"):
+        mix, nc = mla_mod.mla_decode(p["attn"], h, cache, t, cfg)
+    elif kind == "ssm":
+        mix, nc = ssm_mod.ssm_decode(p["ssm"], h, cache, cfg)
+        return constrain(x + mix, DECODE_RESID), nc
+    elif kind.startswith("hybrid"):
+        w = _block_window(cfg, kind)
+        ya, nkv = attn_mod.attn_decode(p["attn"], h, cache["kv"], t, cfg,
+                                       window=w)
+        ys, nst = ssm_mod.ssm_decode(p["ssm"], h, cache["ssm"], cfg)
+        mix, nc = 0.5 * (ya + ys), {"kv": nkv, "ssm": nst}
+    else:
+        mix, nc = attn_mod.attn_decode(p["attn"], h, cache, t, cfg)
+    x = constrain(x + mix, DECODE_RESID)
+    if kind == "xdec" and enc_kv is not None:
+        hx = rmsnorm(p["ln_x"], x, cfg.norm_eps)
+        x = x + _cross_attn(p["xattn"], hx, enc_kv, cfg)
+    h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if kind in ("moe", "mla_moe"):
+        y, _ = moe_mod.moe_ffn(p["ffn"], h2, cfg, decode=True)
+    else:
+        act = "gelu" if cfg.family == "audio" else "silu"
+        y = mlp(p["ffn"], h2, cfg=cfg, tag="mlp", act=act,
+                hidden_spec=P(None, None, "model"))
+    return constrain(x + y, DECODE_RESID), nc
+
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int,
+                     cache_len: int, dtype=jnp.bfloat16):
+    if kind in ("mla_dense", "mla_moe"):
+        return mla_mod.init_mla_cache(cfg, batch, cache_len, dtype)
+    if kind == "ssm":
+        return ssm_mod.init_ssm_cache(cfg, batch)
+    if kind.startswith("hybrid"):
+        return {"kv": attn_mod.init_attn_cache(
+                    cfg, batch, cache_len, window=_block_window(cfg, kind),
+                    dtype=dtype),
+                "ssm": ssm_mod.init_ssm_cache(cfg, batch)}
+    return attn_mod.init_attn_cache(cfg, batch, cache_len, dtype=dtype)
+
+
+def block_cache_specs(cfg: ModelConfig, kind: str):
+    if kind in ("mla_dense", "mla_moe"):
+        return mla_mod.mla_cache_specs()
+    if kind == "ssm":
+        return ssm_mod.ssm_cache_specs()
+    if kind.startswith("hybrid"):
+        return {"kv": attn_mod.cache_specs(window=_block_window(cfg, kind)),
+                "ssm": ssm_mod.ssm_cache_specs()}
+    return attn_mod.cache_specs()
+
+
+def fill_block_cache(cfg, kind, cache, kv):
+    if kind in ("mla_dense", "mla_moe"):
+        return mla_mod.fill_mla_cache(cache, kv)
+    if kind == "ssm":
+        return kv  # ssm_forward already returns the handoff state
+    if kind.startswith("hybrid"):
+        return {"kv": attn_mod.fill_cache_from_prefill(cache["kv"], kv["kv"]),
+                "ssm": kv["ssm"]}
+    return attn_mod.fill_cache_from_prefill(cache, kv)
+
+
+# ---------------------------------------------------------------------------
+# Full decoder
+
+
+def init_decoder(rng, cfg: ModelConfig) -> Params:
+    r = jax.random.split(rng, 8)
+    d = cfg.d_model
+    params: Params = {
+        "embed": truncated_normal_init(r[0], (cfg.vocab_size, d)),
+        "final_norm": make_rmsnorm_params(d),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = make_dense_params(r[1], d, cfg.vocab_size)
+    groups = {}
+    for gi, (kind, n) in enumerate(layer_plan(cfg)):
+        keys = jax.random.split(jax.random.fold_in(r[2], gi), n)
+        groups[f"g{gi}_{kind}"] = jax.vmap(
+            lambda k: init_block(k, cfg, kind))(keys)
+    params["groups"] = groups
+    if cfg.family == "vlm":
+        params["vision_proj"] = make_dense_params(r[3], d, d)
+    if cfg.mtp_depth:
+        params["mtp"] = {
+            "proj": make_dense_params(r[4], 2 * d, d),
+            "block": init_block(r[5], cfg, "mla_dense" if cfg.mla else "dense"),
+            "norm": make_rmsnorm_params(d),
+        }
+    return params
+
+
+def group_names(cfg: ModelConfig) -> List[Tuple[str, str, int]]:
+    return [(f"g{gi}_{kind}", kind, n)
+            for gi, (kind, n) in enumerate(layer_plan(cfg))]
+
+
+def embed_tokens(params: Params, tokens: jax.Array, cfg: ModelConfig):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    return constrain(x, P(BATCH_AXES, None, None))
+
+
+def unembed(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = params["embed"].astype(cfg.dtype)
+        logits = jnp.einsum("bsd,vd->bsv", x, w)
+    else:
+        logits = dense(params["lm_head"], x, cfg=cfg, tag="lm_head")
+    return constrain(logits, P(BATCH_AXES, None, "model"))
+
+
+def forward(params: Params, tokens: jax.Array, cfg: ModelConfig,
+            patch_embeds: Optional[jax.Array] = None,
+            enc_out: Optional[jax.Array] = None,
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward -> (hidden (B,S,d), aux_loss). Used by train &
+    prefill. For VLM, patch embeddings are prepended; for audio, enc_out
+    feeds per-layer cross-attention."""
+    x = embed_tokens(params, tokens, cfg)
+    if patch_embeds is not None:
+        pe = dense(params["vision_proj"], patch_embeds.astype(cfg.dtype),
+                   cfg=cfg, tag="vision_proj")
+        x = jnp.concatenate([pe, x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for gname, kind, n in group_names(cfg):
+        pstack = params["groups"][gname]
+        enc_kv_stack = None
+        if kind == "xdec" and enc_out is not None:
+            enc_kv_stack = jax.vmap(
+                lambda p1: enc_kv_for_layer(p1["xattn"], enc_out, cfg)
+            )(pstack)
+
+        def step(carry, xs):
+            xc, aux = carry
+            if enc_kv_stack is not None:
+                pl, ekv = xs
+            else:
+                pl, ekv = xs, None
+            xo, a, _ = block_forward(pl, xc, positions, cfg, kind, enc_kv=ekv)
+            return (xo, aux + a), None
+
+        fn = jax.checkpoint(step) if cfg.remat else step
+        xs_in = (pstack, enc_kv_stack) if enc_kv_stack is not None else pstack
+        (x, aux_total), _ = jax.lax.scan(fn, (x, aux_total), xs_in)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode (serving)
+
+
+def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig,
+            cache_len: Optional[int] = None,
+            patch_embeds: Optional[jax.Array] = None,
+            enc_out: Optional[jax.Array] = None,
+            cache_dtype=jnp.bfloat16) -> Tuple[jax.Array, Dict]:
+    """Run the prompt, build per-group caches. Returns (last_logits, caches)."""
+    x = embed_tokens(params, tokens, cfg)
+    if patch_embeds is not None:
+        pe = dense(params["vision_proj"], patch_embeds.astype(cfg.dtype),
+                   cfg=cfg, tag="vision_proj")
+        x = jnp.concatenate([pe, x], axis=1)
+    B, S, _ = x.shape
+    cache_len = cache_len or S
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+    caches: Dict[str, Any] = {}
+
+    for gname, kind, n in group_names(cfg):
+        pstack = params["groups"][gname]
+        enc_kv_stack = None
+        if kind == "xdec" and enc_out is not None:
+            enc_kv_stack = jax.vmap(
+                lambda p1: enc_kv_for_layer(p1["xattn"], enc_out, cfg)
+            )(pstack)
+
+        def step(xc, xs):
+            if enc_kv_stack is not None:
+                pl, ekv = xs
+            else:
+                pl, ekv = xs, None
+            xo, _, kv = block_forward(pl, xc, positions, cfg, kind, enc_kv=ekv)
+            return xo, kv
+
+        xs_in = (pstack, enc_kv_stack) if enc_kv_stack is not None else pstack
+        x, kv_stack = jax.lax.scan(step, x, xs_in)
+
+        def build(kv):
+            c = init_block_cache(cfg, kind, B, cache_len, dtype=cache_dtype)
+            return fill_block_cache(cfg, kind, c, kv)
+
+        from repro.parallel import sharding as shd
+        caches[gname] = shd.constrain_tree(
+            jax.vmap(build)(kv_stack),
+            shd.prepend_none(block_cache_specs(cfg, kind)))
+        if enc_kv_stack is not None:
+            caches[gname + "/enc_kv"] = jax.tree.map(
+                lambda a: a.astype(cache_dtype), enc_kv_stack)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params, x[:, -1:], cfg)
+    return logits, caches
+
+
+def decode_step(params: Params, caches: Dict, tokens: jax.Array,
+                t: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, Dict]:
+    """One token for the whole stack. tokens: (B, 1); t: scalar position."""
+    x = embed_tokens(params, tokens, cfg)
+    new_caches: Dict[str, Any] = {}
+    for gname, kind, n in group_names(cfg):
+        pstack = params["groups"][gname]
+        cstack = caches[gname]
+        ekv_stack = caches.get(gname + "/enc_kv")
+
+        def step(xc, xs):
+            if ekv_stack is not None:
+                pl, cl, ekv = xs
+            else:
+                (pl, cl), ekv = xs, None
+            xo, nc = block_decode(pl, xc, cl, t, cfg, kind, enc_kv=ekv)
+            return xo, nc
+
+        xs_in = ((pstack, cstack, ekv_stack) if ekv_stack is not None
+                 else (pstack, cstack))
+        x, ncache = jax.lax.scan(step, x, xs_in)
+        new_caches[gname] = ncache
+        if ekv_stack is not None:
+            new_caches[gname + "/enc_kv"] = ekv_stack
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params, x, cfg)
+    return logits, new_caches
+
+
+def init_caches(cfg: ModelConfig, batch: int, cache_len: int,
+                cache_dtype=jnp.bfloat16) -> Dict:
+    """Fresh (empty) caches for decode-only lowering (the dry-run path)."""
+    caches: Dict[str, Any] = {}
+    for gname, kind, n in group_names(cfg):
+        def one(_):
+            return init_block_cache(cfg, kind, batch, cache_len,
+                                    dtype=cache_dtype)
+        caches[gname] = jax.vmap(one)(jnp.arange(n))
+        if kind == "xdec":
+            H, hd = cfg.n_heads, cfg.resolved_head_dim
+            Se = cfg.frontend_tokens
+            caches[gname + "/enc_kv"] = {
+                "k": jnp.zeros((n, batch, Se, H, hd), cache_dtype),
+                "v": jnp.zeros((n, batch, Se, H, hd), cache_dtype)}
+    return caches

@@ -1,0 +1,182 @@
+"""Path-based sharding rules (MaxText-style logical rules, keyed on the
+param tree paths produced by the model builders).
+
+Scheme on the fixed production mesh (data=16, model=16[, pod=2]):
+- DP/FSDP over 'pod' x 'data': weight d_model dims shard on 'data'
+  (per-layer all-gather under the layer scan — the FSDP pattern).
+- TP over 'model': attention head-merged output dims, FFN hidden,
+  vocab (embedding rows / lm_head cols), MoE expert dim (EP).
+- Optimizer m/v mirror the param tree -> same rules (ZeRO).
+- Basecaller family is pure DP (3M params — replication is optimal).
+
+Rules emit specs for the UNSTACKED layer shape; stacked (scan) params get
+leading ``None``s padded automatically, so the same rule covers both.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+
+# (pattern, base spec entries) — first match wins.
+_LM_RULES: Tuple[Tuple[str, Tuple], ...] = (
+    (r"embed(/\d+)?$",                  ("model", "data")),
+    (r"lm_head/kernel(/\d+)?$",         ("data", "model")),
+    (r"vision_proj/kernel(/\d+)?$",     ("data", "model")),
+    (r"(wo|out_proj)/kernel(/\d+)?$",   ("model", "data")),
+    (r"(wo|out_proj)/bias$",            (None,)),
+    (r"router/kernel$",                 ("data", None)),
+    (r"ffn/wi(/\d+)?$",                ("model", "data", None)),   # MoE (E,d,ff)
+    (r"ffn/wg(/\d+)?$",                ("model", "data", None)),
+    (r"ffn/wo(/\d+)?$",                ("model", None, "data")),
+    (r"(wi|wg|wq|wk|wv|wuq|wukv|wdq|wdkv|in_proj|proj)/kernel(/\d+)?$",
+                                        ("data", "model")),
+    (r"(wi|wg|wq|wk|wv|wuq|wukv|in_proj)/bias$", ("model",)),
+    (r"conv_w$",                        (None, "model")),
+    (r"conv_b$",                        ("model",)),
+    (r"(A_log|D|dt_bias)$",             (None,)),
+    (r"(scale|bias)$",                  (None,)),
+)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+def spec_for_path(path: str, ndim: int, cfg: ModelConfig) -> P:
+    if cfg.family == "basecaller":
+        return P(*([None] * ndim))
+    for pat, base in _LM_RULES:
+        if re.search(pat, path):
+            if len(base) > ndim:      # e.g. scalar leaves
+                return P(*([None] * ndim))
+            pad = (None,) * (ndim - len(base))
+            return P(*(pad + tuple(base)))
+    return P(*([None] * ndim))
+
+
+def _filter_axes(spec: P, mesh: Mesh, shape: Optional[Tuple[int, ...]] = None
+                 ) -> P:
+    """Drop axis names absent from the mesh and axes that do not divide the
+    corresponding dim (GSPMD input shardings must divide evenly)."""
+    names = set(mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def fix(i, e):
+        if e is None:
+            return None
+        entry = tuple(a for a in (e if isinstance(e, (tuple, list)) else (e,))
+                      if a in names)
+        if not entry:
+            return None
+        if shape is not None and i < len(shape):
+            total = 1
+            for a in entry:
+                total *= sizes[a]
+            if shape[i] % total:
+                # try the largest prefix of axes that divides
+                while entry:
+                    entry = entry[:-1]
+                    total = 1
+                    for a in entry:
+                        total *= sizes[a]
+                    if entry and shape[i] % total == 0:
+                        break
+                if not entry:
+                    return None
+        return entry if len(entry) > 1 else entry[0]
+
+    return P(*(fix(i, e) for i, e in enumerate(spec)))
+
+
+def param_specs(params_struct, cfg: ModelConfig):
+    """PartitionSpec tree matching a params (or grads / m / v) tree."""
+    def one(path, leaf):
+        return spec_for_path(_path_str(path), len(leaf.shape), cfg)
+    return jax.tree_util.tree_map_with_path(one, params_struct)
+
+
+def param_shardings(params_struct, cfg: ModelConfig, mesh: Mesh):
+    leaves, treedef = jax.tree.flatten(params_struct)
+    specs = _spec_leaves(param_specs(params_struct, cfg))
+    return jax.tree.unflatten(
+        treedef, [NamedSharding(mesh, _filter_axes(s, mesh, l.shape))
+                  for l, s in zip(leaves, specs)])
+
+
+def to_shardings(spec_tree, mesh: Mesh, struct_tree=None):
+    """Spec tree -> NamedSharding tree (filtering absent axis names)."""
+    if struct_tree is not None:
+        return shardings_like(struct_tree, spec_tree, mesh)
+
+    def one(s):
+        if isinstance(s, P):
+            return NamedSharding(mesh, _filter_axes(s, mesh))
+        return NamedSharding(mesh, P())
+    return jax.tree.map(one, spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def prepend_none(spec_tree, n: int = 1):
+    """Add leading None dims (stacked-layer axes) to every P leaf."""
+    return jax.tree.map(lambda s: P(*(((None,) * n) + tuple(s))), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def cache_spec_tree(cfg: ModelConfig):
+    """PartitionSpec tree matching transformer.init_caches output."""
+    from repro.models.lm import transformer as tfm
+    specs = {}
+    for gname, kind, n in tfm.group_names(cfg):
+        specs[gname] = prepend_none(tfm.block_cache_specs(cfg, kind))
+        if kind == "xdec":
+            specs[gname + "/enc_kv"] = {
+                "k": P(None, ("pod", "data"), None, None, None),
+                "v": P(None, ("pod", "data"), None, None, None)}
+    return specs
+
+
+def _spec_leaves(spec_tree):
+    return jax.tree.leaves(spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain_tree(tree, spec_tree):
+    """with_sharding_constraint over a pytree of P specs (mesh-filtered).
+
+    spec_tree must have the same dict structure (P leaves are tuples, so we
+    flatten both sides and zip in leaf order)."""
+    from repro.models.lm.common import constrain
+    leaves, treedef = jax.tree.flatten(tree)
+    specs = _spec_leaves(spec_tree)
+    assert len(leaves) == len(specs), (len(leaves), len(specs))
+    return jax.tree.unflatten(
+        treedef, [constrain(x, s) for x, s in zip(leaves, specs)])
+
+
+def shardings_like(struct_tree, spec_tree, mesh: Mesh):
+    """NamedSharding tree matching struct_tree, from a P spec tree."""
+    leaves, treedef = jax.tree.flatten(struct_tree)
+    specs = _spec_leaves(spec_tree)
+    assert len(leaves) == len(specs), (len(leaves), len(specs))
+    return jax.tree.unflatten(
+        treedef,
+        [NamedSharding(mesh, _filter_axes(s, mesh, getattr(l, "shape", None)))
+         for l, s in zip(leaves, specs)])
+
+
+def opt_state_specs(opt_struct, params_struct, cfg: ModelConfig):
+    """OptState(step, m, v, m_scale, v_scale) — m/v mirror params."""
+    from repro.training.optimizer import OptState
+    pspecs = param_specs(params_struct, cfg)
+    none_like = lambda tree: jax.tree.map(lambda l: P(*([None] * len(l.shape))),
+                                          tree) if tree is not None else None
+    return OptState(P(), pspecs, pspecs,
+                    none_like(opt_struct.m_scale),
+                    none_like(opt_struct.v_scale))

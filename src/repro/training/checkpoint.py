@@ -1,0 +1,148 @@
+"""Fault-tolerant checkpointing (no orbax offline — built from scratch).
+
+Guarantees:
+- **Atomic**: write to ``step_N.tmp/`` then ``os.rename`` — a crash
+  mid-save can never corrupt the latest valid checkpoint.
+- **Verified**: a manifest (tree structure + shapes + dtypes + per-leaf
+  crc32) is written alongside; restore validates before handing params
+  back, and ``latest_valid`` skips any checkpoint that fails.
+- **Async**: ``save_async`` snapshots to host memory on the caller's
+  thread (cheap) and writes on a background thread, overlapping I/O with
+  the next training steps — node-failure recovery cost is bounded by the
+  save interval, not the write time.
+- **Bounded**: keeps the newest ``keep`` checkpoints.
+
+Multi-host note: on a real cluster each host writes only the shards it
+owns (addressable_shards); here the process owns everything, and the
+layout (one .npy per leaf) is already per-shard-friendly.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import zlib
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    # -- save -----------------------------------------------------------
+    def save(self, step: int, tree: Any) -> Path:
+        flat = _flatten(tree)
+        return self._write(step, flat)
+
+    def save_async(self, step: int, tree: Any) -> None:
+        """Snapshot now, write in the background."""
+        flat = _flatten(tree)          # device->host copy happens here
+        self.wait()
+        self._thread = threading.Thread(target=self._write,
+                                        args=(step, flat), daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, flat: Dict[str, np.ndarray]) -> Path:
+        final = self.dir / f"step_{step:010d}"
+        tmp = self.dir / f"step_{step:010d}.tmp"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        manifest = {}
+        for key, arr in flat.items():
+            fname = key.replace("/", "__") + ".npy"
+            np.save(tmp / fname, arr)
+            manifest[key] = {
+                "file": fname, "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "crc32": zlib.crc32(np.ascontiguousarray(arr).tobytes()),
+            }
+        (tmp / "manifest.json").write_text(json.dumps(
+            {"step": step, "leaves": manifest}))
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)          # atomic publish
+        self._gc()
+        return final
+
+    def _gc(self) -> None:
+        ckpts = sorted(self.dir.glob("step_*"))
+        ckpts = [c for c in ckpts if not c.name.endswith(".tmp")]
+        for old in ckpts[: max(0, len(ckpts) - self.keep)]:
+            shutil.rmtree(old)
+
+    # -- restore ---------------------------------------------------------
+    def _validate(self, path: Path) -> bool:
+        mf = path / "manifest.json"
+        if not mf.exists():
+            return False
+        try:
+            manifest = json.loads(mf.read_text())
+            for key, meta in manifest["leaves"].items():
+                arr = np.load(path / meta["file"])
+                if list(arr.shape) != meta["shape"]:
+                    return False
+                if zlib.crc32(np.ascontiguousarray(arr).tobytes()) \
+                        != meta["crc32"]:
+                    return False
+            return True
+        except Exception:
+            return False
+
+    def latest_valid(self) -> Optional[Tuple[int, Path]]:
+        for path in sorted(self.dir.glob("step_*"), reverse=True):
+            if path.name.endswith(".tmp"):
+                continue
+            if self._validate(path):
+                step = int(path.name.split("_")[1])
+                return step, path
+        return None
+
+    def restore(self, like_tree: Any, path: Optional[Path] = None,
+                shardings: Any = None) -> Tuple[int, Any]:
+        """Restore into the structure (and optional shardings) of
+        ``like_tree``. Returns (step, tree)."""
+        if path is None:
+            latest = self.latest_valid()
+            if latest is None:
+                raise FileNotFoundError(f"no valid checkpoint in {self.dir}")
+            step, path = latest
+        else:
+            step = json.loads((path / "manifest.json").read_text())["step"]
+        manifest = json.loads((path / "manifest.json").read_text())["leaves"]
+        flat_like = jax.tree_util.tree_flatten_with_path(like_tree)
+        leaves = []
+        sh_leaves = (jax.tree_util.tree_leaves(shardings)
+                     if shardings is not None else [None] * len(flat_like[0]))
+        for (pth, leaf), sh in zip(flat_like[0], sh_leaves):
+            key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                           for k in pth)
+            arr = np.load(path / manifest[key]["file"])
+            if sh is not None:
+                leaves.append(jax.device_put(arr, sh))
+            else:
+                leaves.append(jax.numpy.asarray(arr))
+        return step, jax.tree_util.tree_unflatten(flat_like[1], leaves)

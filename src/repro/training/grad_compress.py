@@ -1,0 +1,66 @@
+"""int8 gradient compression with error feedback — the paper's
+quantization idea applied to the collective roofline term.
+
+``compress -> all-reduce(int8 payload) -> decompress`` cuts cross-pod
+gradient bytes 4x vs fp32 (2x vs bf16). Error feedback (Karimireddy et
+al.) accumulates the quantization residual locally and re-injects it the
+next step, which keeps SGD/Adam convergence (tested in
+tests/test_grad_compress.py against an uncompressed run).
+
+Inside jit the all-reduce itself is GSPMD's; this module provides the
+(de)quantizers and the error-feedback state threading, used by
+``train_loop`` when ``grad_compress_bits=8``.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_state(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress(g: jax.Array, err: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (q int8, scale, new_err). Per-tensor symmetric scale."""
+    gf = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    new_err = gf - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, err_state):
+    """Tree version: returns (quantized payload tree, scales, new errors).
+
+    The payload is what crosses the wire (int8); scales are tiny fp32
+    scalars reduced alongside."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err_state)
+    qs, scales, errs = [], [], []
+    for g, e in zip(flat_g, flat_e):
+        q, s, ne = compress(g, e)
+        qs.append(q)
+        scales.append(s)
+        errs.append(ne)
+    return (jax.tree.unflatten(treedef, qs),
+            jax.tree.unflatten(treedef, scales),
+            jax.tree.unflatten(treedef, errs))
+
+
+def decompress_tree(qs, scales):
+    return jax.tree.map(decompress, qs, scales)
+
+
+def roundtrip_tree(grads, err_state):
+    """compress+decompress in one step (what the all-reduce sees is the
+    int8 payload; numerically the reduced value equals this round trip
+    averaged across replicas)."""
+    qs, scales, errs = compress_tree(grads, err_state)
+    return decompress_tree(qs, scales), errs

@@ -1,0 +1,135 @@
+"""AdamW from scratch (no optax offline) + schedules + optional 8-bit
+optimizer-state quantization (beyond-paper: the paper's quantization theme
+applied to training state — halves the dominant memory term at 405B+).
+
+State layout mirrors the param tree, so the path-based sharding rules in
+``repro.parallel.sharding`` apply unchanged (ZeRO-style: m/v inherit the
+param's fully-sharded spec).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 2e-3              # paper's QABAS setting
+    b1: float = 0.9
+    b2: float = 0.999             # paper's beta
+    eps: float = 1e-8             # paper's epsilon
+    weight_decay: float = 0.01    # paper's weight decay
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    schedule: str = "cosine"      # "cosine" | "linear" | "const"
+    state_bits: int = 0           # 0 = fp32 m/v; 8 = int8-quantized m/v
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+    m_scale: Any                  # per-leaf scales when state_bits == 8
+    v_scale: Any
+
+
+def _q8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    s = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    return jnp.clip(jnp.round(x / s), -128, 127).astype(jnp.int8), s
+
+
+def _dq8(q: jax.Array, s: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * s
+
+
+def schedule_lr(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "cosine":
+        frac = jnp.clip((s - cfg.warmup_steps)
+                        / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+        decay = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    elif cfg.schedule == "linear":
+        frac = jnp.clip((s - cfg.warmup_steps)
+                        / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+        decay = 1.0 - frac
+    else:
+        decay = 1.0
+    return cfg.lr * warm * decay
+
+
+def init_opt_state(params, cfg: AdamWConfig) -> OptState:
+    # m and v must be INDEPENDENT trees — sharing buffers breaks donation
+    def zeros(dt):
+        return lambda p: jnp.zeros(p.shape, dt)
+    if cfg.state_bits == 8:
+        return OptState(jnp.zeros((), jnp.int32),
+                        jax.tree.map(zeros(jnp.int8), params),
+                        jax.tree.map(zeros(jnp.int8), params),
+                        jax.tree.map(lambda p: jnp.ones((), jnp.float32),
+                                     params),
+                        jax.tree.map(lambda p: jnp.ones((), jnp.float32),
+                                     params))
+    return OptState(jnp.zeros((), jnp.int32),
+                    jax.tree.map(zeros(jnp.float32), params),
+                    jax.tree.map(zeros(jnp.float32), params), None, None)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def adamw_update(params, grads, state: OptState, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics). Params may be bf16 — the
+    update math runs in fp32 and casts back."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state.step + 1
+    lr = schedule_lr(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    if cfg.state_bits == 8:
+        def upd(p, g, mq, vq, ms, vs):
+            gf = g.astype(jnp.float32)
+            m = cfg.b1 * _dq8(mq, ms) + (1 - cfg.b1) * gf
+            v = cfg.b2 * _dq8(vq, vs) + (1 - cfg.b2) * gf * gf
+            u = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+            pf = p.astype(jnp.float32)
+            pf = pf - lr * (u + cfg.weight_decay * pf)
+            nmq, nms = _q8(m)
+            nvq, nvs = _q8(v)
+            return pf.astype(p.dtype), nmq, nvq, nms, nvs
+
+        out = jax.tree.map(upd, params, grads, state.m, state.v,
+                           state.m_scale, state.v_scale)
+        newp = jax.tree.map(lambda t: t[0], out,
+                            is_leaf=lambda t: isinstance(t, tuple))
+        get = lambda i: jax.tree.map(lambda t: t[i], out,
+                                     is_leaf=lambda t: isinstance(t, tuple))
+        new_state = OptState(step, get(1), get(2), get(3), get(4))
+        return newp, new_state, {"grad_norm": gnorm, "lr": lr}
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * gf
+        v = cfg.b2 * v + (1 - cfg.b2) * gf * gf
+        u = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (u + cfg.weight_decay * pf)
+        return pf.astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    is_t = lambda t: isinstance(t, tuple)
+    newp = jax.tree.map(lambda t: t[0], out, is_leaf=is_t)
+    newm = jax.tree.map(lambda t: t[1], out, is_leaf=is_t)
+    newv = jax.tree.map(lambda t: t[2], out, is_leaf=is_t)
+    return newp, OptState(step, newm, newv, None, None), \
+        {"grad_norm": gnorm, "lr": lr}

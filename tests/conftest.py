@@ -1,0 +1,14 @@
+import warnings
+
+import pytest
+
+warnings.filterwarnings("ignore")
+
+# NOTE: do NOT set XLA_FLAGS / device-count here — smoke tests and benches
+# must see the real (single) CPU device; only launch/dryrun.py forces 512.
+
+
+@pytest.fixture(scope="session")
+def rng():
+    import jax
+    return jax.random.key(0)

@@ -1,0 +1,63 @@
+"""Attention execution variants must be numerically faithful to the
+default path (they are perf levers, not approximations — except bf16
+scores, which is bounded)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.lm.attention import blockwise_attn
+
+
+@pytest.fixture
+def qkv():
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.randn(2, 256, 4, 32), jnp.float32)
+    k = jnp.asarray(rng.randn(2, 256, 2, 32), jnp.float32)
+    v = jnp.asarray(rng.randn(2, 256, 2, 32), jnp.float32)
+    return q, k, v
+
+
+def _with_env(var, val, fn):
+    os.environ[var] = val
+    try:
+        return fn()
+    finally:
+        os.environ.pop(var, None)
+
+
+def test_triangular_schedule_exact(qkv):
+    q, k, v = qkv
+    ref = blockwise_attn(q, k, v, q_chunk=64, kv_chunk=64)
+    out = _with_env("REPRO_ATTN_TRI", "1",
+                    lambda: blockwise_attn(q, k, v, q_chunk=64, kv_chunk=64))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_triangular_with_offset(qkv):
+    q, k, v = qkv
+    qs = q[:, -64:]
+    ref = blockwise_attn(qs, k, v, q_offset=192, q_chunk=32, kv_chunk=32)
+    # tri path requires Sq == Sk; offset path covered by the default —
+    # assert the default offset semantics against a naive slice
+    full = blockwise_attn(q, k, v, q_chunk=32, kv_chunk=32)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(full[:, -64:]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_bf16_scores_bounded(qkv):
+    q, k, v = qkv
+    ref = blockwise_attn(q, k, v, q_chunk=64, kv_chunk=64)
+    out = _with_env("REPRO_ATTN_BF16", "1",
+                    lambda: blockwise_attn(q, k, v, q_chunk=64, kv_chunk=64))
+    assert float(jnp.max(jnp.abs(out - ref))) < 5e-2
+
+
+def test_qchunk_invariance(qkv):
+    q, k, v = qkv
+    a = blockwise_attn(q, k, v, q_chunk=32, kv_chunk=64)
+    b = blockwise_attn(q, k, v, q_chunk=128, kv_chunk=128)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)

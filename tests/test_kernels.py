@@ -1,0 +1,120 @@
+"""Pallas kernel validation: shape/dtype sweeps against the pure-jnp
+oracles (interpret mode on CPU; TPU is the target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quant.policy import quantize_tensor
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+@pytest.mark.parametrize("M,K,N", [(128, 128, 128), (256, 512, 128),
+                                   (128, 256, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_qmatmul(bits, M, K, N, dtype):
+    rng = np.random.RandomState(M + K + N + bits)
+    x = jnp.asarray(rng.randn(M, K), dtype)
+    w = jnp.asarray(rng.randn(K, N), jnp.float32)
+    pt = quantize_tensor(w, bits)
+    got = ops.qmatmul(x, pt)
+    want = ref.qmatmul_ref(x, pt.data, pt.scale.reshape(1, -1), bits=bits)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("Sq,Sk,H,Hkv,d",
+                         [(128, 128, 4, 4, 64), (256, 256, 4, 2, 64),
+                          (128, 256, 8, 1, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention(Sq, Sk, H, Hkv, d, causal):
+    if causal and Sq != Sk:
+        pytest.skip("causal requires square here")
+    rng = np.random.RandomState(Sq + H)
+    q = jnp.asarray(rng.randn(2, Sq, H, d), jnp.float32)
+    k = jnp.asarray(rng.randn(2, Sk, Hkv, d), jnp.float32)
+    v = jnp.asarray(rng.randn(2, Sk, Hkv, d), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=causal)
+    g = H // Hkv
+    qf = q.transpose(0, 2, 1, 3).reshape(2 * H, Sq, d)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), g, 1).reshape(2 * H, Sk, d)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), g, 1).reshape(2 * H, Sk, d)
+    want = ref.flash_attention_ref(qf, kf, vf, causal=causal) \
+        .reshape(2, H, Sq, d).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_flash_matches_model_blockwise():
+    """Kernel vs the XLA blockwise path used by the models."""
+    from repro.models.lm.attention import blockwise_attn
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.randn(2, 256, 4, 64), jnp.float32)
+    k = jnp.asarray(rng.randn(2, 256, 2, 64), jnp.float32)
+    v = jnp.asarray(rng.randn(2, 256, 2, 64), jnp.float32)
+    a = ops.flash_attention(q, k, v, causal=True)
+    b = blockwise_attn(q, k, v, causal=True, q_chunk=64, kv_chunk=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("T,C,k", [(256, 128, 9), (512, 128, 31),
+                                   (256, 256, 5)])
+def test_qconv1d_block(T, C, k):
+    rng = np.random.RandomState(T + C + k)
+    x = jnp.asarray(rng.randn(2, T, C), jnp.float32)
+    dw = quantize_tensor(jnp.asarray(rng.randn(k, C), jnp.float32), 8)
+    pw = quantize_tensor(jnp.asarray(rng.randn(C, C), jnp.float32), 8)
+    g = jnp.asarray(rng.rand(C), jnp.float32)
+    b = jnp.asarray(rng.randn(C), jnp.float32)
+    got = ops.qconv1d_block(x, dw, pw, g, b)
+    pad = (k - 1) // 2
+    xp = jnp.pad(x, ((0, 0), (pad, k - 1 - pad), (0, 0)))
+    want = ref.qconv1d_block_ref(xp, dw.data, pw.data,
+                                 dw.scale.reshape(1, -1),
+                                 pw.scale.reshape(1, -1), g, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("S,nh,hd,N,chunk", [(256, 2, 32, 16, 64),
+                                             (512, 4, 64, 32, 128),
+                                             (128, 2, 32, 16, 128)])
+def test_ssd_scan(S, nh, hd, N, chunk):
+    rng = np.random.RandomState(S + nh)
+    B = 2
+    x = jnp.asarray(rng.randn(B, S, nh, hd), jnp.float32)
+    dt = jnp.asarray(rng.rand(B, S, nh) * 0.1, jnp.float32)
+    A = -jnp.asarray(rng.rand(nh) + 0.5, jnp.float32)
+    Bm = jnp.asarray(rng.randn(B, S, N), jnp.float32)
+    Cm = jnp.asarray(rng.randn(B, S, N), jnp.float32)
+    D = jnp.ones(nh)
+    got = ops.ssd_chunk_scan(x, dt, A, Bm, Cm, D, chunk=chunk)
+    xr = x.transpose(0, 2, 1, 3).reshape(B * nh, S, hd)
+    dtr = dt.transpose(0, 2, 1).reshape(B * nh, S)
+    Br = jnp.repeat(Bm[:, None], nh, 1).reshape(B * nh, S, N)
+    Cr = jnp.repeat(Cm[:, None], nh, 1).reshape(B * nh, S, N)
+    want = ref.ssd_scan_ref(xr, dtr, jnp.tile(A, B), Br, Cr,
+                            jnp.tile(D, B)) \
+        .reshape(B, nh, S, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_ssd_kernel_matches_model_chunked():
+    """Pallas SSD == the model's pure-JAX ssd_chunked."""
+    from repro.models.lm.ssm import ssd_chunked
+    rng = np.random.RandomState(1)
+    B, S, nh, hd, N = 2, 256, 2, 32, 16
+    x = jnp.asarray(rng.randn(B, S, nh, hd), jnp.float32)
+    dt = jnp.asarray(rng.rand(B, S, nh) * 0.1, jnp.float32)
+    A = -jnp.asarray(rng.rand(nh) + 0.5, jnp.float32)
+    Bm = jnp.asarray(rng.randn(B, S, N), jnp.float32)
+    Cm = jnp.asarray(rng.randn(B, S, N), jnp.float32)
+    D = jnp.ones(nh)
+    a = ops.ssd_chunk_scan(x, dt, A, Bm, Cm, D, chunk=64)
+    b, _ = ssd_chunked(x, dt, A, Bm, Cm, D, chunk=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=5e-3, atol=5e-3)

@@ -1,0 +1,98 @@
+"""Quantization invariants (hypothesis property tests + paper sweeps)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.quant.fake_quant import fake_quant, quant_dequant_params
+from repro.core.quant.policy import (PackedTensor, dequantize, pack_int4,
+                                     quantize_tensor, quantize_tree,
+                                     tree_size_bytes, unpack_int4)
+from repro.config import QuantPolicy
+
+
+@given(st.integers(2, 16), st.integers(0, 10 ** 6))
+@settings(max_examples=40, deadline=None)
+def test_fake_quant_bounded_error(bits, seed):
+    """|x - q(x)| <= scale/2 = max|x| / (2^(b-1) - 1) / 2 everywhere."""
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(17, 9), jnp.float32)
+    q = fake_quant(x, bits)
+    amax = float(jnp.max(jnp.abs(x)))
+    step = amax / (2.0 ** (bits - 1) - 1)
+    assert float(jnp.max(jnp.abs(x - q))) <= step / 2 + 1e-6
+
+
+@given(st.integers(0, 10 ** 6))
+@settings(max_examples=20, deadline=None)
+def test_fake_quant_idempotent(seed):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(8, 8), jnp.float32)
+    q1 = fake_quant(x, 8)
+    q2 = fake_quant(q1, 8)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), atol=1e-6)
+
+
+def test_fake_quant_straight_through_gradient():
+    x = jnp.linspace(-1, 1, 32).reshape(4, 8)
+    g = jax.grad(lambda a: jnp.sum(fake_quant(a, 4) * 2))(x)
+    np.testing.assert_allclose(np.asarray(g), 2.0, atol=1e-6)
+
+
+@given(st.integers(1, 64), st.integers(1, 32), st.integers(0, 10 ** 6))
+@settings(max_examples=25, deadline=None)
+def test_int4_pack_roundtrip(rows2, cols, seed):
+    rng = np.random.RandomState(seed)
+    q = jnp.asarray(rng.randint(-8, 8, (2 * rows2, cols)), jnp.int8)
+    np.testing.assert_array_equal(np.asarray(unpack_int4(pack_int4(q))),
+                                  np.asarray(q))
+
+
+@pytest.mark.parametrize("bits,factor", [(8, 4.0), (4, 8.0)])
+def test_quantize_tensor_compression(bits, factor):
+    w = jnp.asarray(np.random.RandomState(0).randn(256, 128), jnp.float32)
+    pt = quantize_tensor(w, bits)
+    assert w.size * 4 / pt.nbytes > factor * 0.9
+    deq = dequantize(pt, jnp.float32)
+    step = float(jnp.max(jnp.abs(w))) / (2 ** (bits - 1) - 1)
+    assert float(jnp.max(jnp.abs(deq - w))) <= step * 1.01
+
+
+def test_quantize_tree_respects_policy_overrides():
+    params = {
+        "block00": {"pw": {"kernel": jnp.ones((64, 128))}},
+        "block20": {"pw": {"kernel": jnp.ones((64, 128))}},
+        "norm": {"scale": jnp.ones((128,))},
+    }
+    pol = QuantPolicy(weight_bits=8, act_bits=8,
+                      overrides=(("block2", (4, 4)),))
+    qt = quantize_tree(params, pol, min_size=16)
+    assert qt["block00"]["pw"]["kernel"].bits == 8
+    assert qt["block20"]["pw"]["kernel"].bits == 4
+    assert not isinstance(qt["norm"]["scale"], PackedTensor)
+    assert tree_size_bytes(qt) < tree_size_bytes(params) / 3
+
+
+def test_static_quant_sweep_accuracy_ordering(rng):
+    """Paper Fig. 7 direction: <8,8> ~ fp32; <3,2> collapses."""
+    from repro.config import get_config
+    from repro.models.basecaller import model as bc
+    from repro.models.basecaller.ctc import ctc_loss
+    from repro.models import api
+    cfg = get_config("bonito-smoke")
+    params = api.init_params(rng, cfg)
+    state = api.init_model_state(cfg)
+    batch = api.make_smoke_batch(rng, cfg, batch=2, seq=128)
+
+    def loss_with(bits):
+        p = quant_dequant_params(params, bits) if bits else params
+        lp, _ = bc.forward(p, state, batch["signal"], cfg, train=False)
+        return float(ctc_loss(lp, batch["labels"], batch["label_lengths"]))
+
+    l_fp = loss_with(0)
+    l_8 = loss_with(8)
+    l_3 = loss_with(3)
+    assert abs(l_8 - l_fp) < abs(l_3 - l_fp) + 1e-6
+    assert abs(l_8 - l_fp) / max(abs(l_fp), 1e-9) < 0.1

@@ -1,0 +1,156 @@
+"""RUBICON core behaviours: SkipClip schedule & equivalence, pruning
+sparsity/knee direction, QABAS space size & search mechanics, latency
+estimator monotonicity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_config
+from repro.core import pruning
+from repro.core.qabas.latency import expected_latency, latency_table, op_latency
+from repro.core.qabas.search import QABASConfig, derive_config, run_search
+from repro.core.qabas.space import DEFAULT_SPACE, TINY_SPACE, SearchSpace
+from repro.core.skipclip import (SkipClipConfig, gates_for_epoch,
+                                 make_skipclip_loss, strip_skip_params)
+from repro.models import api
+from repro.models.basecaller import model as bc
+
+
+# ---------------------------------------------------------------- SkipClip
+
+def test_gate_schedule_removes_from_input_side():
+    g0 = gates_for_epoch(5, 0, stride=1)
+    assert list(np.asarray(g0)) == [1, 1, 1, 1, 1]
+    g2 = gates_for_epoch(5, 2, stride=1)
+    assert list(np.asarray(g2)) == [0, 0, 1, 1, 1]
+    g_all = gates_for_epoch(5, 99, stride=1)
+    assert float(jnp.sum(g_all)) == 0
+    # stride 2 removes every other epoch
+    assert list(np.asarray(gates_for_epoch(5, 3, stride=2))) == [0, 0, 1, 1, 1]
+
+
+def test_zero_gates_equal_stripped_skips(rng):
+    cfg = get_config("bonito-smoke")
+    params = api.init_params(rng, cfg)
+    state = api.init_model_state(cfg)
+    sig = jax.random.normal(rng, (2, 96, 1))
+    gates = jnp.zeros((cfg.n_blocks,))
+    lp_gated, _ = bc.forward(params, state, sig, cfg, train=False,
+                             skip_gates=gates)
+    stripped = strip_skip_params(params)
+    # forward with gate=0 must equal a model with no skip branch at all
+    lp_none, _ = bc.forward(params, state, sig, cfg, train=False,
+                            skip_gates=jnp.zeros((cfg.n_blocks,)))
+    np.testing.assert_allclose(np.asarray(lp_gated), np.asarray(lp_none))
+    assert not any("skip_pw" in str(k) for k in
+                   jax.tree_util.tree_flatten_with_path(stripped)[0])
+
+
+def test_skipclip_step_trains(rng):
+    t_cfg = get_config("bonito-smoke")
+    s_cfg = get_config("rubicall-smoke")
+    t_params = api.init_params(rng, t_cfg)
+    t_state = api.init_model_state(t_cfg)
+    s_params = api.init_params(jax.random.fold_in(rng, 1), s_cfg)
+    s_state = api.init_model_state(s_cfg)
+    loss_fn = make_skipclip_loss(s_cfg, t_cfg, SkipClipConfig())
+    batch = api.make_smoke_batch(rng, s_cfg, batch=2, seq=96)
+    gates = gates_for_epoch(s_cfg.n_blocks, 1, stride=1)
+    (loss, (metrics, _)), grads = jax.value_and_grad(
+        loss_fn, has_aux=True)(s_params, s_state, t_params, t_state,
+                               batch, gates)
+    assert jnp.isfinite(loss)
+    assert max(float(jnp.max(jnp.abs(g)))
+               for g in jax.tree.leaves(grads)) > 0
+    assert metrics["kd"] >= 0
+
+
+# ---------------------------------------------------------------- Pruning
+
+def test_unstructured_sparsity_hits_target(rng):
+    cfg = get_config("rubicall-smoke")
+    params = api.init_params(rng, cfg)
+    for s in (0.3, 0.85):
+        mask = pruning.unstructured_mask(params, s)
+        got = pruning.sparsity_of(mask)
+        # global threshold over prunable leaves only -> overall sparsity is
+        # slightly below the target
+        assert s - 0.15 < got <= s + 0.02, (s, got)
+
+
+def test_structured_prunes_whole_channels(rng):
+    cfg = get_config("rubicall-smoke")
+    params = api.init_params(rng, cfg)
+    mask = pruning.structured_channel_mask(params, 0.5)
+    leaf = mask["block01"]["rep0"]["pw"]
+    col = np.asarray(leaf).reshape(-1, leaf.shape[-1])
+    onoff = col.max(0) - col.min(0)
+    assert np.all(onoff == 0)              # each channel fully on or off
+
+
+def test_pruned_model_still_runs_and_more_sparsity_hurts_more(rng):
+    cfg = get_config("rubicall-smoke")
+    params = api.init_params(rng, cfg)
+    state = api.init_model_state(cfg)
+    batch = api.make_smoke_batch(rng, cfg, batch=2, seq=128)
+    from repro.models.basecaller.ctc import ctc_loss
+
+    def loss_at(s):
+        p = pruning.apply_mask(params, pruning.unstructured_mask(params, s))
+        lp, _ = bc.forward(p, state, batch["signal"], cfg, train=False)
+        return float(ctc_loss(lp, batch["labels"], batch["label_lengths"]))
+
+    l0, l_mid, l_high = loss_at(0.0), loss_at(0.5), loss_at(0.98)
+    assert abs(l_mid - l0) <= abs(l_high - l0) + 0.5
+
+
+# ---------------------------------------------------------------- QABAS
+
+def test_search_space_scale_matches_paper():
+    assert DEFAULT_SPACE.size() > 1e30          # paper: ~1.8e32 viable
+    assert DEFAULT_SPACE.quant_size() > 1e15    # paper: ~6.7e20 from quant
+    small = SearchSpace(n_blocks=2, kernel_options=(3, 5),
+                        quant_options=((8, 8),), channel_options=(16,),
+                        repeats=1)
+    assert small.size() == (3 * 1) ** 2 * 1
+
+
+def test_latency_estimator_monotonic_in_bits():
+    lat16 = op_latency(9, 16, 16, chunk=2048, channels=344)
+    lat8 = op_latency(9, 8, 8, chunk=2048, channels=344)
+    assert lat8 < lat16
+    assert op_latency(0, 8, 8, chunk=2048, channels=344) == 0.0
+    tab = latency_table(DEFAULT_SPACE, chunk=2048, channels=344)
+    assert tab.shape == (DEFAULT_SPACE.n_ops, DEFAULT_SPACE.n_quant)
+
+
+def test_qabas_search_runs_and_derives_config(rng):
+    from repro.data.squiggle import SquiggleConfig, batches
+
+    def data():
+        for b in batches(SquiggleConfig(chunk_len=96), 2):
+            yield {k: jnp.asarray(v) for k, v in b.items()}
+
+    qc = QABASConfig(steps=3, channels=16, chunk=96, batch=2)
+    params, arch, hist = run_search(rng, TINY_SPACE, qc, data())
+    assert len(hist["w_loss"]) == 3
+    assert all(np.isfinite(hist["w_loss"]))
+    cfg = derive_config(arch, TINY_SPACE, channels=16)
+    assert cfg.family == "basecaller"
+    assert 1 <= cfg.n_blocks <= TINY_SPACE.n_blocks
+    # derived config is runnable
+    p = api.init_params(rng, cfg)
+    s = api.init_model_state(cfg)
+    lp, _ = bc.forward(p, s, jnp.zeros((1, 96, 1)), cfg, train=False)
+    assert lp.shape[-1] == 5
+
+
+def test_expected_latency_tracks_bit_probabilities():
+    tab = latency_table(TINY_SPACE, chunk=256, channels=16)
+    nb, no, nq = TINY_SPACE.n_blocks, TINY_SPACE.n_ops, TINY_SPACE.n_quant
+    a = jnp.ones((nb, no)) / no
+    low = jnp.zeros((nb, nq)).at[:, 0].set(1.0)   # <8,8>
+    high = jnp.zeros((nb, nq)).at[:, -1].set(1.0)  # <16,16>
+    assert float(expected_latency(a, low, tab)) < \
+        float(expected_latency(a, high, tab))

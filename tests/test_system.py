@@ -1,0 +1,90 @@
+"""End-to-end behaviour of the full system (the paper's workflow):
+QABAS-search -> derived model -> SkipClip distillation -> pruning ->
+quantized serving, plus properties of the data/align substrate."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.config import SHAPES, get_config, shape_applicable
+from repro.data.align import identity
+from repro.data.squiggle import SquiggleConfig, batches, make_batch, \
+    normalize, pore_table, simulate_read
+from repro.models import api
+
+
+def test_squiggle_shapes_and_labels():
+    cfg = SquiggleConfig(chunk_len=512)
+    b = make_batch(np.random.RandomState(0), cfg, pore_table(), 4)
+    assert b["signal"].shape == (4, 512, 1)
+    assert b["labels"].min() >= 0 and b["labels"].max() <= 4
+    assert np.all(b["label_lengths"] > 10)
+    # normalized chunks are centred
+    assert abs(np.median(b["signal"][0, :, 0])) < 0.5
+
+
+@given(st.integers(0, 10 ** 6))
+@settings(max_examples=10, deadline=None)
+def test_signal_length_tracks_dwell(seed):
+    rng = np.random.RandomState(seed)
+    cfg = SquiggleConfig()
+    sig, seq = simulate_read(rng, cfg, pore_table(), 100)
+    assert 100 * 4 < len(sig) < 100 * 20
+    assert len(seq) == 100
+
+
+def test_align_identity_properties():
+    a = np.array([1, 2, 3, 4, 1, 2, 3, 4], np.int32)
+    assert identity(a, a) == 1.0
+    b = a.copy(); b[3] = 3
+    assert 0.5 < identity(a, b) < 1.0
+    assert identity(a, a[:4]) < 1.0
+
+
+def test_full_rubicon_workflow(rng):
+    """The paper's pipeline end-to-end at smoke scale."""
+    from repro.core.qabas.search import QABASConfig, derive_config, run_search
+    from repro.core.qabas.space import TINY_SPACE
+    from repro.core.skipclip import SkipClipConfig, gates_for_epoch, \
+        make_skipclip_loss
+    from repro.core import pruning
+    from repro.core.quant.policy import quantize_tree, tree_size_bytes
+
+    def data():
+        for b in batches(SquiggleConfig(chunk_len=96), 2):
+            yield {k: jnp.asarray(v) for k, v in b.items()}
+
+    # 1. QABAS search
+    qc = QABASConfig(steps=2, channels=16, chunk=96)
+    _, arch, _ = run_search(rng, TINY_SPACE, qc, data())
+    student_cfg = derive_config(arch, TINY_SPACE, channels=16)
+
+    # 2. SkipClip distillation from a Bonito-style teacher
+    t_cfg = get_config("bonito-smoke")
+    t_params = api.init_params(rng, t_cfg)
+    t_state = api.init_model_state(t_cfg)
+    s_params = api.init_params(jax.random.fold_in(rng, 3), student_cfg)
+    s_state = api.init_model_state(student_cfg)
+    loss_fn = make_skipclip_loss(student_cfg, t_cfg, SkipClipConfig())
+    batch = next(data())
+    gates = gates_for_epoch(student_cfg.n_blocks, 2, 1)
+    loss, _ = loss_fn(s_params, s_state, t_params, t_state, batch, gates)
+    assert jnp.isfinite(loss)
+
+    # 3. prune + 4. quantize for serving
+    mask = pruning.unstructured_mask(s_params, 0.3)
+    pruned = pruning.apply_mask(s_params, mask)
+    q = quantize_tree(pruned, student_cfg.quant, min_size=64)
+    assert tree_size_bytes(q) < tree_size_bytes(s_params)
+
+
+def test_shape_applicability_matrix():
+    longs = [a for a in ("mamba2-130m", "hymba-1.5b")
+             if shape_applicable(get_config(a), SHAPES["long_500k"])]
+    assert longs == ["mamba2-130m", "hymba-1.5b"]
+    assert not shape_applicable(get_config("llama3-405b"),
+                                SHAPES["long_500k"])
+    for a in ("llama3-405b", "whisper-tiny"):
+        assert shape_applicable(get_config(a), SHAPES["decode_32k"])
