@@ -1,0 +1,212 @@
+"""Serving throughput: continuous batching vs the static-batch baseline.
+
+Workload: a burst of ``2 x slots`` variable-output-length requests (a
+2x-oversubscribed stream). The static baseline packs ``slots`` requests
+per batch and must decode every batch until its LONGEST member finishes
+— short requests burn slots as padding. The engine evicts finished
+requests and admits queued ones into the freed slots, so steady-state
+decode stays at full batch width. Useful-token throughput is the metric;
+per-request outputs are checked token-identical between the two paths
+(both are greedy over the same weights).
+
+Variants: fp32 weights and ``wbits 8`` packed-int8 serving (the engine
+consumes PackedTensor weights directly, dequant-on-read; the baseline
+serves the up-front dequantized copy — outputs must still match).
+
+Smoke mode (``run(emit)`` registry / CLI default) uses the qwen smoke
+config on CPU; ``--arch``/``--slots``/... scale it up on real hardware.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import get_config
+from repro.models import api
+from repro.models.lm import transformer as tfm
+from repro.serving.engine import Request, ServingEngine
+
+
+def make_workload(cfg, slots: int, oversub: int, prompt_len: int,
+                  max_tokens: int, seed: int = 0
+                  ) -> List[Tuple[List[int], int]]:
+    """(prompt, max_new) pairs; equal prompt lengths (static batching has
+    no un-padded way to mix prompt lengths — that asymmetry is the point),
+    output lengths spread wide so static batches straggle."""
+    rs = np.random.RandomState(seed)
+    n = slots * oversub
+    out = []
+    for _ in range(n):
+        prompt = rs.randint(1, cfg.vocab_size, size=prompt_len).tolist()
+        mnew = int(rs.randint(max(max_tokens // 8, 1), max_tokens + 1))
+        out.append((prompt, mnew))
+    return out
+
+
+def make_static_fns(cfg, cache_len):
+    """Jitted prefill + decode for the static path — built ONCE so warm
+    and timed passes share compilations."""
+    prefill = jax.jit(_prefill_fn(cfg, cache_len))
+    step = jax.jit(lambda p, c, tok, t: tfm.decode_step(p, c, tok, t, cfg))
+    return prefill, step
+
+
+def run_static(params, cfg, workload, slots: int, fns
+               ) -> Tuple[float, float, Dict[int, List[int]]]:
+    """Static batching: groups of `slots`, lockstep decode to the longest.
+
+    Returns (wall_s, decode_s, {request_index: tokens}). Tokens decoded
+    past a request's max_new are discarded — that slot waste (a batch
+    runs until its LONGEST member) is exactly the baseline's cost.
+    """
+    prefill, step = fns
+    outputs: Dict[int, List[int]] = {}
+    decode_s = 0.0
+    t0 = time.perf_counter()
+    for g0 in range(0, len(workload), slots):
+        group = workload[g0:g0 + slots]
+        P = len(group[0][0])
+        toks = jnp.asarray([p for p, _ in group], jnp.int32)
+        logits, caches = prefill(params, toks)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        outs = [[int(tok[i, 0])] for i in range(len(group))]
+        horizon = max(m for _, m in group)
+        d0 = time.perf_counter()
+        for i in range(horizon - 1):
+            logits, caches = step(params, caches, tok,
+                                  jnp.asarray(P + i, jnp.int32))
+            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            for b in range(len(group)):
+                outs[b].append(int(tok[b, 0]))
+        decode_s += time.perf_counter() - d0
+        for b, (_, mnew) in enumerate(group):
+            outputs[g0 + b] = outs[b][:mnew]
+    return time.perf_counter() - t0, decode_s, outputs
+
+
+def _prefill_fn(cfg, cache_len):
+    def fn(p, tk):
+        return tfm.prefill(p, tk, cfg, cache_len=cache_len,
+                           cache_dtype=jnp.dtype(cfg.dtype))
+    return fn
+
+
+def run_engine(engine: ServingEngine, workload
+               ) -> Tuple[float, Dict[int, List[int]]]:
+    """One full drain of the workload through an (already-built, possibly
+    warm) engine. Metrics are reset so each pass reports itself."""
+    from repro.serving.metrics import ServingMetrics
+    engine.metrics = ServingMetrics(engine.metrics.clock)
+    engine.completed = {}
+    t0 = time.perf_counter()
+    for i, (prompt, mnew) in enumerate(workload):
+        engine.submit(Request(rid=i, prompt=prompt, max_new_tokens=mnew))
+    done = engine.run()
+    dt = time.perf_counter() - t0
+    return dt, {i: r.out_tokens for i, r in done.items()}
+
+
+def bench(emit, arch: str = "qwen1.5-4b-smoke", slots: int = 4,
+          oversub: int = 2, prompt_len: int = 16, max_tokens: int = 24,
+          prefill_chunk: int = 8, wbits_list=(0, 8, 4)) -> None:
+    cfg = get_config(arch)
+    cache_len = prompt_len + max_tokens
+    base_params = api.init_params(jax.random.key(0), cfg)
+    workload = make_workload(cfg, slots, oversub, prompt_len, max_tokens)
+    useful = sum(m for _, m in workload)
+
+    for wbits in wbits_list:
+        if wbits:
+            # BOTH paths serve the packed storage (dequant-on-read), so
+            # the speedup isolates scheduling; packed-engine vs
+            # dequantized-static token parity is tests/test_serving.py.
+            from repro.launch.serve import quantize_for_serving
+            eng_params = static_params = quantize_for_serving(base_params,
+                                                              wbits)
+        else:
+            eng_params = static_params = base_params
+        tag = f"int{wbits}" if wbits else "fp32"
+
+        # build both paths' programs once; warm pass compiles, timed
+        # pass measures steady state
+        static_fns = make_static_fns(cfg, cache_len)
+        engine = ServingEngine(eng_params, cfg, n_slots=slots,
+                               cache_len=cache_len,
+                               prefill_chunk=prefill_chunk,
+                               cache_dtype=jnp.dtype(cfg.dtype))
+        run_static(static_params, cfg, workload, slots, static_fns)
+        run_engine(engine, workload)
+        # best-of-3 timed passes: per-step device time is sub-ms at smoke
+        # scale, so single passes are hostage to scheduler jitter
+        runs_s = [run_static(static_params, cfg, workload, slots,
+                             static_fns) for _ in range(3)]
+        dt_s = min(r[0] for r in runs_s)
+        dec_s = min(r[1] for r in runs_s)
+        out_s = runs_s[0][2]
+        runs_e = []
+        for _ in range(3):
+            dt, out_e = run_engine(engine, workload)
+            runs_e.append((dt, engine.metrics))
+        dt_e = min(r[0] for r in runs_e)
+        engine_metrics = max((m for _, m in runs_e),
+                             key=lambda m: m.summary()["decode_tokens_per_s"])
+
+        parity = all(out_e[i] == out_s[i] for i in range(len(workload)))
+        # Steady-state decode throughput: USEFUL tokens per second spent
+        # in decode steps. The static baseline spends decode time on
+        # already-finished slots (padding); the engine refills them. This
+        # is the apples-to-apples metric — it cancels per-dispatch
+        # overhead, compile noise and prefill cost, which at smoke scale
+        # otherwise dominate wall-clock.
+        useful_decode = useful - len(workload)   # token #1 is prefill's
+        dtps_s = useful_decode / max(dec_s, 1e-9)
+        m = engine_metrics.summary()
+        dtps_e = m["decode_tokens_per_s"]
+        tps_s, tps_e = useful / dt_s, useful / dt_e
+        emit(f"serving_static_{tag}", dec_s / useful_decode * 1e6,
+             f"decode={dtps_s:.1f}tok/s;wall={tps_s:.1f}tok/s")
+        emit(f"serving_engine_{tag}",
+             engine_metrics.decode_time * 1e6
+             / max(engine_metrics.decode_tokens, 1),
+             f"decode={dtps_e:.1f}tok/s;speedup={dtps_e/dtps_s:.2f}x;"
+             f"wall={tps_e:.1f}tok/s;"
+             f"parity={'ok' if parity else 'MISMATCH'};"
+             f"occupancy={m['slot_occupancy']:.2f}/{slots}")
+        if not parity:
+            raise AssertionError(f"{tag}: engine/static token mismatch")
+        if dtps_e <= dtps_s:
+            emit(f"serving_engine_{tag}__SLOWER", 0.0,
+                 f"{dtps_e:.1f}<={dtps_s:.1f}")
+
+
+def run(emit) -> None:
+    """benchmarks.run registry entry point (smoke scale)."""
+    bench(emit)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-4b-smoke")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--oversub", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=24)
+    ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--wbits", type=int, nargs="*", default=[0, 8, 4])
+    args = ap.parse_args()
+
+    def emit(name, us, derived=""):
+        print(f"{name},{us:.2f},{derived}")
+
+    bench(emit, arch=args.arch, slots=args.slots, oversub=args.oversub,
+          prompt_len=args.prompt_len, max_tokens=args.tokens,
+          prefill_chunk=args.prefill_chunk, wbits_list=tuple(args.wbits))
+
+
+if __name__ == "__main__":
+    main()

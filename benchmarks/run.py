@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV. Figure mapping:
   bench_skipclip    -> Fig. 13 (+ Supplementary S1)
   bench_throughput  -> Fig. 9/10 + Table S1 (v5e roofline projection)
   bench_roofline    -> EXPERIMENTS.md §Roofline table (dry-run artifacts)
+  bench_serving     -> continuous batching vs static batch (ROADMAP
+                       "heavy traffic" axis; not a paper figure)
 """
 import sys
 import traceback
@@ -18,11 +20,11 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
 def main() -> None:
     only = sys.argv[1] if len(sys.argv) > 1 else ""
     from benchmarks import (bench_pruning, bench_quant, bench_roofline,
-                            bench_skipclip, bench_throughput)
+                            bench_serving, bench_skipclip, bench_throughput)
     mods = {
         "quant": bench_quant, "pruning": bench_pruning,
         "skipclip": bench_skipclip, "throughput": bench_throughput,
-        "roofline": bench_roofline,
+        "roofline": bench_roofline, "serving": bench_serving,
     }
     for name, mod in mods.items():
         if only and only != name:

@@ -1,0 +1,51 @@
+"""JAX version compatibility shims.
+
+The repo pins a jax floor of 0.4.x but uses a few APIs that only exist
+in newer releases. Every version-dependent call routes through here so
+the rest of the codebase stays clean of ``hasattr`` litter:
+
+- ``jax.sharding.get_abstract_mesh`` (>= 0.5): the sharding-in-types
+  ambient mesh. On 0.4.x there is no abstract-mesh context at all, so
+  the fallback is simply ``None`` and callers degrade to the
+  thread-resources physical mesh (see ``models.lm.common._ambient_mesh``).
+- ``jax.sharding.AxisType`` (>= 0.5): explicit/auto axis types for
+  ``jax.make_mesh``. On 0.4.x every mesh axis is implicitly "auto", so
+  dropping the kwarg is semantically identical.
+- ``jax.make_mesh`` itself (>= 0.4.35): fall back to ``mesh_utils`` +
+  ``jax.sharding.Mesh`` for anything older.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+
+
+def get_abstract_mesh() -> Optional[Any]:
+    """``jax.sharding.get_abstract_mesh()`` or None where it doesn't exist.
+
+    Also returns None (rather than the empty mesh object newer JAX hands
+    back) when no abstract mesh is set, so callers can uniformly test
+    ``mesh is None``.
+    """
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is None:
+        return None
+    mesh = fn()
+    if mesh is None or getattr(mesh, "empty", True):
+        return None
+    return mesh
+
+
+def make_mesh(axis_shapes: Tuple[int, ...], axis_names: Tuple[str, ...]):
+    """``jax.make_mesh`` with auto axis types on every JAX we support."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    mk = getattr(jax, "make_mesh", None)
+    if mk is not None:
+        if axis_type is not None:
+            return mk(axis_shapes, axis_names,
+                      axis_types=(axis_type.Auto,) * len(axis_names))
+        return mk(axis_shapes, axis_names)
+    from jax.experimental import mesh_utils
+    devices = mesh_utils.create_device_mesh(axis_shapes)
+    return jax.sharding.Mesh(devices, axis_names)

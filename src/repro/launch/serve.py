@@ -1,11 +1,26 @@
-"""Serving launcher: batched autoregressive decode with optional
-weight-only quantization (the RUBICALL-MP idea applied to LM serving).
+"""Serving launcher: continuous-batching engine (default) or the legacy
+static-batch loop, with optional weight-only quantization (the
+RUBICALL-MP idea applied to LM serving).
 
-``python -m repro.launch.serve --arch qwen1.5-4b --smoke --tokens 32``
-runs prefill on a synthetic prompt batch, then a decode loop; ``--wbits
-8|4`` quantizes matmul weights to packed integers first (dequant-on-read,
-halving/quartering weight HBM traffic — see benchmarks/serve_quant.py
-for the roofline deltas).
+Engine path (default)
+---------------------
+``python -m repro.launch.serve --arch qwen1.5-4b --smoke --requests 8``
+replays a synthetic Poisson request stream (``--rate`` requests/s,
+variable prompt/output lengths) into :class:`repro.serving.ServingEngine`:
+requests queue on the host, a fixed pool of ``--slots`` decode slots
+admits them as capacity frees up, prompts prefill in ``--prefill-chunk``
+token chunks interleaved with decode steps, and JIT shapes never change.
+The run ends with a metrics summary (tokens/s, TTFT, queue depth).
+
+``--wbits 8|4`` serves from packed int8/int4 weights (dequant-on-read —
+halving/quartering weight HBM traffic; the Pallas ``qmatmul`` kernel is
+the TPU twin of this XLA path).
+
+Static path (``--static``)
+--------------------------
+The original single-shot loop: one fixed batch, prefill, then a Python
+greedy-decode loop. Kept as the baseline the engine is benchmarked
+against (benchmarks/bench_serving.py).
 """
 from __future__ import annotations
 
@@ -14,6 +29,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import QuantPolicy, get_config
 from repro.models import api
@@ -26,33 +42,67 @@ def quantize_for_serving(params, wbits: int):
     return quantize_tree(params, policy)
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen1.5-4b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--tokens", type=int, default=32)
-    ap.add_argument("--wbits", type=int, default=0)
-    args = ap.parse_args()
+def dequantize_tree(params, dtype):
+    """Up-front dequant (the static path's XLA fallback)."""
+    from repro.core.quant.policy import PackedTensor, dequantize
+    return jax.tree.map(
+        lambda l: dequantize(l, dtype) if isinstance(l, PackedTensor) else l,
+        params, is_leaf=lambda l: isinstance(l, PackedTensor))
 
-    cfg = get_config(args.arch + ("-smoke" if args.smoke else ""))
-    rng = jax.random.key(0)
-    params = api.init_params(rng, cfg)
-    if args.wbits:
-        # dequantize-on-load path for the XLA fallback; Pallas qmatmul is
-        # the TPU path (kernels/ops.py)
-        from repro.core.quant.policy import PackedTensor, dequantize, \
-            quantize_tree
-        qt = quantize_for_serving(params, args.wbits)
-        params = jax.tree.map(
-            lambda l: dequantize(l, jnp.dtype(cfg.dtype))
-            if isinstance(l, PackedTensor) else l, qt,
-            is_leaf=lambda l: isinstance(l, PackedTensor))
-        print(f"[serve] weights quantized to int{args.wbits} "
-              f"(packed storage; dequant-on-read)")
 
-    batch = api.make_smoke_batch(rng, cfg, args.batch, args.prompt_len)
+def build_request_stream(cfg, args, seed: int = 0):
+    """Synthetic Poisson arrivals with variable prompt/output lengths."""
+    from repro.serving.engine import Request
+    rs = np.random.RandomState(seed)
+    arrivals = np.cumsum(rs.exponential(1.0 / args.rate, size=args.requests))
+    reqs = []
+    for i in range(args.requests):
+        plen = int(rs.randint(max(args.prompt_len // 2, 1),
+                              args.prompt_len + 1))
+        mnew = int(rs.randint(max(args.tokens // 4, 1), args.tokens + 1))
+        prompt = rs.randint(1, cfg.vocab_size, size=plen).tolist()
+        reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=mnew,
+                            arrival_time=float(arrivals[i])))
+    return reqs
+
+
+def run_engine(params, cfg, args) -> None:
+    engine = api.make_serving_engine(
+        params, cfg, n_slots=args.slots, cache_len=args.cache_len,
+        prefill_chunk=args.prefill_chunk,
+        cache_dtype=jnp.dtype(cfg.dtype))
+    pending = build_request_stream(cfg, args)
+    print(f"[serve] engine: {args.requests} requests over "
+          f"{pending[-1].arrival_time:.2f}s (rate {args.rate}/s), "
+          f"{args.slots} slots, chunk {args.prefill_chunk}")
+    t0 = time.perf_counter()
+    i = 0
+    while i < len(pending) or engine.busy:
+        now = time.perf_counter() - t0
+        while i < len(pending) and pending[i].arrival_time <= now:
+            engine.submit(pending[i])
+            i += 1
+        if engine.busy:
+            engine.step()
+        elif i < len(pending):
+            time.sleep(min(pending[i].arrival_time - now, 0.01))
+    s = engine.metrics.summary()
+    print(f"[serve] done: {s['requests_done']} requests, "
+          f"{s['generated_tokens']} tokens in {s['elapsed_s']:.2f}s "
+          f"({s['tokens_per_s']:.1f} tok/s end-to-end, "
+          f"{s['decode_tokens_per_s']:.1f} tok/s decode)")
+    print(f"[serve] ttft mean {s['ttft_mean_s']*1e3:.0f}ms "
+          f"p95 {s['ttft_p95_s']*1e3:.0f}ms | queue depth "
+          f"max {s['queue_depth_max']} mean {s['queue_depth_mean']:.1f} | "
+          f"slot occupancy {s['slot_occupancy']:.2f}/{args.slots}")
+    sample = engine.completed[0].out_tokens[:16]
+    print("[serve] sample:", sample)
+
+
+def run_static(params, cfg, args) -> None:
+    """Legacy single-shot loop: one fixed batch, lockstep greedy decode."""
+    batch = api.make_smoke_batch(jax.random.key(0), cfg, args.slots,
+                                 args.prompt_len)
     cache_len = args.prompt_len + args.tokens + cfg.frontend_tokens
 
     kw = {}
@@ -66,7 +116,7 @@ def main():
     logits, caches = jax.jit(
         lambda p, tk: tfm.prefill(p, tk, cfg, cache_len=cache_len, **kw)
     )(params, batch["tokens"])
-    print(f"[serve] prefill {args.batch}x{args.prompt_len} in "
+    print(f"[serve] prefill {args.slots}x{args.prompt_len} in "
           f"{time.time()-t0:.2f}s")
 
     step = jax.jit(lambda p, c, tok, t: tfm.decode_step(p, c, tok, t, cfg))
@@ -81,10 +131,49 @@ def main():
         tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
         out_tokens.append(tok)
     dt = time.time() - t0
-    total = args.batch * (args.tokens - 1)
+    total = args.slots * (args.tokens - 1)
     print(f"[serve] decoded {total} tokens in {dt:.2f}s "
           f"({total/max(dt,1e-9):.1f} tok/s)")
     print("[serve] sample:", jnp.concatenate(out_tokens, 1)[0][:16])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-4b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--static", action="store_true",
+                    help="legacy static-batch loop instead of the engine")
+    ap.add_argument("--slots", "--batch", dest="slots", type=int, default=4,
+                    help="decode slots (engine) / batch size (static)")
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=32,
+                    help="max new tokens per request")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=16.0,
+                    help="Poisson arrival rate, requests/s")
+    ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--cache-len", type=int, default=0,
+                    help="per-slot KV capacity (0 = prompt+tokens)")
+    ap.add_argument("--wbits", type=int, default=0, choices=[0, 4, 8])
+    args = ap.parse_args()
+    if not args.cache_len:
+        args.cache_len = args.prompt_len + args.tokens
+
+    cfg = get_config(args.arch + ("-smoke" if args.smoke else ""))
+    params = api.init_params(jax.random.key(0), cfg)
+    if args.wbits:
+        params = quantize_for_serving(params, args.wbits)
+        if args.static:
+            # dequantize-on-load for the legacy path; the engine consumes
+            # packed weights directly (dequant-on-read in `dense`)
+            params = dequantize_tree(params, jnp.dtype(cfg.dtype))
+        print(f"[serve] weights quantized to int{args.wbits} "
+              f"(packed storage; dequant-on-read)")
+
+    if args.static:
+        run_static(params, cfg, args)
+    else:
+        run_engine(params, cfg, args)
 
 
 if __name__ == "__main__":

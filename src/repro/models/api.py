@@ -219,6 +219,12 @@ def make_decode_step(cfg: ModelConfig) -> Callable:
     return decode_step
 
 
+def make_serving_engine(params, cfg: ModelConfig, **kw):
+    """Continuous-batching engine over this model (repro.serving)."""
+    from repro.serving.engine import ServingEngine
+    return ServingEngine(params, cfg, **kw)
+
+
 # ---------------------------------------------------------------------------
 # Shape/dtype specs for AOT lowering (dry-run) & smoke batches
 

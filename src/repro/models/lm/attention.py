@@ -322,6 +322,76 @@ def fill_cache_from_prefill(cache: Dict, kv: Dict, t0: int = 0) -> Dict:
     return {"k": k, "v": v, "pos": parr, "window": cache["window"]}
 
 
+# Sentinel for "no token cached in this slot" — also what pads per-row
+# position vectors for inactive serving slots (any negative works: the
+# validity mask is pos >= 0).
+EMPTY_POS = -(10 ** 9)
+
+
+def init_attn_cache_slots(cfg: ModelConfig, batch: int, cache_len: int,
+                          *, window: int = 0, dtype=jnp.bfloat16) -> Dict:
+    """Slot-pool cache: like :func:`init_attn_cache` but positions are
+    tracked per batch row ((B, L) not (L,)) so every row can sit at a
+    different decode position — the layout continuous batching needs."""
+    Hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    L = min(window, cache_len) if window > 0 else cache_len
+    return {
+        "k": jnp.zeros((batch, L, Hkv, hd), dtype),
+        "v": jnp.zeros((batch, L, Hkv, hd), dtype),
+        "pos": jnp.full((batch, L), EMPTY_POS, jnp.int32),
+        "window": jnp.asarray(window, jnp.int32),
+    }
+
+
+def attn_decode_slots(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
+                      cfg: ModelConfig, *, window: int = 0
+                      ) -> Tuple[jax.Array, Dict]:
+    """Slot-batched decode: every batch row advances at its OWN position.
+
+    x: (B, C, d); t: (B, C) int32 per-token positions with ``t < 0``
+    marking padding (padding tokens write nothing into the cache — their
+    scatter index is clamped out of bounds and dropped — and their output
+    rows are garbage the caller must ignore). Two call shapes cover the
+    serving engine: C == 1 is the lockstep decode over all slots; C > 1
+    is one chunked-prefill step for a single slot (B == 1). Causality
+    within a chunk holds because KV is written before attending and the
+    mask compares cached positions against each query's position.
+    """
+    B, C, _ = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    group = H // Hkv
+    q, k_new, v_new = _project_qkv(p, x, jnp.maximum(t, 0), cfg)
+
+    L = cache["k"].shape[1]
+    slot = jnp.where(t >= 0, t % L, L)            # L is OOB -> mode="drop"
+    bidx = jnp.arange(B)[:, None]
+    k_new = constrain(k_new, P(BATCH_AXES, None, None, None))
+    v_new = constrain(v_new, P(BATCH_AXES, None, None, None))
+    k = cache["k"].at[bidx, slot].set(k_new.astype(cache["k"].dtype),
+                                      mode="drop")
+    v = cache["v"].at[bidx, slot].set(v_new.astype(cache["v"].dtype),
+                                      mode="drop")
+    pos = cache["pos"].at[bidx, slot].set(t, mode="drop")
+
+    seq_spec = P(BATCH_AXES, "model", None, None)
+    k = constrain(k, seq_spec)
+    v = constrain(v, seq_spec)
+    cdt = jnp.bfloat16 if jnp.dtype(k.dtype).itemsize == 1 else k.dtype
+    qg = q.reshape(B, C, Hkv, group, hd).astype(cdt)
+    s = jnp.einsum("bckgd,blkd->bckgl", qg, k.astype(cdt),
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    valid = (pos >= 0)[:, None, :] & (pos[:, None, :] <= t[:, :, None])
+    if window > 0:
+        valid &= pos[:, None, :] > (t[:, :, None] - window)
+    s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bckgl,blkd->bckgd", prob.astype(cdt), v.astype(cdt),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    o = o.reshape(B, C, H * hd)
+    out = dense(p["wo"], o, cfg=cfg, tag="attn/wo")
+    return out, {"k": k, "v": v, "pos": pos, "window": cache["window"]}
+
+
 def attn_decode(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
                 cfg: ModelConfig, *, window: int = 0) -> Tuple[jax.Array, Dict]:
     """One-token decode. x: (B, 1, d); t: current position (scalar int32)."""

@@ -151,10 +151,8 @@ def _ambient_mesh() -> Optional[Any]:
             return pm
     except Exception:
         pass
-    am = jax.sharding.get_abstract_mesh()
-    if am is not None and not am.empty:
-        return am
-    return None
+    from repro.compat import get_abstract_mesh
+    return get_abstract_mesh()
 
 
 def constrain(x: jax.Array, spec: P) -> jax.Array:

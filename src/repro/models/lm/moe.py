@@ -35,11 +35,19 @@ def make_moe_params(rng, cfg: ModelConfig) -> Params:
     return p
 
 
-def _top_k_dispatch(gates: jax.Array, k: int, capacity: int
+def _top_k_dispatch(gates: jax.Array, k: int, capacity: int,
+                    mask: jax.Array = None
                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """gates: (G, S, E) softmax probs. Returns (dispatch (G,S,E,C) bool-ish,
-    combine (G,S,E,C) f32, aux load-balance loss)."""
+    combine (G,S,E,C) f32, aux load-balance loss).
+
+    ``mask`` (G, S), 0 for padding tokens: masked tokens are excluded from
+    routing entirely — they consume no expert capacity and do not shift
+    other tokens' cumsum positions (the serving engine's pad slots must
+    not perturb live requests)."""
     G, S, E = gates.shape
+    if mask is not None:
+        gates = gates * mask.astype(gates.dtype)[..., None]
     combine = jnp.zeros((G, S, E, capacity), jnp.float32)
     dispatch = jnp.zeros((G, S, E, capacity), jnp.bool_)
     remaining = gates
@@ -50,6 +58,8 @@ def _top_k_dispatch(gates: jax.Array, k: int, capacity: int
     for _ in range(k):
         idx = jnp.argmax(remaining, axis=-1)           # (G, S)
         onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)
+        if mask is not None:
+            onehot = onehot * mask.astype(onehot.dtype)[..., None]
         prob = jnp.sum(gates * onehot, axis=-1)        # (G, S)
         pos = counts[:, None, :] + (jnp.cumsum(onehot, axis=1) - onehot)
         pos_tok = jnp.sum(pos * onehot, axis=-1)       # (G, S)
@@ -71,7 +81,8 @@ def _top_k_dispatch(gates: jax.Array, k: int, capacity: int
 
 def moe_ffn(p: Params, x: jax.Array, cfg: ModelConfig, *,
             capacity_factor: float = 1.25,
-            decode: bool = False) -> Tuple[jax.Array, jax.Array]:
+            decode: bool = False,
+            pad_mask: jax.Array = None) -> Tuple[jax.Array, jax.Array]:
     """x: (B, S, d) -> (y, aux_loss). Batch dim doubles as the GShard group.
 
     ``decode=True`` switches to weight-stationary sharding: the dispatched
@@ -83,19 +94,23 @@ def moe_ffn(p: Params, x: jax.Array, cfg: ModelConfig, *,
     B, S, d = x.shape
     E, k = cfg.n_experts, cfg.experts_per_tok
     dt = x.dtype
-    if decode and S == 1:
+    if decode and S == 1 and B > 1:
         # fold the batch into ONE dispatch group: capacity is provisioned
         # per (group x expert), so per-token groups waste E*4 slots per
         # token (128x at deepseek scale). One group -> slots ~ B*k*cf.
+        # (B == 1 is already a single group — folding it would recurse.)
         y, aux = moe_ffn(p, x.reshape(1, B, d), cfg,
-                         capacity_factor=capacity_factor, decode=True)
+                         capacity_factor=capacity_factor, decode=True,
+                         pad_mask=None if pad_mask is None
+                         else pad_mask.reshape(1, B))
         return y.reshape(B, S, d), aux
     capacity = max(int(math.ceil(S * k / E * capacity_factor)), 4)
 
     logits = dense(p["router"], x, cfg=cfg, tag="moe/router",
                    quantize=False).astype(jnp.float32)
     gates = jax.nn.softmax(logits, axis=-1)
-    dispatch, combine, aux = _top_k_dispatch(gates, k, capacity)
+    dispatch, combine, aux = _top_k_dispatch(gates, k, capacity,
+                                             mask=pad_mask)
 
     xe = jnp.einsum("gsec,gsd->egcd", dispatch.astype(dt), x)
     if decode:

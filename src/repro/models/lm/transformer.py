@@ -214,6 +214,43 @@ def block_decode(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
     return constrain(x + y, DECODE_RESID), nc
 
 
+# Layer kinds the slot-batched (continuous-batching) serving path covers.
+# SSM/MLA/xdec caches have no per-row position vector yet; the serving
+# engine refuses those archs up front (repro.serving.engine).
+SLOT_KINDS = ("dense", "moe")
+
+
+def supports_slot_serving(cfg: ModelConfig) -> bool:
+    # frontend archs (vlm/audio) have an all-dense layer plan but need a
+    # patch/frame prefix the token-only chunked prefill cannot feed
+    if cfg.frontend_tokens or cfg.family in ("vlm", "audio"):
+        return False
+    return all(kind in SLOT_KINDS for _, kind, _ in group_names(cfg))
+
+
+def block_decode_slots(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
+                       cfg: ModelConfig, kind: str) -> Tuple[jax.Array, Dict]:
+    """Per-slot-position variant of :func:`block_decode`. t: (B, C)."""
+    if kind not in SLOT_KINDS:
+        raise NotImplementedError(
+            f"slot-batched decode not implemented for block kind {kind!r}")
+    x = constrain(x, DECODE_RESID)
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    mix, nc = attn_mod.attn_decode_slots(p["attn"], h, cache, t, cfg)
+    x = constrain(x + mix, DECODE_RESID)
+    h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if kind == "moe":
+        # pad slots (t < 0) are masked out of expert dispatch so they
+        # consume no capacity — a live request's routing must not depend
+        # on how many neighbouring slots happen to be free
+        y, _ = moe_mod.moe_ffn(p["ffn"], h2, cfg, decode=x.shape[1] == 1,
+                               pad_mask=(t >= 0))
+    else:
+        y = mlp(p["ffn"], h2, cfg=cfg, tag="mlp",
+                hidden_spec=P(None, None, "model"))
+    return constrain(x + y, DECODE_RESID), nc
+
+
 def init_block_cache(cfg: ModelConfig, kind: str, batch: int,
                      cache_len: int, dtype=jnp.bfloat16):
     if kind in ("mla_dense", "mla_moe"):
@@ -423,6 +460,59 @@ def decode_step(params: Params, caches: Dict, tokens: jax.Array,
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = unembed(params, x, cfg)
     return logits, new_caches
+
+
+def decode_step_slots(params: Params, caches: Dict, tokens: jax.Array,
+                      t: jax.Array, cfg: ModelConfig,
+                      logits_at: Optional[jax.Array] = None
+                      ) -> Tuple[jax.Array, Dict]:
+    """Slot-batched decode/chunk step for the continuous-batching engine.
+
+    tokens: (B, C) int32; t: (B, C) per-token positions, -1 for padding
+    (pad rows produce garbage logits the engine ignores; their cache rows
+    are untouched). Unlike :func:`decode_step`, every batch row carries
+    its own position, so requests admitted at different times decode in
+    one lockstep batch without ever changing the JIT shape.
+
+    ``logits_at`` (traced scalar index): unembed only that sequence
+    position — chunked prefill reads a single token's logits, so the
+    other C-1 rows of the vocab matmul would be wasted work.
+    """
+    x = embed_tokens(params, jnp.maximum(tokens, 0), cfg)
+    new_caches: Dict[str, Any] = {}
+    for gname, kind, n in group_names(cfg):
+        pstack = params["groups"][gname]
+        cstack = caches[gname]
+
+        def step(xc, xs):
+            pl, cl = xs
+            xo, nc = block_decode_slots(pl, xc, cl, t, cfg, kind)
+            return xo, nc
+
+        x, ncache = jax.lax.scan(step, x, (pstack, cstack))
+        new_caches[gname] = ncache
+    if logits_at is not None:
+        x = jax.lax.dynamic_slice_in_dim(x, logits_at, 1, axis=1)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params, x, cfg)
+    return logits, new_caches
+
+
+def init_caches_slots(cfg: ModelConfig, batch: int, cache_len: int,
+                      cache_dtype=jnp.bfloat16) -> Dict:
+    """Empty slot-pool caches (per-row positions) for the serving engine."""
+    caches: Dict[str, Any] = {}
+    for gname, kind, n in group_names(cfg):
+        if kind not in SLOT_KINDS:
+            raise NotImplementedError(
+                f"slot cache pool not implemented for block kind {kind!r}")
+
+        def one(_):
+            return attn_mod.init_attn_cache_slots(
+                cfg, batch, cache_len, window=_block_window(cfg, kind),
+                dtype=cache_dtype)
+        caches[gname] = jax.vmap(one)(jnp.arange(n))
+    return caches
 
 
 def init_caches(cfg: ModelConfig, batch: int, cache_len: int,

@@ -1,0 +1,61 @@
+"""Continuous-batching serving engine.
+
+Scheduler design (slot-based continuous batching, fixed JIT shapes)
+===================================================================
+
+The engine serves variable-length autoregressive requests at a fixed
+device footprint. All shape-polymorphism lives on the host; the device
+only ever sees two compiled programs:
+
+``decode``   ``decode_step_slots(params, pool, tokens (B,1), t (B,1))``
+             — one lockstep token for all B slots. Each row carries its
+             OWN position (the pool cache tracks ``pos`` per row), so
+             rows admitted at different times coexist in one batch.
+             Inactive rows are padded with ``t = -1``: they write
+             nothing into the cache (their scatter index is dropped)
+             and their logits are ignored.
+
+``chunk``    the same kernel at shape ``(1, C)`` applied to a single
+             slot row gathered out of the pool — one chunked-prefill
+             step. Prompts are processed ``C`` tokens at a time and the
+             scheduler interleaves at most one chunk per slot between
+             decode steps, bounding how long a long prompt can stall
+             token generation for already-running requests (the
+             classic prefill/decode interference fix).
+
+Slot lifecycle
+--------------
+
+1. **Admit** — a request is popped from the FIFO queue into a free
+   slot. The slot's cache row is reset in place (its per-row ``pos``
+   vector is overwritten with the empty sentinel via
+   ``lax.dynamic_update_slice`` — KV bytes are left stale and masked
+   out, so a reset is O(L) position words, not O(L·H·hd) cache bytes).
+2. **Prefill** — the prompt streams through ``chunk`` steps; KV lands
+   directly in the slot's rows of the pool. The final chunk's logits
+   (taken at the last real token) yield the first generated token
+   (TTFT is recorded here).
+3. **Decode** — the slot joins the lockstep ``decode`` batch until it
+   emits ``max_new_tokens`` tokens (or EOS).
+4. **Evict** — the slot is freed and the next queued request is
+   admitted into it on the following scheduler tick. JIT shapes never
+   change throughout.
+
+Because the decode batch shape is pinned at ``n_slots``, oversubscribed
+traffic (more requests than slots) queues on the host and drains into
+freed slots — steady-state decode throughput stays at the full-batch
+rate instead of draining to the stragglers' rate, which is where the
+throughput win over static batching comes from (bench_serving.py).
+
+Support matrix: token-only attention-family stacks (layer kinds
+``dense`` / ``moe``; MoE pad slots are masked out of expert dispatch so
+free slots never perturb live requests). SSM/MLA/hybrid caches have no
+per-row position vector yet, and vlm/audio archs need a frontend prefix
+the token-only chunked prefill cannot feed — ``ServingEngine`` raises
+for all of those (ROADMAP open item).
+"""
+from repro.serving.cache import CachePool
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.metrics import ServingMetrics
+
+__all__ = ["CachePool", "Request", "ServingEngine", "ServingMetrics"]

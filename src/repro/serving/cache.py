@@ -1,0 +1,112 @@
+"""Slot-indexed KV-cache pool for the continuous-batching engine.
+
+The pool is the ``tfm.init_caches_slots`` pytree: per layer group, a
+stack of per-layer caches whose leaves carry ``(n_layers, B, ...)`` with
+the slot (batch-row) axis at position 1 and a per-row position vector
+``pos: (n_layers, B, L)``. Three in-place row operations, all built on
+``lax.dynamic_slice`` / ``lax.dynamic_update_slice`` with the slot index
+as a traced scalar so each compiles exactly once:
+
+- ``gather_row``  — slice one slot's row out of every leaf (the (1, C)
+  chunked-prefill step runs on this row tree);
+- ``scatter_row`` — write an updated row tree back into the pool;
+- ``reset_row``   — overwrite only the row's ``pos`` vector with the
+  empty sentinel. KV bytes stay stale but masked-invalid, so slot
+  recycling costs O(L) int32 writes instead of O(L * Hkv * hd) bytes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.lm.attention import EMPTY_POS
+from repro.models.lm import transformer as tfm
+
+
+def _tree_gather_row(pool, slot):
+    """Slice row `slot` (length-1) off axis 1 of every stacked leaf.
+
+    Leaves with ndim < 2 (the per-layer ``window`` scalars, stacked to
+    (n_layers,)) have no slot axis and pass through whole.
+    """
+    def one(leaf):
+        if leaf.ndim < 2:
+            return leaf
+        return jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=1)
+    return jax.tree.map(one, pool)
+
+
+def _tree_scatter_row(pool, row, slot):
+    def one(dst, src):
+        if dst.ndim < 2:
+            return dst
+        return jax.lax.dynamic_update_slice_in_dim(
+            dst, src.astype(dst.dtype), slot, axis=1)
+    return jax.tree.map(one, pool, row)
+
+
+def _tree_mask_fresh(row, fresh):
+    """Conditionally invalidate a gathered row tree: where ``fresh`` is
+    nonzero, every ``pos`` leaf becomes EMPTY_POS (a select, not a write
+    — this folds slot recycling into the first prefill chunk so admission
+    costs zero extra device dispatches)."""
+    def walk(node):
+        if not isinstance(node, dict):
+            return node
+        out = {}
+        for key, val in node.items():
+            if key == "pos":
+                out[key] = jnp.where(fresh > 0,
+                                     jnp.full_like(val, EMPTY_POS), val)
+            else:
+                out[key] = walk(val)
+        return out
+    return walk(row)
+
+
+def _tree_reset_row(pool, slot):
+    """Invalidate one slot: pos row -> EMPTY_POS (keys named 'pos')."""
+    def walk(node):
+        if not isinstance(node, dict):
+            return node
+        out = {}
+        for key, val in node.items():
+            if key == "pos":
+                empty = jnp.full(val.shape[:1] + (1,) + val.shape[2:],
+                                 EMPTY_POS, val.dtype)
+                out[key] = jax.lax.dynamic_update_slice_in_dim(
+                    val, empty, slot, axis=1)
+            else:
+                out[key] = walk(val)
+        return out
+    return walk(pool)
+
+
+class CachePool:
+    """Device-resident slot pool + its jitted row operations."""
+
+    def __init__(self, cfg: ModelConfig, n_slots: int, cache_len: int,
+                 cache_dtype=jnp.bfloat16):
+        self.cfg = cfg
+        self.n_slots = int(n_slots)
+        self.cache_len = int(cache_len)
+        self.caches: Dict[str, Any] = tfm.init_caches_slots(
+            cfg, n_slots, cache_len, cache_dtype=cache_dtype)
+        self._reset = jax.jit(_tree_reset_row)
+
+    def reset_slot(self, slot: int) -> None:
+        self.caches = self._reset(self.caches, jnp.asarray(slot, jnp.int32))
+
+    # Functional row ops (used inside the engine's jitted chunk step so
+    # gather -> model -> scatter fuses into one program).
+    gather_row = staticmethod(_tree_gather_row)
+    scatter_row = staticmethod(_tree_scatter_row)
+    mask_fresh = staticmethod(_tree_mask_fresh)
+
+    def nbytes(self) -> int:
+        return sum(leaf.size * leaf.dtype.itemsize
+                   for leaf in jax.tree.leaves(self.caches))

@@ -1,0 +1,228 @@
+"""Continuous-batching scheduler: request queue -> slot pool -> tokens.
+
+See ``repro.serving.__init__`` for the design. The engine is pure
+host-side control flow around two jitted device programs (a lockstep
+``(B, 1)`` decode over all slots and a ``(1, C)`` chunked-prefill step
+for one slot), so every scheduling decision — admission, eviction,
+prefill/decode interleave — costs zero retraces.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable, Deque, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models.lm import transformer as tfm
+from repro.serving.cache import CachePool
+from repro.serving.metrics import ServingMetrics
+
+FREE, PREFILL, DECODE = "free", "prefill", "decode"
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request. ``out_tokens`` fills as the engine runs."""
+    rid: int
+    prompt: Sequence[int]
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    arrival_time: float = 0.0          # virtual arrival (Poisson replay)
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        if len(self.out_tokens) >= self.max_new_tokens:
+            return True
+        return (self.eos_id is not None and len(self.out_tokens) > 0
+                and self.out_tokens[-1] == self.eos_id)
+
+
+@dataclasses.dataclass
+class _Slot:
+    state: str = FREE
+    req: Optional[Request] = None
+    pos: int = 0                       # tokens already written to the cache
+    pending: List[int] = dataclasses.field(default_factory=list)
+    last_token: int = 0                # next decode input
+    fresh: bool = False                # first chunk must invalidate the row
+
+
+class ServingEngine:
+    """Slot-based continuous batching over ``decode_step_slots``.
+
+    Dense archs decode bit-identically to the one-shot path regardless
+    of scheduling. MoE archs mask pad slots out of expert dispatch (they
+    consume no capacity), but token-choice routing still depends on which
+    LIVE requests share the capacity pool — the same composition effect
+    the one-shot MoE paths document in tests/test_decode.py.
+
+    Parameters
+    ----------
+    params, cfg : the model (token-only attention-family archs — layer
+        kinds ``dense``/``moe``; SSM/MLA/frontend pools are ROADMAP
+        items).
+    n_slots : decode batch size (fixed for the engine's lifetime).
+    cache_len : per-slot KV capacity; every admitted request must fit
+        ``len(prompt) + max_new_tokens <= cache_len``.
+    prefill_chunk : tokens per chunked-prefill step. The scheduler runs
+        at most one chunk per slot between decode steps.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 4,
+                 cache_len: int = 256, prefill_chunk: int = 16,
+                 cache_dtype=jnp.bfloat16,
+                 clock: Callable[[], float] = time.perf_counter):
+        if not tfm.supports_slot_serving(cfg):
+            kinds = sorted({k for _, k, _ in tfm.group_names(cfg)})
+            raise NotImplementedError(
+                f"continuous batching needs a token-only arch with layer "
+                f"kinds in {tfm.SLOT_KINDS}; {cfg.name} has "
+                f"family={cfg.family!r}, kinds={kinds}, "
+                f"frontend_tokens={cfg.frontend_tokens}")
+        self.params = params
+        self.cfg = cfg
+        self.n_slots = int(n_slots)
+        self.cache_len = int(cache_len)
+        self.prefill_chunk = int(prefill_chunk)
+        self.pool = CachePool(cfg, n_slots, cache_len, cache_dtype)
+        self.metrics = ServingMetrics(clock)
+        self.queue: Deque[Request] = deque()
+        self.slots = [_Slot() for _ in range(self.n_slots)]
+        # rid admission order per slot — observability + slot-reuse tests
+        self.slot_history: List[List[int]] = [[] for _ in range(self.n_slots)]
+        self.completed: Dict[int, Request] = {}
+
+        # Greedy argmax happens on-device inside the jitted programs: the
+        # host sees token ids, not (B,1,vocab) logits — one dispatch and
+        # a tiny transfer per tick. The chunk step unembeds only the
+        # requested position (`logits_at`); the other C-1 vocab-matmul
+        # rows would be discarded by the scheduler anyway. The pool is
+        # donated: the scatter updates alias the input buffers instead of
+        # copying the whole KV pool every step.
+        def _decode_fn(p, pool, tok, t):
+            logits, npool = tfm.decode_step_slots(p, pool, tok, t, cfg)
+            return jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32), \
+                npool
+
+        def _chunk_fn(p, pool, tok, t, slot, fresh, last):
+            row = CachePool.gather_row(pool, slot)
+            row = CachePool.mask_fresh(row, fresh)   # recycle slot in-chunk
+            logits, nrow = tfm.decode_step_slots(p, row, tok, t, cfg,
+                                                 logits_at=last)
+            return jnp.argmax(logits[0, 0]).astype(jnp.int32), \
+                CachePool.scatter_row(pool, nrow, slot)
+
+        self._decode = jax.jit(_decode_fn, donate_argnums=(1,))
+        self._chunk = jax.jit(_chunk_fn, donate_argnums=(1,))
+
+    # ------------------------------------------------------------ intake
+    def submit(self, req: Request) -> None:
+        need = len(req.prompt) + req.max_new_tokens
+        if not req.prompt:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if need > self.cache_len:
+            raise ValueError(
+                f"request {req.rid}: prompt+max_new = {need} exceeds "
+                f"cache_len {self.cache_len}")
+        self.metrics.record_arrival(req.rid, len(req.prompt))
+        self.queue.append(req)
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue) or any(s.state != FREE for s in self.slots)
+
+    @property
+    def n_active(self) -> int:
+        return sum(s.state != FREE for s in self.slots)
+
+    # --------------------------------------------------------- scheduler
+    def step(self) -> None:
+        """One scheduler tick: admit -> one prefill chunk/slot -> decode."""
+        self._admit()
+        self._prefill_tick()
+        self._decode_tick()
+        self.metrics.record_step(len(self.queue), self.n_active)
+
+    def run(self) -> Dict[int, Request]:
+        """Drain queue + slots to completion; returns completed requests."""
+        while self.busy:
+            self.step()
+        return self.completed
+
+    def _admit(self) -> None:
+        for i, slot in enumerate(self.slots):
+            if slot.state != FREE or not self.queue:
+                continue
+            req = self.queue.popleft()
+            slot.state = PREFILL
+            slot.req = req
+            slot.pos = 0
+            slot.pending = list(req.prompt)
+            slot.fresh = True           # row invalidated by the 1st chunk
+            self.slot_history[i].append(req.rid)
+            self.metrics.record_admit(req.rid)
+
+    def _prefill_tick(self) -> None:
+        C = self.prefill_chunk
+        for i, slot in enumerate(self.slots):
+            if slot.state != PREFILL:
+                continue
+            chunk = slot.pending[:C]
+            slot.pending = slot.pending[C:]
+            n = len(chunk)
+            tok = np.zeros((1, C), np.int32)
+            tok[0, :n] = chunk
+            t = np.full((1, C), -1, np.int32)
+            t[0, :n] = slot.pos + np.arange(n)
+            tok0, self.pool.caches = self._chunk(
+                self.params, self.pool.caches, tok, t,
+                np.int32(i), np.int32(slot.fresh), np.int32(n - 1))
+            slot.fresh = False
+            slot.pos += n
+            self.metrics.record_prefill(n)
+            if slot.pending:
+                continue
+            # prompt fully cached: last real token's argmax is token #1
+            first = int(tok0)
+            slot.req.out_tokens.append(first)
+            self.metrics.record_first_token(slot.req.rid)
+            slot.last_token = first
+            slot.state = DECODE
+            if slot.req.done:           # max_new_tokens == 1 (or EOS)
+                self._finish(i)
+
+    def _decode_tick(self) -> None:
+        live = [i for i, s in enumerate(self.slots) if s.state == DECODE]
+        if not live:
+            return
+        tok = np.zeros((self.n_slots, 1), np.int32)
+        t = np.full((self.n_slots, 1), -1, np.int32)
+        for i in live:
+            tok[i, 0] = self.slots[i].last_token
+            t[i, 0] = self.slots[i].pos
+        t0 = self.metrics.clock()
+        toks, self.pool.caches = self._decode(
+            self.params, self.pool.caches, tok, t)
+        nxt = np.asarray(toks)                                  # syncs
+        self.metrics.record_decode(len(live), self.metrics.clock() - t0)
+        for i in live:
+            slot = self.slots[i]
+            slot.pos += 1               # last_token now cached at pos
+            token = int(nxt[i])
+            slot.req.out_tokens.append(token)
+            slot.last_token = token
+            if slot.req.done:
+                self._finish(i)
+
+    def _finish(self, i: int) -> None:
+        slot = self.slots[i]
+        req = slot.req
+        self.metrics.record_done(req.rid, len(req.out_tokens))
+        self.completed[req.rid] = req
+        self.slots[i] = _Slot()         # back to FREE; reset at next admit

@@ -1,0 +1,117 @@
+"""Serving metrics: per-request latency, aggregate throughput, queue depth.
+
+Everything is host-side bookkeeping around an injectable clock (tests
+pass a fake clock for determinism). ``summary()`` condenses to the
+numbers the CLI / bench print: decode tokens/s, time-to-first-token
+percentiles, queue depth, slot occupancy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class RequestTimes:
+    rid: int
+    n_prompt: int = 0
+    arrival: Optional[float] = None
+    admit: Optional[float] = None
+    first_token: Optional[float] = None
+    done: Optional[float] = None
+    n_generated: int = 0
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.first_token is None or self.arrival is None:
+            return None
+        return self.first_token - self.arrival
+
+
+def _pct(xs: List[float], q: float) -> float:
+    if not xs:
+        return float("nan")
+    s = sorted(xs)
+    i = min(int(q * (len(s) - 1) + 0.5), len(s) - 1)
+    return s[i]
+
+
+class ServingMetrics:
+    def __init__(self, clock: Callable[[], float] = time.perf_counter):
+        self.clock = clock
+        self.requests: Dict[int, RequestTimes] = {}
+        self.queue_depth_samples: List[int] = []
+        self.active_samples: List[int] = []
+        self.decode_steps = 0
+        self.decode_tokens = 0          # useful (non-pad) tokens decoded
+        self.decode_time = 0.0
+        self.prefill_chunks = 0
+        self.prefill_tokens = 0
+        self.start_time: Optional[float] = None
+        self.end_time: Optional[float] = None
+
+    # ---------------------------------------------------------- events
+    def _req(self, rid: int) -> RequestTimes:
+        if rid not in self.requests:
+            self.requests[rid] = RequestTimes(rid)
+        return self.requests[rid]
+
+    def record_arrival(self, rid: int, n_prompt: int) -> None:
+        if self.start_time is None:
+            self.start_time = self.clock()
+        r = self._req(rid)
+        r.arrival = self.clock()
+        r.n_prompt = n_prompt
+
+    def record_admit(self, rid: int) -> None:
+        self._req(rid).admit = self.clock()
+
+    def record_first_token(self, rid: int) -> None:
+        self._req(rid).first_token = self.clock()
+
+    def record_done(self, rid: int, n_generated: int) -> None:
+        r = self._req(rid)
+        r.done = self.end_time = self.clock()
+        r.n_generated = n_generated
+
+    def record_step(self, queue_depth: int, n_active: int) -> None:
+        self.queue_depth_samples.append(queue_depth)
+        self.active_samples.append(n_active)
+
+    def record_decode(self, n_tokens: int, dt: float) -> None:
+        self.decode_steps += 1
+        self.decode_tokens += n_tokens
+        self.decode_time += dt
+
+    def record_prefill(self, n_tokens: int) -> None:
+        self.prefill_chunks += 1
+        self.prefill_tokens += n_tokens
+
+    # --------------------------------------------------------- summary
+    def summary(self) -> Dict[str, float]:
+        done = [r for r in self.requests.values() if r.done is not None]
+        gen = sum(r.n_generated for r in done)
+        elapsed = ((self.end_time or self.clock())
+                   - (self.start_time or 0.0)) if self.start_time else 0.0
+        ttfts = [r.ttft for r in done if r.ttft is not None]
+        return {
+            "requests_done": len(done),
+            "generated_tokens": gen,
+            "elapsed_s": elapsed,
+            "tokens_per_s": gen / elapsed if elapsed > 0 else 0.0,
+            "decode_tokens_per_s": (self.decode_tokens / self.decode_time
+                                    if self.decode_time > 0 else 0.0),
+            "decode_steps": self.decode_steps,
+            "prefill_chunks": self.prefill_chunks,
+            "prefill_tokens": self.prefill_tokens,
+            "ttft_mean_s": (sum(ttfts) / len(ttfts)) if ttfts else float("nan"),
+            "ttft_p95_s": _pct(ttfts, 0.95),
+            "queue_depth_max": max(self.queue_depth_samples, default=0),
+            "queue_depth_mean": (sum(self.queue_depth_samples)
+                                 / len(self.queue_depth_samples)
+                                 if self.queue_depth_samples else 0.0),
+            "slot_occupancy": (sum(self.active_samples)
+                               / len(self.active_samples)
+                               if self.active_samples else 0.0),
+        }

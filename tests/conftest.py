@@ -4,6 +4,12 @@ import pytest
 
 warnings.filterwarnings("ignore")
 
+try:                                    # optional extra (requirements.txt)
+    import hypothesis  # noqa: F401
+except ImportError:                     # degrade to a fixed-example runner
+    from _hypothesis_fallback import install
+    install()
+
 # NOTE: do NOT set XLA_FLAGS / device-count here — smoke tests and benches
 # must see the real (single) CPU device; only launch/dryrun.py forces 512.
 
