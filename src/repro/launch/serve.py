@@ -12,6 +12,14 @@ admits them as capacity frees up, prompts prefill in ``--prefill-chunk``
 token chunks interleaved with decode steps, and JIT shapes never change.
 The run ends with a metrics summary (tokens/s, TTFT, queue depth).
 
+Any token-only arch serves — attention (qwen, llama3, ...), MoE
+(granite), SSM (``--arch mamba2-130m``), hybrid (``--arch hymba-1.5b``)
+and MLA/MoE (``--arch deepseek-v3-671b``): every cache kind carries
+per-row positions, so requests admitted at different times share one
+lockstep batch. ``--eos-id`` marks a stop token on every request
+(greedy decode ends early when it's emitted), which exercises
+early-eviction slot recycling under the Poisson stream.
+
 ``--wbits 8|4`` serves from packed int8/int4 weights (dequant-on-read —
 halving/quartering weight HBM traffic; the Pallas ``qmatmul`` kernel is
 the TPU twin of this XLA path).
@@ -55,6 +63,7 @@ def build_request_stream(cfg, args, seed: int = 0):
     from repro.serving.engine import Request
     rs = np.random.RandomState(seed)
     arrivals = np.cumsum(rs.exponential(1.0 / args.rate, size=args.requests))
+    eos = args.eos_id if args.eos_id >= 0 else None
     reqs = []
     for i in range(args.requests):
         plen = int(rs.randint(max(args.prompt_len // 2, 1),
@@ -62,7 +71,7 @@ def build_request_stream(cfg, args, seed: int = 0):
         mnew = int(rs.randint(max(args.tokens // 4, 1), args.tokens + 1))
         prompt = rs.randint(1, cfg.vocab_size, size=plen).tolist()
         reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=mnew,
-                            arrival_time=float(arrivals[i])))
+                            eos_id=eos, arrival_time=float(arrivals[i])))
     return reqs
 
 
@@ -152,6 +161,10 @@ def main():
     ap.add_argument("--rate", type=float, default=16.0,
                     help="Poisson arrival rate, requests/s")
     ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--eos-id", type=int, default=-1,
+                    help="stop-token id for every request (engine path; "
+                         "-1 = none). Requests end early when the greedy "
+                         "token equals it — exercises early slot recycling")
     ap.add_argument("--cache-len", type=int, default=0,
                     help="per-slot KV capacity (0 = prompt+tokens)")
     ap.add_argument("--wbits", type=int, default=0, choices=[0, 4, 8])

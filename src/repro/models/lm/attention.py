@@ -304,6 +304,12 @@ def cache_specs(window: int = 0):
             "pos": P(None), "window": P()}
 
 
+def attn_cache_reset_spec():
+    """Per-leaf slot-recycle action (see repro.serving.cache): KV bytes
+    stay stale-but-masked; only positions are invalidated (O(L) words)."""
+    return {"k": "keep", "v": "keep", "pos": "empty", "window": "keep"}
+
+
 def fill_cache_from_prefill(cache: Dict, kv: Dict, t0: int = 0) -> Dict:
     """Write prefill kv (B,S,Hkv,hd) into the cache (ring-aware)."""
     S = kv["k"].shape[1]

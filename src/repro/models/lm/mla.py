@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.config import ModelConfig
-from repro.models.lm.attention import NEG_INF, blockwise_attn
+from repro.models.lm.attention import EMPTY_POS, NEG_INF, blockwise_attn
 from repro.models.lm.common import (BATCH_AXES, Params, constrain, dense,
                                     make_dense_params, make_rmsnorm_params,
                                     rmsnorm)
@@ -89,16 +89,32 @@ def mla_forward(p: Params, x: jax.Array, positions: jax.Array,
 
 def init_mla_cache(cfg: ModelConfig, batch: int, cache_len: int,
                    dtype=jnp.bfloat16) -> Dict:
+    """Latent cache with a PER-ROW position vector ``pos: (B, L)``.
+
+    One shared ``(L,)`` vector silently cross-masks any batched decode
+    whose rows sit at different positions (the continuous-batching
+    layout), so positions are batched for the one-shot path too — the
+    slot pool reuses this exact layout."""
     _, _, kvr, _, rope_d, _ = _dims(cfg)
     return {"c": jnp.zeros((batch, cache_len, kvr), dtype),
             "k_rope": jnp.zeros((batch, cache_len, rope_d), dtype),
-            "pos": jnp.full((cache_len,), -(10 ** 9), jnp.int32)}
+            "pos": jnp.full((batch, cache_len), EMPTY_POS, jnp.int32)}
+
+
+# the slot pool uses the same per-row layout as the one-shot cache
+init_mla_cache_slots = init_mla_cache
 
 
 def mla_cache_specs():
     return {"c": P(BATCH_AXES, "model", None),
             "k_rope": P(BATCH_AXES, "model", None),
-            "pos": P(None)}
+            "pos": P(BATCH_AXES, None)}
+
+
+def mla_cache_reset_spec():
+    """Per-leaf slot-recycle action (see repro.serving.cache): latent
+    bytes stay stale-but-masked; only positions are invalidated."""
+    return {"c": "keep", "k_rope": "keep", "pos": "empty"}
 
 
 def fill_mla_cache(cache: Dict, kv: Dict) -> Dict:
@@ -106,27 +122,51 @@ def fill_mla_cache(cache: Dict, kv: Dict) -> Dict:
     return {"c": cache["c"].at[:, :S].set(kv["c"].astype(cache["c"].dtype)),
             "k_rope": cache["k_rope"].at[:, :S].set(
                 kv["k_rope"].astype(cache["k_rope"].dtype)),
-            "pos": cache["pos"].at[:S].set(jnp.arange(S, dtype=jnp.int32))}
+            "pos": cache["pos"].at[:, :S].set(
+                jnp.arange(S, dtype=jnp.int32)[None, :])}
 
 
 def mla_decode(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
                cfg: ModelConfig) -> Tuple[jax.Array, Dict]:
-    """Absorbed-form decode over the latent cache. x: (B, 1, d)."""
+    """Absorbed-form decode over the latent cache. x: (B, 1, d);
+    t: scalar (lockstep batch) or (B,) / (B, 1) per-row positions."""
     B = x.shape[0]
+    t = jnp.asarray(t, jnp.int32)
+    if t.ndim == 0:
+        t = jnp.broadcast_to(t, (B, 1))
+    elif t.ndim == 1:
+        t = t[:, None]
+    return mla_decode_slots(p, x, cache, t, cfg)
+
+
+def mla_decode_slots(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
+                     cfg: ModelConfig) -> Tuple[jax.Array, Dict]:
+    """Slot-batched absorbed-form decode: every row at its OWN position.
+
+    x: (B, C, d); t: (B, C) int32 per-token positions, ``t < 0`` marking
+    padding (pad tokens write nothing — their scatter index is clamped
+    out of bounds and dropped — and their output rows are garbage the
+    caller must ignore). C == 1 is the engine's lockstep decode; C > 1
+    one chunked-prefill step. Causality within a chunk holds because the
+    latent KV is written before scoring and the mask compares cached
+    positions against each query's position.
+    """
+    B, C, _ = x.shape
     H, qr, kvr, nope, rope_d, vd = _dims(cfg)
-    pos2 = t[None, None] if t.ndim == 0 else t
-    q_nope, q_rope = _project_q(p, x, pos2, cfg)          # (B,1,H,*)
-    c_new, kr_new = _project_kv_latent(p, x, pos2, cfg)   # (B,1,kvr)
+    tq = jnp.maximum(t, 0)
+    q_nope, q_rope = _project_q(p, x, tq, cfg)            # (B,C,H,*)
+    c_new, kr_new = _project_kv_latent(p, x, tq, cfg)     # (B,C,kvr)
 
     L = cache["c"].shape[1]
-    slot = (t % L).astype(jnp.int32)
+    slot = jnp.where(t >= 0, t % L, L)        # L is OOB -> mode="drop"
+    bidx = jnp.arange(B)[:, None]
     c_new = constrain(c_new, P(BATCH_AXES, None, None))
     kr_new = constrain(kr_new, P(BATCH_AXES, None, None))
-    c = jax.lax.dynamic_update_slice_in_dim(
-        cache["c"], c_new.astype(cache["c"].dtype), slot, axis=1)
-    k_rope = jax.lax.dynamic_update_slice_in_dim(
-        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), slot, axis=1)
-    pos = cache["pos"].at[slot].set(t.astype(jnp.int32))
+    c = cache["c"].at[bidx, slot].set(c_new.astype(cache["c"].dtype),
+                                      mode="drop")
+    k_rope = cache["k_rope"].at[bidx, slot].set(
+        kr_new.astype(cache["k_rope"].dtype), mode="drop")
+    pos = cache["pos"].at[bidx, slot].set(t, mode="drop")
 
     # weight absorption: score in latent space. q replicated over 'model',
     # latent cache sequence-sharded (flash-decoding pattern).
@@ -136,23 +176,22 @@ def mla_decode(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
     wukv = kernel_of(p["wukv"], jnp.float32).reshape(kvr, H, nope + vd)
     w_uk = wukv[..., :nope]                               # (kvr, H, nope)
     w_uv = wukv[..., nope:]                               # (kvr, H, vd)
-    qf = constrain(q_nope.reshape(B, H, nope),
-                   P(BATCH_AXES, None, None)).astype(c.dtype)
-    q_abs = jnp.einsum("bhn,rhn->bhr", qf, w_uk.astype(c.dtype))
+    qf = constrain(q_nope, P(BATCH_AXES, None, None, None)).astype(c.dtype)
+    q_abs = jnp.einsum("bchn,rhn->bchr", qf, w_uk.astype(c.dtype))
     # latent cache read once in storage dtype, fp32 accumulation
-    s = jnp.einsum("bhr,blr->bhl", q_abs, c,
+    s = jnp.einsum("bchr,blr->bchl", q_abs, c,
                    preferred_element_type=jnp.float32)
-    s = s + jnp.einsum("bhp,blp->bhl",
-                       q_rope.reshape(B, H, rope_d).astype(k_rope.dtype),
+    s = s + jnp.einsum("bchp,blp->bchl", q_rope.astype(k_rope.dtype),
                        k_rope, preferred_element_type=jnp.float32)
-    s = constrain(s, P(BATCH_AXES, None, "model"))
+    s = constrain(s, P(BATCH_AXES, None, None, "model"))
     s = s * ((nope + rope_d) ** -0.5)
-    s = jnp.where(((pos >= 0) & (pos <= t))[None, None, :], s, NEG_INF)
+    valid = (pos >= 0)[:, None, :] & (pos[:, None, :] <= t[:, :, None])
+    s = jnp.where(valid[:, :, None, :], s, NEG_INF)
     prob = jax.nn.softmax(s, axis=-1)
-    o_lat = jnp.einsum("bhl,blr->bhr", prob.astype(c.dtype), c,
+    o_lat = jnp.einsum("bchl,blr->bchr", prob.astype(c.dtype), c,
                        preferred_element_type=jnp.float32)
-    o = jnp.einsum("bhr,rhv->bhv", o_lat.astype(c.dtype),
+    o = jnp.einsum("bchr,rhv->bchv", o_lat.astype(c.dtype),
                    w_uv.astype(c.dtype))
-    o = o.reshape(B, 1, H * vd).astype(x.dtype)
+    o = o.reshape(B, C, H * vd).astype(x.dtype)
     out = dense(p["wo"], o, cfg=cfg, tag="mla/wo")
     return out, {"c": c, "k_rope": k_rope, "pos": pos}

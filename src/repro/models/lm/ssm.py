@@ -159,9 +159,64 @@ def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict:
             "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype)}
 
 
+def init_ssm_cache_slots(cfg: ModelConfig, batch: int,
+                         dtype=jnp.float32) -> Dict:
+    """Slot-pool SSM cache: recurrent state + a per-row validity leaf
+    ``pos: (B, 1)`` (the highest position written, EMPTY_POS when the
+    row is free). Unlike KV caches, stale recurrent state cannot be
+    masked out at read time — recycling a slot must ZERO ``h``/``conv``
+    (see :func:`ssm_cache_reset_spec`); ``pos`` is what lets the serving
+    pool's sentinel machinery see and invalidate SSM rows at all."""
+    from repro.models.lm.attention import EMPTY_POS
+    d_in, nh, N, conv_ch = ssm_dims(cfg)
+    return {"h": jnp.zeros((batch, nh, cfg.ssm_headdim, N), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+            "pos": jnp.full((batch, 1), EMPTY_POS, jnp.int32)}
+
+
 def ssm_cache_specs():
     return {"h": P(BATCH_AXES, "model", None, None),
             "conv": P(BATCH_AXES, None, "model")}
+
+
+def ssm_cache_reset_spec():
+    """Per-leaf slot-recycle action (see repro.serving.cache): recurrent
+    state feeds forward multiplicatively, so a recycled row must be
+    zeroed, not merely marked invalid."""
+    return {"h": "zero", "conv": "zero", "pos": "empty"}
+
+
+def _ssm_step(p: Params, cfg: ModelConfig, h: jax.Array, conv: jax.Array,
+              xbc_t: jax.Array, dtr_t: jax.Array, act_dtype
+              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One recurrence step shared by the one-shot and slot decode paths.
+
+    h: (B, nh, hd, N) f32; conv: (B, K-1, conv_ch) stored dtype;
+    xbc_t: (B, conv_ch) pre-conv activations; dtr_t: (B, nh) raw dt.
+    Returns (h_new f32, window (B, K, conv_ch) — ``window[:, 1:]`` is
+    the next conv state, cast to the stored dtype by the caller —
+    y_t (B, nh, hd) f32).
+    """
+    d_in, nh, N, conv_ch = ssm_dims(cfg)
+    hd = cfg.ssm_headdim
+    B = xbc_t.shape[0]
+    window = jnp.concatenate([conv.astype(xbc_t.dtype), xbc_t[:, None]],
+                             axis=1)                    # (B, K, conv_ch)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out).astype(act_dtype)
+    xs_t = conv_out[..., :d_in].reshape(B, nh, hd)
+    Bm_t = conv_out[..., d_in:d_in + N]
+    Cm_t = conv_out[..., d_in + N:]
+    dtv = jax.nn.softplus(dtr_t.astype(jnp.float32) + p["dt_bias"])  # (B,nh)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dtv * A[None, :])                   # (B,nh)
+    h_new = h * decay[:, :, None, None] + \
+        jnp.einsum("bh,bn,bhd->bhdn", dtv, Bm_t.astype(jnp.float32),
+                   xs_t.astype(jnp.float32))
+    y_t = jnp.einsum("bn,bhdn->bhd", Cm_t.astype(jnp.float32), h_new) + \
+        p["D"][None, :, None] * xs_t.astype(jnp.float32)
+    return h_new, window, y_t
 
 
 def ssm_decode(p: Params, x: jax.Array, cache: Dict, cfg: ModelConfig
@@ -169,29 +224,59 @@ def ssm_decode(p: Params, x: jax.Array, cache: Dict, cfg: ModelConfig
     """One-token decode with O(1) state. x: (B,1,d)."""
     B = x.shape[0]
     d_in, nh, N, conv_ch = ssm_dims(cfg)
-    hd = cfg.ssm_headdim
     zxbcdt = dense(p["in_proj"], x, cfg=cfg, tag="ssm/in_proj")
     z, xs, Bm, Cm, dtr = _split_proj(zxbcdt[:, 0], cfg)
-
     xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)        # (B, conv_ch)
-    window = jnp.concatenate([cache["conv"].astype(xbc.dtype),
-                              xbc[:, None]], axis=1)    # (B, K, C)
-    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
-                          p["conv_w"]) + p["conv_b"]
-    conv_out = jax.nn.silu(conv_out).astype(x.dtype)
-    xs = conv_out[..., :d_in].reshape(B, nh, hd)
-    Bm = conv_out[..., d_in:d_in + N]
-    Cm = conv_out[..., d_in + N:]
-
-    dtv = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])  # (B,nh)
-    A = -jnp.exp(p["A_log"])
-    decay = jnp.exp(dtv * A[None, :])                   # (B,nh)
-    h = cache["h"] * decay[:, :, None, None] + \
-        jnp.einsum("bh,bn,bhd->bhdn", dtv, Bm.astype(jnp.float32),
-                   xs.astype(jnp.float32))
-    y = jnp.einsum("bn,bhdn->bhd", Cm.astype(jnp.float32), h) + \
-        p["D"][None, :, None] * xs.astype(jnp.float32)
+    h, window, y = _ssm_step(p, cfg, cache["h"], cache["conv"], xbc, dtr,
+                             x.dtype)
     y = y.reshape(B, 1, d_in).astype(x.dtype) * jax.nn.silu(z[:, None])
     out = dense(p["out_proj"], y, cfg=cfg, tag="ssm/out_proj")
-    new_cache = {"h": h, "conv": window[:, 1:]}
+    # conv window must return in the STORED dtype: window[:, 1:] inherits
+    # the activation dtype, which breaks lax.scan carry-dtype stability
+    # whenever cache_dtype != activation dtype (e.g. bf16 caches).
+    new_cache = {"h": h, "conv": window[:, 1:].astype(cache["conv"].dtype)}
     return out, new_cache
+
+
+def ssm_decode_slots(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
+                     cfg: ModelConfig) -> Tuple[jax.Array, Dict]:
+    """Slot-batched recurrent decode: every row advances at its OWN pace.
+
+    x: (B, C, d); t: (B, C) int32 with ``t < 0`` marking padding. Pad
+    steps MUST NOT advance recurrent state — a free slot that kept
+    integrating garbage would poison the next occupant — so ``h``,
+    ``conv`` and ``pos`` are frozen wherever ``t < 0`` (their output rows
+    are garbage the caller ignores). C == 1 is the engine's lockstep
+    decode tick; C > 1 runs one chunked-prefill step as a sequential
+    scan over the chunk (the recurrence is inherently causal).
+    """
+    B, C, _ = x.shape
+    d_in, nh, N, conv_ch = ssm_dims(cfg)
+    zxbcdt = dense(p["in_proj"], x, cfg=cfg, tag="ssm/in_proj")  # (B,C,*)
+    z, xs, Bm, Cm, dtr = _split_proj(zxbcdt, cfg)
+    xbc_seq = jnp.concatenate([xs, Bm, Cm], axis=-1)    # (B,C,conv_ch)
+
+    def step(carry, inp):
+        h, conv = carry                 # (B,nh,hd,N) f32, stored-dtype conv
+        xbc_t, dtr_t, valid = inp       # (B,conv_ch), (B,nh), (B,) bool
+        h_new, window, y_t = _ssm_step(p, cfg, h, conv, xbc_t, dtr_t,
+                                       x.dtype)
+        h = jnp.where(valid[:, None, None, None], h_new, h)
+        conv = jnp.where(valid[:, None, None],
+                         window[:, 1:].astype(conv.dtype), conv)
+        return (h, conv), y_t
+
+    (h, conv), ys = jax.lax.scan(
+        step, (cache["h"], cache["conv"]),
+        (xbc_seq.transpose(1, 0, 2), dtr.transpose(1, 0, 2),
+         (t >= 0).transpose(1, 0)))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, C, d_in).astype(x.dtype) * \
+        jax.nn.silu(z)
+    y = constrain(y, P(BATCH_AXES, None, "model"))
+    out = dense(p["out_proj"], y, cfg=cfg, tag="ssm/out_proj")
+    any_valid = jnp.any(t >= 0, axis=1, keepdims=True)
+    pos = jnp.where(any_valid,
+                    jnp.maximum(cache["pos"], jnp.max(t, axis=1,
+                                                      keepdims=True)),
+                    cache["pos"])
+    return out, {"h": h, "conv": conv, "pos": pos}

@@ -215,9 +215,14 @@ def block_decode(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
 
 
 # Layer kinds the slot-batched (continuous-batching) serving path covers.
-# SSM/MLA/xdec caches have no per-row position vector yet; the serving
-# engine refuses those archs up front (repro.serving.engine).
-SLOT_KINDS = ("dense", "moe")
+# Every token-only kind carries per-row cache positions: attention/MLA
+# caches track ``pos: (B, L)``, SSM caches a ``pos: (B, 1)`` validity
+# leaf (recurrent state is zeroed on slot recycle — see
+# ``block_cache_reset_spec``). Only xdec (audio) remains out: its
+# cross-attention needs an encoder prefix the token-only chunked prefill
+# cannot feed.
+SLOT_KINDS = ("dense", "moe", "ssm", "mla_dense", "mla_moe",
+              "hybrid_full", "hybrid_swa")
 
 
 def supports_slot_serving(cfg: ModelConfig) -> bool:
@@ -236,10 +241,22 @@ def block_decode_slots(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
             f"slot-batched decode not implemented for block kind {kind!r}")
     x = constrain(x, DECODE_RESID)
     h = rmsnorm(p["ln1"], x, cfg.norm_eps)
-    mix, nc = attn_mod.attn_decode_slots(p["attn"], h, cache, t, cfg)
+    if kind in ("mla_dense", "mla_moe"):
+        mix, nc = mla_mod.mla_decode_slots(p["attn"], h, cache, t, cfg)
+    elif kind == "ssm":
+        mix, nc = ssm_mod.ssm_decode_slots(p["ssm"], h, cache, t, cfg)
+        return constrain(x + mix, DECODE_RESID), nc
+    elif kind.startswith("hybrid"):
+        w = _block_window(cfg, kind)
+        ya, nkv = attn_mod.attn_decode_slots(p["attn"], h, cache["kv"], t,
+                                             cfg, window=w)
+        ys, nst = ssm_mod.ssm_decode_slots(p["ssm"], h, cache["ssm"], t, cfg)
+        mix, nc = 0.5 * (ya + ys), {"kv": nkv, "ssm": nst}
+    else:
+        mix, nc = attn_mod.attn_decode_slots(p["attn"], h, cache, t, cfg)
     x = constrain(x + mix, DECODE_RESID)
     h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
-    if kind == "moe":
+    if kind in ("moe", "mla_moe"):
         # pad slots (t < 0) are masked out of expert dispatch so they
         # consume no capacity — a live request's routing must not depend
         # on how many neighbouring slots happen to be free
@@ -274,6 +291,46 @@ def block_cache_specs(cfg: ModelConfig, kind: str):
         return {"kv": attn_mod.cache_specs(window=_block_window(cfg, kind)),
                 "ssm": ssm_mod.ssm_cache_specs()}
     return attn_mod.cache_specs()
+
+
+def init_block_cache_slots(cfg: ModelConfig, kind: str, batch: int,
+                           cache_len: int, dtype=jnp.bfloat16):
+    """Slot-pool cache for one block: per-row positions on every kind."""
+    if kind in ("mla_dense", "mla_moe"):
+        return mla_mod.init_mla_cache_slots(cfg, batch, cache_len, dtype)
+    if kind == "ssm":
+        return ssm_mod.init_ssm_cache_slots(cfg, batch, dtype)
+    if kind.startswith("hybrid"):
+        return {"kv": attn_mod.init_attn_cache_slots(
+                    cfg, batch, cache_len, window=_block_window(cfg, kind),
+                    dtype=dtype),
+                "ssm": ssm_mod.init_ssm_cache_slots(cfg, batch, dtype)}
+    return attn_mod.init_attn_cache_slots(
+        cfg, batch, cache_len, window=_block_window(cfg, kind), dtype=dtype)
+
+
+def block_cache_reset_spec(cfg: ModelConfig, kind: str):
+    """Per-leaf recycle action for a block's slot cache — a pytree with
+    the cache's structure and string leaves: ``"keep"`` (stale bytes are
+    masked out by the position check), ``"empty"`` (fill with the
+    EMPTY_POS sentinel), ``"zero"`` (recurrent state must be cleared —
+    it feeds forward multiplicatively and cannot be masked at read
+    time). ``repro.serving.cache`` drives ``mask_fresh``/``reset_row``
+    off this spec instead of key-name matching."""
+    if kind in ("mla_dense", "mla_moe"):
+        return mla_mod.mla_cache_reset_spec()
+    if kind == "ssm":
+        return ssm_mod.ssm_cache_reset_spec()
+    if kind.startswith("hybrid"):
+        return {"kv": attn_mod.attn_cache_reset_spec(),
+                "ssm": ssm_mod.ssm_cache_reset_spec()}
+    return attn_mod.attn_cache_reset_spec()
+
+
+def caches_reset_specs(cfg: ModelConfig) -> Dict:
+    """Reset-spec pytree matching the :func:`init_caches_slots` pool."""
+    return {gname: block_cache_reset_spec(cfg, kind)
+            for gname, kind, n in group_names(cfg)}
 
 
 def fill_block_cache(cfg, kind, cache, kv):
@@ -508,9 +565,8 @@ def init_caches_slots(cfg: ModelConfig, batch: int, cache_len: int,
                 f"slot cache pool not implemented for block kind {kind!r}")
 
         def one(_):
-            return attn_mod.init_attn_cache_slots(
-                cfg, batch, cache_len, window=_block_window(cfg, kind),
-                dtype=cache_dtype)
+            return init_block_cache_slots(cfg, kind, batch, cache_len,
+                                          dtype=cache_dtype)
         caches[gname] = jax.vmap(one)(jnp.arange(n))
     return caches
 

@@ -27,10 +27,12 @@ Slot lifecycle
 --------------
 
 1. **Admit** — a request is popped from the FIFO queue into a free
-   slot. The slot's cache row is reset in place (its per-row ``pos``
-   vector is overwritten with the empty sentinel via
-   ``lax.dynamic_update_slice`` — KV bytes are left stale and masked
-   out, so a reset is O(L) position words, not O(L·H·hd) cache bytes).
+   slot. The slot's cache row is reset in place per each cache's RESET
+   SPEC (``tfm.caches_reset_specs``): position leaves take the empty
+   sentinel (KV bytes are left stale and masked out, so an attention
+   reset is O(L) position words, not O(L·H·hd) cache bytes), while SSM
+   recurrent state — which feeds forward multiplicatively and cannot be
+   masked at read time — is zeroed.
 2. **Prefill** — the prompt streams through ``chunk`` steps; KV lands
    directly in the slot's rows of the pool. The final chunk's logits
    (taken at the last real token) yield the first generated token
@@ -47,12 +49,15 @@ freed slots — steady-state decode throughput stays at the full-batch
 rate instead of draining to the stragglers' rate, which is where the
 throughput win over static batching comes from (bench_serving.py).
 
-Support matrix: token-only attention-family stacks (layer kinds
-``dense`` / ``moe``; MoE pad slots are masked out of expert dispatch so
-free slots never perturb live requests). SSM/MLA/hybrid caches have no
-per-row position vector yet, and vlm/audio archs need a frontend prefix
-the token-only chunked prefill cannot feed — ``ServingEngine`` raises
-for all of those (ROADMAP open item).
+Support matrix: every token-only stack — attention (``dense`` /
+``moe``; MoE pad slots are masked out of expert dispatch so free slots
+never perturb live requests), SSM (``ssm`` — per-row ``pos: (B, 1)``
+validity leaf; pad rows freeze the recurrence), MLA (``mla_dense`` /
+``mla_moe`` — batched ``pos: (B, L)`` over the latent cache) and the
+parallel attention+SSM hybrids (``hybrid_full`` / ``hybrid_swa``,
+sliding-window ring rows included). vlm/audio archs need a frontend
+prefix the token-only chunked prefill cannot feed — ``ServingEngine``
+still raises for those (ROADMAP open item).
 """
 from repro.serving.cache import CachePool
 from repro.serving.engine import Request, ServingEngine

@@ -1,18 +1,25 @@
-"""Slot-indexed KV-cache pool for the continuous-batching engine.
+"""Slot-indexed cache pool for the continuous-batching engine.
 
 The pool is the ``tfm.init_caches_slots`` pytree: per layer group, a
 stack of per-layer caches whose leaves carry ``(n_layers, B, ...)`` with
-the slot (batch-row) axis at position 1 and a per-row position vector
-``pos: (n_layers, B, L)``. Three in-place row operations, all built on
-``lax.dynamic_slice`` / ``lax.dynamic_update_slice`` with the slot index
-as a traced scalar so each compiles exactly once:
+the slot (batch-row) axis at position 1 and a per-row position leaf
+(``pos: (n_layers, B, L)`` for attention/MLA, ``pos: (n_layers, B, 1)``
+for SSM state). Row operations, all built on ``lax.dynamic_slice`` /
+``lax.dynamic_update_slice`` with the slot index as a traced scalar so
+each compiles exactly once:
 
 - ``gather_row``  — slice one slot's row out of every leaf (the (1, C)
   chunked-prefill step runs on this row tree);
 - ``scatter_row`` — write an updated row tree back into the pool;
-- ``reset_row``   — overwrite only the row's ``pos`` vector with the
-  empty sentinel. KV bytes stay stale but masked-invalid, so slot
-  recycling costs O(L) int32 writes instead of O(L * Hkv * hd) bytes.
+- ``mask_fresh`` / ``reset_row`` — invalidate a row per a RESET SPEC: a
+  pytree of the cache's structure whose string leaves say what slot
+  recycling means for that leaf. ``"keep"`` leaves stay stale-but-masked
+  (KV bytes — a reset costs O(L) position words, not O(L * Hkv * hd)
+  cache bytes), ``"empty"`` leaves are filled with the EMPTY_POS
+  sentinel, ``"zero"`` leaves are cleared (SSM recurrent state feeds
+  forward multiplicatively and cannot be masked at read time). The spec
+  comes from ``tfm.caches_reset_specs`` — cache modules own their
+  recycle semantics instead of this pool key-matching ``"pos"``.
 """
 from __future__ import annotations
 
@@ -49,41 +56,39 @@ def _tree_scatter_row(pool, row, slot):
     return jax.tree.map(one, pool, row)
 
 
-def _tree_mask_fresh(row, fresh):
+def _reset_fill(val, how):
+    """Constant a leaf is reset to under action ``how`` (None = keep)."""
+    if how == "empty":
+        return jnp.asarray(EMPTY_POS, val.dtype)
+    if how == "zero":
+        return jnp.asarray(0, val.dtype)
+    if how == "keep":
+        return None
+    raise ValueError(f"unknown cache reset action {how!r}")
+
+
+def _tree_mask_fresh(row, fresh, spec):
     """Conditionally invalidate a gathered row tree: where ``fresh`` is
-    nonzero, every ``pos`` leaf becomes EMPTY_POS (a select, not a write
-    — this folds slot recycling into the first prefill chunk so admission
-    costs zero extra device dispatches)."""
-    def walk(node):
-        if not isinstance(node, dict):
-            return node
-        out = {}
-        for key, val in node.items():
-            if key == "pos":
-                out[key] = jnp.where(fresh > 0,
-                                     jnp.full_like(val, EMPTY_POS), val)
-            else:
-                out[key] = walk(val)
-        return out
-    return walk(row)
+    nonzero, every resettable leaf takes its spec'd reset value (a
+    select, not a write — this folds slot recycling into the first
+    prefill chunk so admission costs zero extra device dispatches)."""
+    def one(val, how):
+        fill = _reset_fill(val, how)
+        if fill is None:
+            return val
+        return jnp.where(fresh > 0, jnp.broadcast_to(fill, val.shape), val)
+    return jax.tree.map(one, row, spec)
 
 
-def _tree_reset_row(pool, slot):
-    """Invalidate one slot: pos row -> EMPTY_POS (keys named 'pos')."""
-    def walk(node):
-        if not isinstance(node, dict):
-            return node
-        out = {}
-        for key, val in node.items():
-            if key == "pos":
-                empty = jnp.full(val.shape[:1] + (1,) + val.shape[2:],
-                                 EMPTY_POS, val.dtype)
-                out[key] = jax.lax.dynamic_update_slice_in_dim(
-                    val, empty, slot, axis=1)
-            else:
-                out[key] = walk(val)
-        return out
-    return walk(pool)
+def _tree_reset_row(pool, slot, spec):
+    """Invalidate one slot in place per the reset spec."""
+    def one(val, how):
+        fill = _reset_fill(val, how)
+        if fill is None:
+            return val
+        empty = jnp.broadcast_to(fill, val.shape[:1] + (1,) + val.shape[2:])
+        return jax.lax.dynamic_update_slice_in_dim(val, empty, slot, axis=1)
+    return jax.tree.map(one, pool, spec)
 
 
 class CachePool:
@@ -96,7 +101,9 @@ class CachePool:
         self.cache_len = int(cache_len)
         self.caches: Dict[str, Any] = tfm.init_caches_slots(
             cfg, n_slots, cache_len, cache_dtype=cache_dtype)
-        self._reset = jax.jit(_tree_reset_row)
+        self.reset_spec: Dict[str, Any] = tfm.caches_reset_specs(cfg)
+        self._reset = jax.jit(
+            functools.partial(_tree_reset_row, spec=self.reset_spec))
 
     def reset_slot(self, slot: int) -> None:
         self.caches = self._reset(self.caches, jnp.asarray(slot, jnp.int32))

@@ -56,17 +56,22 @@ class _Slot:
 class ServingEngine:
     """Slot-based continuous batching over ``decode_step_slots``.
 
-    Dense archs decode bit-identically to the one-shot path regardless
-    of scheduling. MoE archs mask pad slots out of expert dispatch (they
-    consume no capacity), but token-choice routing still depends on which
-    LIVE requests share the capacity pool — the same composition effect
-    the one-shot MoE paths document in tests/test_decode.py.
+    Dense/SSM/MLA/hybrid archs decode bit-identically to the one-shot
+    path regardless of scheduling (every cache kind carries per-row
+    positions; SSM recurrent state is zeroed on slot recycle). MoE archs
+    mask pad slots out of expert dispatch (they consume no capacity),
+    but token-choice routing still depends on which LIVE requests share
+    the capacity pool — the same composition effect the one-shot MoE
+    paths document in tests/test_decode.py.
 
     Parameters
     ----------
-    params, cfg : the model (token-only attention-family archs — layer
-        kinds ``dense``/``moe``; SSM/MLA/frontend pools are ROADMAP
-        items).
+    params, cfg : the model. Any token-only arch serves — layer kinds
+        ``dense``/``moe`` (qwen, granite), ``ssm`` (mamba2),
+        ``mla_dense``/``mla_moe`` (deepseek), ``hybrid_full``/
+        ``hybrid_swa`` (hymba). vlm/audio frontends need a patch/frame
+        prefix the token-only chunked prefill cannot feed and still
+        raise.
     n_slots : decode batch size (fixed for the engine's lifetime).
     cache_len : per-slot KV capacity; every admitted request must fit
         ``len(prompt) + max_new_tokens <= cache_len``.
@@ -81,8 +86,9 @@ class ServingEngine:
         if not tfm.supports_slot_serving(cfg):
             kinds = sorted({k for _, k, _ in tfm.group_names(cfg)})
             raise NotImplementedError(
-                f"continuous batching needs a token-only arch with layer "
-                f"kinds in {tfm.SLOT_KINDS}; {cfg.name} has "
+                f"continuous batching needs a token-only arch (no "
+                f"vision/audio frontend) with layer kinds in "
+                f"{tfm.SLOT_KINDS}; {cfg.name} has "
                 f"family={cfg.family!r}, kinds={kinds}, "
                 f"frontend_tokens={cfg.frontend_tokens}")
         self.params = params
@@ -110,9 +116,13 @@ class ServingEngine:
             return jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32), \
                 npool
 
+        reset_spec = self.pool.reset_spec
+
         def _chunk_fn(p, pool, tok, t, slot, fresh, last):
             row = CachePool.gather_row(pool, slot)
-            row = CachePool.mask_fresh(row, fresh)   # recycle slot in-chunk
+            # recycle the slot in-chunk, per the cache's own reset spec
+            # (mask stale KV positions / zero SSM recurrent state)
+            row = CachePool.mask_fresh(row, fresh, reset_spec)
             logits, nrow = tfm.decode_step_slots(p, row, tok, t, cfg,
                                                  logits_at=last)
             return jnp.argmax(logits[0, 0]).astype(jnp.int32), \

@@ -77,3 +77,25 @@ def test_swa_ring_cache(rng):
     params = api.init_params(rng, cfg)
     c = A.init_attn_cache(cfg, 2, 64, window=cfg.sliding_window)
     assert c["k"].shape[1] == cfg.sliding_window
+
+
+def test_ssm_decode_bf16_cache_scan_dtype_stable(rng):
+    """Regression: ssm_decode returned the conv window in the ACTIVATION
+    dtype (window[:, 1:] inherits xbc.dtype), so a bf16 conv cache under
+    lax.scan hit a carry-dtype mismatch; the state must round-trip in
+    the stored dtype."""
+    from repro.models.lm import ssm as S
+    cfg = get_config("mamba2-130m-smoke")
+    p = S.make_ssm_params(rng, cfg)
+    cache = S.init_ssm_cache(cfg, 2, dtype=jnp.bfloat16)
+    x = jax.random.normal(jax.random.key(3), (2, 1, cfg.d_model),
+                          jnp.float32)
+
+    def step(c, _):
+        y, c2 = S.ssm_decode(p, x, c, cfg)
+        return c2, y
+
+    c, ys = jax.lax.scan(step, cache, jnp.arange(3))
+    assert c["conv"].dtype == jnp.bfloat16
+    assert c["h"].dtype == jnp.float32
+    assert bool(jnp.isfinite(ys).all())

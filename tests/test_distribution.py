@@ -97,6 +97,7 @@ def test_checkpoint_async(tmp_path):
     assert ck.latest_valid()[0] == 7
 
 
+@pytest.mark.slow
 def test_train_resume_is_exact(tmp_path, rng):
     """Crash/restart: resumed run reproduces the uninterrupted loss."""
     from repro.data.tokens import token_batches

@@ -47,6 +47,7 @@ def test_zero_gates_equal_stripped_skips(rng):
                    jax.tree_util.tree_flatten_with_path(stripped)[0])
 
 
+@pytest.mark.slow
 def test_skipclip_step_trains(rng):
     t_cfg = get_config("bonito-smoke")
     s_cfg = get_config("rubicall-smoke")
@@ -125,6 +126,7 @@ def test_latency_estimator_monotonic_in_bits():
     assert tab.shape == (DEFAULT_SPACE.n_ops, DEFAULT_SPACE.n_quant)
 
 
+@pytest.mark.slow
 def test_qabas_search_runs_and_derives_config(rng):
     from repro.data.squiggle import SquiggleConfig, batches
 

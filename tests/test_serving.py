@@ -56,6 +56,7 @@ def var_requests(cfg, spec, seed=0):
             for i, (pl, mn) in enumerate(spec)]
 
 
+@pytest.mark.slow
 def test_varlen_parity_with_oneshot(qwen):
     """Variable prompt AND output lengths, prompts spanning multiple
     prefill chunks, max_new==1 edge — engine tokens == one-shot tokens."""
@@ -106,6 +107,7 @@ def test_queue_drains_under_burst(qwen):
     assert s["generated_tokens"] == sum(r.max_new_tokens for r in reqs)
 
 
+@pytest.mark.slow
 def test_wbits8_matches_dequant_static(qwen):
     """Packed-int8 engine serving (dequant-on-read) produces the same
     tokens as static serving of the up-front dequantized weights."""
@@ -141,8 +143,102 @@ def test_moe_decode_independent_of_free_slots():
     assert outs[0] == outs[1] == outs[2], outs
 
 
-@pytest.mark.parametrize("arch", ["mamba2-130m-smoke",    # ssm cache
-                                  "internvl2-1b-smoke"])  # vision prefix
+# Every slot-servable cache family: dense attention, pure SSM, parallel
+# attention+SSM hybrid (full & sliding-window), MLA (dense + MoE groups).
+SLOT_FAMILY_ARCHS = ["qwen1.5-4b-smoke", "mamba2-130m-smoke",
+                     "hymba-1.5b-smoke", "deepseek-v3-671b-smoke"]
+
+
+def _arch_params(arch):
+    cfg = get_config(arch)
+    return cfg, api.init_params(jax.random.key(0), cfg)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", SLOT_FAMILY_ARCHS[1:])
+def test_cross_arch_parity_with_oneshot(arch):
+    """SSM/hybrid/MLA archs serve under the engine with tokens identical
+    to the one-shot path — 2x+ oversubscription, so every slot is
+    recycled at least once (stale KV masked, recurrent state zeroed)."""
+    cfg, params = _arch_params(arch)
+    reqs = var_requests(cfg, [(5, 6), (11, 3), (16, 8), (7, 1), (9, 5)])
+    eng = make_engine(params, cfg, n_slots=2, prefill_chunk=4)
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert all(len(h) >= 2 for h in eng.slot_history)       # reuse happened
+    for r in reqs:
+        want = oneshot_greedy(params, cfg, list(r.prompt), r.max_new_tokens)
+        assert done[r.rid].out_tokens == want, (arch, r.rid)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", SLOT_FAMILY_ARCHS)
+def test_staggered_admission_parity(arch):
+    """A request admitted while another is mid-decode puts the two rows
+    at DIFFERENT positions in one lockstep batch — the case a cache
+    position vector shared across batch rows silently cross-masks."""
+    cfg, params = _arch_params(arch)
+    reqs = var_requests(cfg, [(9, 8), (5, 6)], seed=7)
+    eng = make_engine(params, cfg, n_slots=2, prefill_chunk=4)
+    eng.submit(reqs[0])
+    while len(reqs[0].out_tokens) < 3:      # run request 0 well into decode
+        eng.step()
+    eng.submit(reqs[1])                     # joins at position 0
+    done = eng.run()
+    for r in reqs:
+        want = oneshot_greedy(params, cfg, list(r.prompt), r.max_new_tokens)
+        assert done[r.rid].out_tokens == want, (arch, r.rid)
+
+
+def test_pad_rows_never_write_or_advance_state():
+    """Regression: a free slot decodes with t = -1; naively its cache
+    write would land at row position -1 % L = L - 1 with stored pos -1,
+    so a later occupant could observe the garbage. Pad rows must write
+    NOTHING (attention/MLA) and freeze recurrent state (SSM)."""
+    from repro.models.lm import attention as A
+    from repro.models.lm import mla as M
+    from repro.models.lm import ssm as S
+    key = jax.random.key(1)
+    t = jnp.asarray([[5], [-1]], jnp.int32)
+
+    cfg = get_config("qwen1.5-4b-smoke")
+    p = A.make_attn_params(key, cfg)
+    cache = A.init_attn_cache_slots(cfg, 2, 8, dtype=jnp.float32)
+    cache = {**cache, "k": cache["k"] + 3.0, "v": cache["v"] + 3.0}
+    x = jax.random.normal(key, (2, 1, cfg.d_model), jnp.float32)
+    _, nc = A.attn_decode_slots(p, x, cache, t, cfg)
+    for leaf in ("k", "v", "pos"):
+        np.testing.assert_array_equal(np.asarray(nc[leaf][1]),
+                                      np.asarray(cache[leaf][1]))
+    assert (np.asarray(nc["pos"][0]) >= 0).sum() == 1      # live row wrote
+
+    cfg = get_config("deepseek-v3-671b-smoke")
+    p = M.make_mla_params(key, cfg)
+    cache = M.init_mla_cache_slots(cfg, 2, 8, jnp.float32)
+    cache = {**cache, "c": cache["c"] + 3.0, "k_rope": cache["k_rope"] + 3.0}
+    x = jax.random.normal(key, (2, 1, cfg.d_model), jnp.float32)
+    _, nc = M.mla_decode_slots(p, x, cache, t, cfg)
+    for leaf in ("c", "k_rope", "pos"):
+        np.testing.assert_array_equal(np.asarray(nc[leaf][1]),
+                                      np.asarray(cache[leaf][1]))
+    assert (np.asarray(nc["pos"][0]) >= 0).sum() == 1
+
+    cfg = get_config("mamba2-130m-smoke")
+    p = S.make_ssm_params(key, cfg)
+    cache = S.init_ssm_cache_slots(cfg, 2)
+    cache = {**cache, "h": cache["h"] + 3.0, "conv": cache["conv"] + 3.0}
+    x = jax.random.normal(key, (2, 1, cfg.d_model), jnp.float32)
+    _, nc = S.ssm_decode_slots(p, x, cache, t, cfg)
+    for leaf in ("h", "conv", "pos"):
+        np.testing.assert_array_equal(np.asarray(nc[leaf][1]),
+                                      np.asarray(cache[leaf][1]))
+    assert float(jnp.max(jnp.abs(nc["h"][0] - cache["h"][0]))) > 0
+    assert int(nc["pos"][0, 0]) == 5
+
+
+@pytest.mark.parametrize("arch", ["internvl2-1b-smoke",    # vision prefix
+                                  "whisper-tiny-smoke"])   # audio enc-dec
 def test_engine_rejects_unsupported_arch(arch):
     cfg = get_config(arch)
     params = api.init_params(jax.random.key(0), cfg)
@@ -172,3 +268,27 @@ def test_cache_pool_reset_isolates_slots(qwen):
     pos = np.asarray(pool.caches[g]["pos"])
     assert (pos[:, 1] < 0).all()            # reset row
     assert (pos[:, 0] == 0).all() and (pos[:, 2] == 0).all()
+
+
+def test_cache_pool_reset_follows_per_leaf_spec():
+    """Hybrid pool recycling: KV bytes stay stale-but-masked ("keep"),
+    positions go to the sentinel ("empty"), and the SSM recurrent
+    state — which cannot be masked at read time — is zeroed ("zero"),
+    all for exactly the reset row."""
+    cfg = get_config("hymba-1.5b-smoke")
+    pool = CachePool(cfg, n_slots=3, cache_len=16, cache_dtype=jnp.float32)
+    pool.caches = jax.tree.map(lambda a: jnp.full_like(a, 7), pool.caches)
+    pool.reset_slot(1)
+    saw_hybrid = False
+    for g, cache in pool.caches.items():
+        if "ssm" not in cache:
+            continue
+        saw_hybrid = True
+        for leaf in ("h", "conv"):
+            arr = np.asarray(cache["ssm"][leaf])
+            assert (arr[:, 1] == 0).all(), (g, leaf)        # zeroed row
+            assert (arr[:, 0] == 7).all() and (arr[:, 2] == 7).all()
+        assert (np.asarray(cache["ssm"]["pos"])[:, 1] < 0).all()
+        assert (np.asarray(cache["kv"]["pos"])[:, 1] < 0).all()
+        assert (np.asarray(cache["kv"]["k"])[:, 1] == 7).all()  # stale, kept
+    assert saw_hybrid

@@ -43,6 +43,7 @@ def test_align_identity_properties():
     assert identity(a, a[:4]) < 1.0
 
 
+@pytest.mark.slow
 def test_full_rubicon_workflow(rng):
     """The paper's pipeline end-to-end at smoke scale."""
     from repro.core.qabas.search import QABASConfig, derive_config, run_search
