@@ -222,6 +222,99 @@ def bench(emit, arch: str = "qwen1.5-4b-smoke", slots: int = 4,
                  f"{dtps_e:.1f}<={dtps_s:.1f}")
 
 
+def bench_paged(emit, arch: str = "qwen1.5-4b-smoke", base_slots: int = 2,
+                cache_len: int = 40, block_len: int = 8,
+                prefill_chunk: int = 8, seed: int = 0) -> None:
+    """Paged pool vs the contiguous layout at EQUAL KV arena bytes.
+
+    The contiguous baseline is the degenerate paged config (one
+    ``cache_len``-sized block per slot): ``base_slots`` slots, each
+    reserving worst-case capacity up front, so only ``base_slots``
+    requests ever run concurrently. The paged engine holds the same KV
+    position budget (``base_slots * cache_len``) in ``block_len`` blocks
+    but exposes ``2 * base_slots`` decode slots: a mixed short/long
+    workload (mostly short requests + a few worst-case ones) admits at
+    roughly double the concurrency because short requests only occupy
+    the blocks they touch. The contiguous pool must queue the same
+    workload behind its fully-reserved slots. Emits concurrency, queue
+    depth, pool utilization and useful decode throughput for both, and
+    checks the paged outputs token-identical to the contiguous ones
+    (both engines are greedy over the same weights). The arena (KV
+    bytes) budget is equal by construction; per-slot int32 position
+    words and any SSM state scale with the doubled slot count —
+    ``cache_kib``/``cache_bytes_ratio`` in the output keep that
+    honest. Pure-SSM archs have no KV to page and are skipped.
+    """
+    # exact equal-arena accounting needs cache_len | block_len: round
+    # down so the paged budget never silently undercuts the baseline
+    cache_len = max(cache_len // block_len, 1) * block_len
+    cfg = get_config(arch)
+    if not tfm.paged_group_layout(cfg, cache_len, block_len):
+        # pure-SSM archs have no KV to page: a "paged" engine is just
+        # more slots of per-slot state, so the equal-bytes comparison
+        # would measure slot count, not paging — skip honestly
+        emit("serving_paged_vs_contig__SKIPPED", 0.0,
+             f"{arch} has no KV-bearing groups (nothing to page)")
+        return
+    params = api.init_params(jax.random.key(0), cfg)
+    rs = np.random.RandomState(seed)
+    # mixed workload: 3/4 one-block short requests, 1/4 worst-case longs
+    # (the long ones EXACTLY fill cache_len — the boundary the admission
+    # off-by-one fix admits: P + max_new - 1 == cache_len)
+    workload = []
+    for i in range(base_slots * 6):
+        if i % 4 == 3:
+            plen, mnew = cache_len // 2, cache_len // 2 + 1   # exact fit
+        else:
+            plen = max(block_len // 2, 1)
+            mnew = block_len - plen + 1       # writes exactly one block
+        prompt = rs.randint(1, cfg.vocab_size, size=plen).tolist()
+        workload.append((prompt, mnew))
+
+    budget_blocks = base_slots * (cache_len // block_len)
+    variants = {
+        "contig": dict(n_slots=base_slots, block_len=cache_len,
+                       n_blocks=base_slots),
+        "paged": dict(n_slots=2 * base_slots, block_len=block_len,
+                      n_blocks=budget_blocks),
+    }
+    outs, stats = {}, {}
+    for name, kw in variants.items():
+        engine = ServingEngine(params, cfg, cache_len=cache_len,
+                               prefill_chunk=prefill_chunk,
+                               cache_dtype=jnp.dtype(cfg.dtype), **kw)
+        run_engine(engine, workload)                 # warm/compile
+        _, out = run_engine(engine, workload)
+        outs[name] = out
+        m = engine.metrics.summary()
+        stats[name] = (m, engine.pool.nbytes())
+        emit(f"serving_{name}_pool_{arch.replace('-smoke', '').replace('-', '_')}",
+             engine.metrics.decode_time * 1e6
+             / max(engine.metrics.decode_tokens, 1),
+             f"decode={m['decode_tokens_per_s']:.1f}tok/s;"
+             f"concurrency={m['slot_occupancy']:.2f}/{kw['n_slots']};"
+             f"queue_max={m['queue_depth_max']:.0f};"
+             f"pool_util_max={m['pool_util_max']:.2f};"
+             f"preempts={m['preemptions']:.0f};"
+             f"kv_positions={kw['n_blocks'] * kw['block_len']};"
+             f"cache_kib={engine.pool.nbytes() / 1024:.0f}")
+    parity = all(outs["paged"][i] == outs["contig"][i]
+                 for i in range(len(workload)))
+    mp, mc = stats["paged"][0], stats["contig"][0]
+    gain = (mp["slot_occupancy"] / max(mc["slot_occupancy"], 1e-9))
+    emit("serving_paged_vs_contig", 0.0,
+         f"concurrency_gain={gain:.2f}x;"
+         f"queue_max_contig={mc['queue_depth_max']:.0f};"
+         f"queue_max_paged={mp['queue_depth_max']:.0f};"
+         f"cache_bytes_ratio={stats['paged'][1] / stats['contig'][1]:.2f};"
+         f"parity={'ok' if parity else 'MISMATCH'}")
+    if not parity and not cfg.n_experts:
+        raise AssertionError("paged/contiguous token mismatch")
+    if mp["slot_occupancy"] <= mc["slot_occupancy"]:
+        emit("serving_paged_vs_contig__NO_GAIN", 0.0,
+             f"{mp['slot_occupancy']:.2f}<={mc['slot_occupancy']:.2f}")
+
+
 # One smoke config per slot-servable cache family. Quant variants run on
 # qwen only — wbits isolates scheduling, not the arch's cache layout.
 FAMILY_ARCHS = ("qwen1.5-4b-smoke", "mamba2-130m-smoke",
@@ -233,6 +326,17 @@ def run(emit) -> None:
     for arch in FAMILY_ARCHS:
         wbits = (0, 8, 4) if arch.startswith("qwen") else (0,)
         bench(emit, arch=arch, wbits_list=wbits, tag_arch=True)
+    bench_paged(emit)
+
+
+def run_smoke(emit) -> None:
+    """Fast CI gate: engine-vs-static token parity through the paged
+    pool on the dense smoke arch, plus the paged-vs-contiguous
+    admission comparison. Minutes, not tens of minutes — the full
+    four-family / quant sweep stays in the slow job (``run``)."""
+    bench(emit, arch="qwen1.5-4b-smoke", slots=2, oversub=2,
+          prompt_len=8, max_tokens=12, prefill_chunk=4, wbits_list=(0,))
+    bench_paged(emit, base_slots=2, cache_len=24, block_len=8)
 
 
 def main() -> None:
@@ -247,10 +351,21 @@ def main() -> None:
     ap.add_argument("--eos-id", type=int, default=-1,
                     help="stop-token id on every request (-1 = none); "
                          "engine evicts at EOS, static decodes to horizon")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI gate: qwen parity + paged-vs-contig "
+                         "admission, tiny sizes")
+    ap.add_argument("--block-len", type=int, default=8,
+                    help="block size for the paged-vs-contiguous "
+                         "admission comparison (0 = skip it); other "
+                         "sizes follow --slots/--prompt-len/--tokens")
     args = ap.parse_args()
 
     def emit(name, us, derived=""):
         print(f"{name},{us:.2f},{derived}")
+
+    if args.smoke:
+        run_smoke(emit)
+        return
 
     for arch in args.arch:
         # packed-weight variants only exercise attention-family archs'
@@ -261,6 +376,12 @@ def main() -> None:
               wbits_list=tuple(args.wbits),
               eos_id=args.eos_id if args.eos_id >= 0 else None,
               tag_arch=len(args.arch) > 1)
+    if args.block_len:
+        bench_paged(emit, arch=args.arch[0],
+                    base_slots=max(args.slots // 2, 1),
+                    cache_len=args.prompt_len + args.tokens,
+                    block_len=args.block_len,
+                    prefill_chunk=args.prefill_chunk)
 
 
 if __name__ == "__main__":

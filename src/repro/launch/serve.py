@@ -20,6 +20,16 @@ lockstep batch. ``--eos-id`` marks a stop token on every request
 (greedy decode ends early when it's emitted), which exercises
 early-eviction slot recycling under the Poisson stream.
 
+KV lives in a PAGED block pool (``repro.serving.cache``): ``--block-len``
+sets the arena block size and ``--n-blocks`` the arena depth per layer
+group — leave it 0 for full backing, or set it below
+``slots * ceil(cache_len/block_len)`` to oversubscribe decode slots
+against KV bytes (short requests only pay for blocks they touch; the
+engine preempts the youngest request if the pool runs dry). The run
+summary reports pool utilization and preemptions. ``--history-limit``
+bounds host-side per-request bookkeeping so the process can serve
+indefinitely at flat memory.
+
 ``--wbits 8|4`` serves from packed int8/int4 weights (dequant-on-read —
 halving/quartering weight HBM traffic; the Pallas ``qmatmul`` kernel is
 the TPU twin of this XLA path).
@@ -79,11 +89,19 @@ def run_engine(params, cfg, args) -> None:
     engine = api.make_serving_engine(
         params, cfg, n_slots=args.slots, cache_len=args.cache_len,
         prefill_chunk=args.prefill_chunk,
-        cache_dtype=jnp.dtype(cfg.dtype))
+        cache_dtype=jnp.dtype(cfg.dtype),
+        block_len=args.block_len, n_blocks=args.n_blocks,
+        history_limit=args.history_limit or None)
+    pool = engine.pool
     pending = build_request_stream(cfg, args)
     print(f"[serve] engine: {args.requests} requests over "
           f"{pending[-1].arrival_time:.2f}s (rate {args.rate}/s), "
           f"{args.slots} slots, chunk {args.prefill_chunk}")
+    print(f"[serve] paged pool: block_len {pool.block_len}, "
+          f"{pool.block_stats()['blocks_total']} blocks "
+          f"({pool.nbytes()/2**20:.1f} MiB cache)"
+          + (f", history_limit {args.history_limit}"
+             if args.history_limit else ""))
     t0 = time.perf_counter()
     i = 0
     while i < len(pending) or engine.busy:
@@ -104,8 +122,13 @@ def run_engine(params, cfg, args) -> None:
           f"p95 {s['ttft_p95_s']*1e3:.0f}ms | queue depth "
           f"max {s['queue_depth_max']} mean {s['queue_depth_mean']:.1f} | "
           f"slot occupancy {s['slot_occupancy']:.2f}/{args.slots}")
-    sample = engine.completed[0].out_tokens[:16]
-    print("[serve] sample:", sample)
+    print(f"[serve] pool util mean {s['pool_util_mean']:.2f} "
+          f"max {s['pool_util_max']:.2f} | "
+          f"preemptions {s['preemptions']:.0f}")
+    done = engine.drain_completed()
+    if done:
+        sample = done[min(done)].out_tokens[:16]
+        print("[serve] sample:", sample)
 
 
 def run_static(params, cfg, args) -> None:
@@ -166,7 +189,18 @@ def main():
                          "-1 = none). Requests end early when the greedy "
                          "token equals it — exercises early slot recycling")
     ap.add_argument("--cache-len", type=int, default=0,
-                    help="per-slot KV capacity (0 = prompt+tokens)")
+                    help="per-request KV capacity (0 = prompt+tokens)")
+    ap.add_argument("--block-len", type=int, default=16,
+                    help="KV positions per paged-pool arena block "
+                         "(cache_len degenerates to contiguous rows)")
+    ap.add_argument("--n-blocks", type=int, default=0,
+                    help="arena blocks per layer group (0 = full "
+                         "backing = n_slots*ceil(cache_len/block_len); "
+                         "set lower to oversubscribe slots vs KV bytes)")
+    ap.add_argument("--history-limit", type=int, default=0,
+                    help="bound host-side per-request history to the "
+                         "most recent N (0 = unbounded) so long serves "
+                         "run at flat memory")
     ap.add_argument("--wbits", type=int, default=0, choices=[0, 4, 8])
     args = ap.parse_args()
     if not args.cache_len:

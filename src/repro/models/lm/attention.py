@@ -349,8 +349,70 @@ def init_attn_cache_slots(cfg: ModelConfig, batch: int, cache_len: int,
     }
 
 
+def attn_ring_len(cfg: ModelConfig, cache_len: int, *, window: int = 0) -> int:
+    """Logical (ring) length of this layer kind's KV cache — what the
+    paged pool's per-slot block table must be able to address."""
+    return min(window, cache_len) if window > 0 else cache_len
+
+
+def init_attn_cache_paged(cfg: ModelConfig, n_slots: int, cache_len: int,
+                          n_blocks: int, block_len: int, *, window: int = 0,
+                          dtype=jnp.bfloat16) -> Dict:
+    """Paged slot-pool cache: KV bytes live in a shared block arena
+    ``(n_blocks, block_len, Hkv, hd)`` instead of one contiguous row per
+    slot. A host-side block table (``(n_slots, T)``, passed into the
+    decode program each tick) maps each slot's logical block j to an
+    arena block; positions stay PER SLOT (``pos: (n_slots, T*block_len)``
+    int32 words) so validity masking and the reset-spec recycle machinery
+    are unchanged — a recycled arena block's stale KV is masked because
+    the new occupant's ``pos`` row is empty until it writes."""
+    Hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    L = attn_ring_len(cfg, cache_len, window=window)
+    T = -(-L // block_len)                     # blocks per slot (ceil)
+    return {
+        "k": jnp.zeros((n_blocks, block_len, Hkv, hd), dtype),
+        "v": jnp.zeros((n_blocks, block_len, Hkv, hd), dtype),
+        "pos": jnp.full((n_slots, T * block_len), EMPTY_POS, jnp.int32),
+        "window": jnp.asarray(window, jnp.int32),
+    }
+
+
+def attn_cache_slot_axes() -> Dict:
+    """Which leaves of the PAGED cache carry a slot axis (axis 1 once
+    layer-stacked). Arena leaves (``False``) are shared across slots: the
+    serving pool's row gather passes them through whole and its row
+    scatter takes the updated arena back whole."""
+    return {"k": False, "v": False, "pos": True, "window": False}
+
+
+def paged_indices(table: jax.Array, t: jax.Array, n_blocks: int,
+                  block_len: int):
+    """Block-indirect scatter/gather indices shared by the paged
+    attention and MLA decode paths.
+
+    table: (B, T) int32 arena-block table (-1 = unassigned); t: (B, C)
+    positions (< 0 = pad). Returns ``(wblk, off, lw, gidx, Leff)``:
+    arena block + in-block offset for the KV scatter ((B, C), pushed out
+    of bounds — dropped — for pad tokens and unassigned blocks), the pos
+    scatter index ``lw`` (kept in LOCKSTEP with the KV write: if the
+    mapped block is unassigned the pos write drops too, or a valid pos
+    entry would admit another block's garbage through the clamped
+    gather), the clamped (B, T) arena gather indices, and the padded
+    ring length ``Leff = T * block_len``.
+    """
+    B, T = table.shape
+    Leff = T * block_len
+    bidx = jnp.arange(B)[:, None]
+    l = jnp.where(t >= 0, t % Leff, Leff)         # Leff is OOB -> drop
+    blk = table[bidx, jnp.minimum(l // block_len, T - 1)]
+    wblk = jnp.where((t >= 0) & (blk >= 0), blk, n_blocks)
+    lw = jnp.where(wblk < n_blocks, l, Leff)
+    return wblk, l % block_len, lw, jnp.maximum(table, 0), Leff
+
+
 def attn_decode_slots(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
-                      cfg: ModelConfig, *, window: int = 0
+                      cfg: ModelConfig, *, window: int = 0,
+                      table: Optional[jax.Array] = None
                       ) -> Tuple[jax.Array, Dict]:
     """Slot-batched decode: every batch row advances at its OWN position.
 
@@ -362,36 +424,61 @@ def attn_decode_slots(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
     is one chunked-prefill step for a single slot (B == 1). Causality
     within a chunk holds because KV is written before attending and the
     mask compares cached positions against each query's position.
+
+    ``table`` switches to the PAGED cache layout: ``cache["k"]``/``v``
+    are shared block arenas ``(n_blocks, block_len, Hkv, hd)`` and
+    ``table: (B, T)`` int32 maps each row's logical block to an arena
+    block (-1 = unassigned). Token position t lands in arena block
+    ``table[b, (t % (T*block_len)) // block_len]`` at offset
+    ``t % block_len``; reads gather each row's T blocks back into a
+    ``(B, T*block_len)`` logical view. Unassigned entries gather arena
+    block 0, but ``pos`` is per slot, so those logical positions still
+    carry the empty sentinel and mask out — which is also why a recycled
+    arena block cannot leak its previous owner's KV.
     """
     B, C, _ = x.shape
     H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     group = H // Hkv
     q, k_new, v_new = _project_qkv(p, x, jnp.maximum(t, 0), cfg)
 
-    L = cache["k"].shape[1]
-    slot = jnp.where(t >= 0, t % L, L)            # L is OOB -> mode="drop"
     bidx = jnp.arange(B)[:, None]
     k_new = constrain(k_new, P(BATCH_AXES, None, None, None))
     v_new = constrain(v_new, P(BATCH_AXES, None, None, None))
-    k = cache["k"].at[bidx, slot].set(k_new.astype(cache["k"].dtype),
-                                      mode="drop")
-    v = cache["v"].at[bidx, slot].set(v_new.astype(cache["v"].dtype),
-                                      mode="drop")
-    pos = cache["pos"].at[bidx, slot].set(t, mode="drop")
+    if table is None:
+        L = cache["k"].shape[1]
+        slot = jnp.where(t >= 0, t % L, L)        # L is OOB -> mode="drop"
+        k = cache["k"].at[bidx, slot].set(k_new.astype(cache["k"].dtype),
+                                          mode="drop")
+        v = cache["v"].at[bidx, slot].set(v_new.astype(cache["v"].dtype),
+                                          mode="drop")
+        pos = cache["pos"].at[bidx, slot].set(t, mode="drop")
+        seq_spec = P(BATCH_AXES, "model", None, None)
+        k = constrain(k, seq_spec)
+        v = constrain(v, seq_spec)
+        k_read, v_read = k, v
+    else:
+        Nb, bl = cache["k"].shape[0], cache["k"].shape[1]
+        wblk, off, lw, gidx, Leff = paged_indices(table, t, Nb, bl)
+        k = cache["k"].at[wblk, off].set(k_new.astype(cache["k"].dtype),
+                                         mode="drop")
+        v = cache["v"].at[wblk, off].set(v_new.astype(cache["v"].dtype),
+                                         mode="drop")
+        pos = cache["pos"].at[bidx, lw].set(t, mode="drop")
+        k_read = k[gidx].reshape(B, Leff, Hkv, hd)
+        v_read = v[gidx].reshape(B, Leff, Hkv, hd)
+        k_read = constrain(k_read, P(BATCH_AXES, "model", None, None))
+        v_read = constrain(v_read, P(BATCH_AXES, "model", None, None))
 
-    seq_spec = P(BATCH_AXES, "model", None, None)
-    k = constrain(k, seq_spec)
-    v = constrain(v, seq_spec)
     cdt = jnp.bfloat16 if jnp.dtype(k.dtype).itemsize == 1 else k.dtype
     qg = q.reshape(B, C, Hkv, group, hd).astype(cdt)
-    s = jnp.einsum("bckgd,blkd->bckgl", qg, k.astype(cdt),
+    s = jnp.einsum("bckgd,blkd->bckgl", qg, k_read.astype(cdt),
                    preferred_element_type=jnp.float32) * (hd ** -0.5)
     valid = (pos >= 0)[:, None, :] & (pos[:, None, :] <= t[:, :, None])
     if window > 0:
         valid &= pos[:, None, :] > (t[:, :, None] - window)
     s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
     prob = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bckgl,blkd->bckgd", prob.astype(cdt), v.astype(cdt),
+    o = jnp.einsum("bckgl,blkd->bckgd", prob.astype(cdt), v_read.astype(cdt),
                    preferred_element_type=jnp.float32).astype(x.dtype)
     o = o.reshape(B, C, H * hd)
     out = dense(p["wo"], o, cfg=cfg, tag="attn/wo")

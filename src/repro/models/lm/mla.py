@@ -15,7 +15,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.config import ModelConfig
-from repro.models.lm.attention import EMPTY_POS, NEG_INF, blockwise_attn
+from repro.models.lm.attention import (EMPTY_POS, NEG_INF, blockwise_attn,
+                                       paged_indices)
 from repro.models.lm.common import (BATCH_AXES, Params, constrain, dense,
                                     make_dense_params, make_rmsnorm_params,
                                     rmsnorm)
@@ -105,6 +106,25 @@ def init_mla_cache(cfg: ModelConfig, batch: int, cache_len: int,
 init_mla_cache_slots = init_mla_cache
 
 
+def init_mla_cache_paged(cfg: ModelConfig, n_slots: int, cache_len: int,
+                         n_blocks: int, block_len: int,
+                         dtype=jnp.bfloat16) -> Dict:
+    """Paged latent cache: ``c``/``k_rope`` bytes live in a shared block
+    arena ``(n_blocks, block_len, ...)``; positions stay per slot
+    (``pos: (n_slots, T*block_len)``) so validity masking and reset-spec
+    recycling are unchanged (see ``attention.init_attn_cache_paged``)."""
+    _, _, kvr, _, rope_d, _ = _dims(cfg)
+    T = -(-cache_len // block_len)
+    return {"c": jnp.zeros((n_blocks, block_len, kvr), dtype),
+            "k_rope": jnp.zeros((n_blocks, block_len, rope_d), dtype),
+            "pos": jnp.full((n_slots, T * block_len), EMPTY_POS, jnp.int32)}
+
+
+def mla_cache_slot_axes() -> Dict:
+    """Paged-cache leaves with a slot axis (see attn_cache_slot_axes)."""
+    return {"c": False, "k_rope": False, "pos": True}
+
+
 def mla_cache_specs():
     return {"c": P(BATCH_AXES, "model", None),
             "k_rope": P(BATCH_AXES, "model", None),
@@ -140,7 +160,8 @@ def mla_decode(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
 
 
 def mla_decode_slots(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
-                     cfg: ModelConfig) -> Tuple[jax.Array, Dict]:
+                     cfg: ModelConfig, table: "jax.Array" = None
+                     ) -> Tuple[jax.Array, Dict]:
     """Slot-batched absorbed-form decode: every row at its OWN position.
 
     x: (B, C, d); t: (B, C) int32 per-token positions, ``t < 0`` marking
@@ -150,6 +171,13 @@ def mla_decode_slots(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
     one chunked-prefill step. Causality within a chunk holds because the
     latent KV is written before scoring and the mask compares cached
     positions against each query's position.
+
+    ``table`` switches to the PAGED layout: ``c``/``k_rope`` are shared
+    block arenas ``(n_blocks, block_len, ...)`` and ``table: (B, T)``
+    maps each row's logical blocks to arena blocks (-1 = unassigned);
+    reads gather the row's blocks into a ``(B, T*block_len)`` logical
+    view and ``pos`` (still per slot) masks stale / unassigned entries
+    (see ``attention.attn_decode_slots``).
     """
     B, C, _ = x.shape
     H, qr, kvr, nope, rope_d, vd = _dims(cfg)
@@ -157,38 +185,52 @@ def mla_decode_slots(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
     q_nope, q_rope = _project_q(p, x, tq, cfg)            # (B,C,H,*)
     c_new, kr_new = _project_kv_latent(p, x, tq, cfg)     # (B,C,kvr)
 
-    L = cache["c"].shape[1]
-    slot = jnp.where(t >= 0, t % L, L)        # L is OOB -> mode="drop"
     bidx = jnp.arange(B)[:, None]
     c_new = constrain(c_new, P(BATCH_AXES, None, None))
     kr_new = constrain(kr_new, P(BATCH_AXES, None, None))
-    c = cache["c"].at[bidx, slot].set(c_new.astype(cache["c"].dtype),
-                                      mode="drop")
-    k_rope = cache["k_rope"].at[bidx, slot].set(
-        kr_new.astype(cache["k_rope"].dtype), mode="drop")
-    pos = cache["pos"].at[bidx, slot].set(t, mode="drop")
+    if table is None:
+        L = cache["c"].shape[1]
+        slot = jnp.where(t >= 0, t % L, L)    # L is OOB -> mode="drop"
+        c = cache["c"].at[bidx, slot].set(c_new.astype(cache["c"].dtype),
+                                          mode="drop")
+        k_rope = cache["k_rope"].at[bidx, slot].set(
+            kr_new.astype(cache["k_rope"].dtype), mode="drop")
+        pos = cache["pos"].at[bidx, slot].set(t, mode="drop")
+        c = constrain(c, P(BATCH_AXES, "model", None))
+        k_rope = constrain(k_rope, P(BATCH_AXES, "model", None))
+        c_read, kr_read = c, k_rope
+    else:
+        Nb, bl = cache["c"].shape[0], cache["c"].shape[1]
+        wblk, off, lw, gidx, Leff = paged_indices(table, t, Nb, bl)
+        c = cache["c"].at[wblk, off].set(c_new.astype(cache["c"].dtype),
+                                         mode="drop")
+        k_rope = cache["k_rope"].at[wblk, off].set(
+            kr_new.astype(cache["k_rope"].dtype), mode="drop")
+        pos = cache["pos"].at[bidx, lw].set(t, mode="drop")
+        c_read = constrain(c[gidx].reshape(B, Leff, kvr),
+                           P(BATCH_AXES, "model", None))
+        kr_read = constrain(k_rope[gidx].reshape(B, Leff, rope_d),
+                            P(BATCH_AXES, "model", None))
 
     # weight absorption: score in latent space. q replicated over 'model',
     # latent cache sequence-sharded (flash-decoding pattern).
     from repro.models.lm.common import kernel_of
-    c = constrain(c, P(BATCH_AXES, "model", None))
-    k_rope = constrain(k_rope, P(BATCH_AXES, "model", None))
     wukv = kernel_of(p["wukv"], jnp.float32).reshape(kvr, H, nope + vd)
     w_uk = wukv[..., :nope]                               # (kvr, H, nope)
     w_uv = wukv[..., nope:]                               # (kvr, H, vd)
     qf = constrain(q_nope, P(BATCH_AXES, None, None, None)).astype(c.dtype)
     q_abs = jnp.einsum("bchn,rhn->bchr", qf, w_uk.astype(c.dtype))
     # latent cache read once in storage dtype, fp32 accumulation
-    s = jnp.einsum("bchr,blr->bchl", q_abs, c,
+    s = jnp.einsum("bchr,blr->bchl", q_abs, c_read,
                    preferred_element_type=jnp.float32)
-    s = s + jnp.einsum("bchp,blp->bchl", q_rope.astype(k_rope.dtype),
-                       k_rope, preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bchp,blp->bchl", q_rope.astype(kr_read.dtype),
+                       kr_read, preferred_element_type=jnp.float32)
     s = constrain(s, P(BATCH_AXES, None, None, "model"))
     s = s * ((nope + rope_d) ** -0.5)
     valid = (pos >= 0)[:, None, :] & (pos[:, None, :] <= t[:, :, None])
     s = jnp.where(valid[:, :, None, :], s, NEG_INF)
     prob = jax.nn.softmax(s, axis=-1)
-    o_lat = jnp.einsum("bchl,blr->bchr", prob.astype(c.dtype), c,
+    o_lat = jnp.einsum("bchl,blr->bchr", prob.astype(c.dtype), c_read,
                        preferred_element_type=jnp.float32)
     o = jnp.einsum("bchr,rhv->bchv", o_lat.astype(c.dtype),
                    w_uv.astype(c.dtype))

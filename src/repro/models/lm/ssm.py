@@ -179,6 +179,12 @@ def ssm_cache_specs():
             "conv": P(BATCH_AXES, None, "model")}
 
 
+def ssm_cache_slot_axes():
+    """Every SSM cache leaf is per slot — recurrent state is O(1) per
+    row, so the paged KV pool leaves it slot-indexed (nothing to page)."""
+    return {"h": True, "conv": True, "pos": True}
+
+
 def ssm_cache_reset_spec():
     """Per-leaf slot-recycle action (see repro.serving.cache): recurrent
     state feeds forward multiplicatively, so a recycled row must be

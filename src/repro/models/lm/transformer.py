@@ -234,26 +234,33 @@ def supports_slot_serving(cfg: ModelConfig) -> bool:
 
 
 def block_decode_slots(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
-                       cfg: ModelConfig, kind: str) -> Tuple[jax.Array, Dict]:
-    """Per-slot-position variant of :func:`block_decode`. t: (B, C)."""
+                       cfg: ModelConfig, kind: str,
+                       table: Optional[jax.Array] = None
+                       ) -> Tuple[jax.Array, Dict]:
+    """Per-slot-position variant of :func:`block_decode`. t: (B, C).
+
+    ``table`` (paged serving pool): per-slot block table ``(B, T)`` for
+    this layer group's KV arena; SSM state is per-slot either way."""
     if kind not in SLOT_KINDS:
         raise NotImplementedError(
             f"slot-batched decode not implemented for block kind {kind!r}")
     x = constrain(x, DECODE_RESID)
     h = rmsnorm(p["ln1"], x, cfg.norm_eps)
     if kind in ("mla_dense", "mla_moe"):
-        mix, nc = mla_mod.mla_decode_slots(p["attn"], h, cache, t, cfg)
+        mix, nc = mla_mod.mla_decode_slots(p["attn"], h, cache, t, cfg,
+                                           table=table)
     elif kind == "ssm":
         mix, nc = ssm_mod.ssm_decode_slots(p["ssm"], h, cache, t, cfg)
         return constrain(x + mix, DECODE_RESID), nc
     elif kind.startswith("hybrid"):
         w = _block_window(cfg, kind)
         ya, nkv = attn_mod.attn_decode_slots(p["attn"], h, cache["kv"], t,
-                                             cfg, window=w)
+                                             cfg, window=w, table=table)
         ys, nst = ssm_mod.ssm_decode_slots(p["ssm"], h, cache["ssm"], t, cfg)
         mix, nc = 0.5 * (ya + ys), {"kv": nkv, "ssm": nst}
     else:
-        mix, nc = attn_mod.attn_decode_slots(p["attn"], h, cache, t, cfg)
+        mix, nc = attn_mod.attn_decode_slots(p["attn"], h, cache, t, cfg,
+                                             table=table)
     x = constrain(x + mix, DECODE_RESID)
     h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
     if kind in ("moe", "mla_moe"):
@@ -307,6 +314,63 @@ def init_block_cache_slots(cfg: ModelConfig, kind: str, batch: int,
                 "ssm": ssm_mod.init_ssm_cache_slots(cfg, batch, dtype)}
     return attn_mod.init_attn_cache_slots(
         cfg, batch, cache_len, window=_block_window(cfg, kind), dtype=dtype)
+
+
+def init_block_cache_paged(cfg: ModelConfig, kind: str, n_slots: int,
+                           cache_len: int, n_blocks: int, block_len: int,
+                           dtype=jnp.bfloat16):
+    """Paged slot-pool cache for one block: KV bytes in a shared block
+    arena, positions per slot, SSM state per slot (O(1)/row — nothing to
+    page)."""
+    if kind in ("mla_dense", "mla_moe"):
+        return mla_mod.init_mla_cache_paged(cfg, n_slots, cache_len,
+                                            n_blocks, block_len, dtype)
+    if kind == "ssm":
+        return ssm_mod.init_ssm_cache_slots(cfg, n_slots, dtype)
+    if kind.startswith("hybrid"):
+        return {"kv": attn_mod.init_attn_cache_paged(
+                    cfg, n_slots, cache_len, n_blocks, block_len,
+                    window=_block_window(cfg, kind), dtype=dtype),
+                "ssm": ssm_mod.init_ssm_cache_slots(cfg, n_slots, dtype)}
+    return attn_mod.init_attn_cache_paged(
+        cfg, n_slots, cache_len, n_blocks, block_len,
+        window=_block_window(cfg, kind), dtype=dtype)
+
+
+def block_cache_slot_axes(cfg: ModelConfig, kind: str):
+    """Which leaves of a block's PAGED cache carry a slot axis (axis 1
+    once layer-stacked): True = per-slot (row gather/scatter applies),
+    False = shared arena / per-layer scalar (passed through whole)."""
+    if kind in ("mla_dense", "mla_moe"):
+        return mla_mod.mla_cache_slot_axes()
+    if kind == "ssm":
+        return ssm_mod.ssm_cache_slot_axes()
+    if kind.startswith("hybrid"):
+        return {"kv": attn_mod.attn_cache_slot_axes(),
+                "ssm": ssm_mod.ssm_cache_slot_axes()}
+    return attn_mod.attn_cache_slot_axes()
+
+
+def caches_slot_axes(cfg: ModelConfig) -> Dict:
+    """Slot-axis pytree matching the :func:`init_caches_paged` pool."""
+    return {gname: block_cache_slot_axes(cfg, kind)
+            for gname, kind, n in group_names(cfg)}
+
+
+def paged_group_layout(cfg: ModelConfig, cache_len: int,
+                       block_len: int) -> Dict[str, int]:
+    """{group name: blocks per slot (T)} for every KV-bearing (paged)
+    group. SSM groups carry no table — their state is per slot. Sliding-
+    window groups ring at ``min(window, cache_len)`` so they need fewer
+    blocks per slot than full-attention groups."""
+    out: Dict[str, int] = {}
+    for gname, kind, n in group_names(cfg):
+        if kind == "ssm":
+            continue
+        L = attn_mod.attn_ring_len(cfg, cache_len,
+                                   window=_block_window(cfg, kind))
+        out[gname] = -(-L // block_len)
+    return out
 
 
 def block_cache_reset_spec(cfg: ModelConfig, kind: str):
@@ -521,7 +585,8 @@ def decode_step(params: Params, caches: Dict, tokens: jax.Array,
 
 def decode_step_slots(params: Params, caches: Dict, tokens: jax.Array,
                       t: jax.Array, cfg: ModelConfig,
-                      logits_at: Optional[jax.Array] = None
+                      logits_at: Optional[jax.Array] = None,
+                      tables: Optional[Dict[str, jax.Array]] = None
                       ) -> Tuple[jax.Array, Dict]:
     """Slot-batched decode/chunk step for the continuous-batching engine.
 
@@ -534,16 +599,23 @@ def decode_step_slots(params: Params, caches: Dict, tokens: jax.Array,
     ``logits_at`` (traced scalar index): unembed only that sequence
     position — chunked prefill reads a single token's logits, so the
     other C-1 rows of the vocab matmul would be wasted work.
+
+    ``tables`` (paged serving pool): {group name: (B, T) block table}
+    for KV-bearing groups — the caches then hold shared block arenas
+    instead of contiguous per-slot rows. One table per group, shared by
+    every layer in the group (each layer has its own arena slice).
     """
     x = embed_tokens(params, jnp.maximum(tokens, 0), cfg)
     new_caches: Dict[str, Any] = {}
     for gname, kind, n in group_names(cfg):
         pstack = params["groups"][gname]
         cstack = caches[gname]
+        table = None if tables is None else tables.get(gname)
 
         def step(xc, xs):
             pl, cl = xs
-            xo, nc = block_decode_slots(pl, xc, cl, t, cfg, kind)
+            xo, nc = block_decode_slots(pl, xc, cl, t, cfg, kind,
+                                        table=table)
             return xo, nc
 
         x, ncache = jax.lax.scan(step, x, (pstack, cstack))
@@ -567,6 +639,27 @@ def init_caches_slots(cfg: ModelConfig, batch: int, cache_len: int,
         def one(_):
             return init_block_cache_slots(cfg, kind, batch, cache_len,
                                           dtype=cache_dtype)
+        caches[gname] = jax.vmap(one)(jnp.arange(n))
+    return caches
+
+
+def init_caches_paged(cfg: ModelConfig, n_slots: int, cache_len: int,
+                      n_blocks: Dict[str, int], block_len: int,
+                      cache_dtype=jnp.bfloat16) -> Dict:
+    """Empty PAGED pool caches for the serving engine: per group, KV
+    leaves are shared block arenas ``(n_layers, n_blocks[g], block_len,
+    ...)``; positions and SSM state stay per slot. ``n_blocks`` maps each
+    paged group name to its arena size (SSM groups are ignored)."""
+    caches: Dict[str, Any] = {}
+    for gname, kind, n in group_names(cfg):
+        if kind not in SLOT_KINDS:
+            raise NotImplementedError(
+                f"slot cache pool not implemented for block kind {kind!r}")
+        nb = n_blocks.get(gname, 0)
+
+        def one(_):
+            return init_block_cache_paged(cfg, kind, n_slots, cache_len,
+                                          nb, block_len, dtype=cache_dtype)
         caches[gname] = jax.vmap(one)(jnp.arange(n))
     return caches
 

@@ -1,4 +1,4 @@
-"""Continuous-batching serving engine.
+"""Continuous-batching serving engine over a paged block-granular KV pool.
 
 Scheduler design (slot-based continuous batching, fixed JIT shapes)
 ===================================================================
@@ -7,41 +7,74 @@ The engine serves variable-length autoregressive requests at a fixed
 device footprint. All shape-polymorphism lives on the host; the device
 only ever sees two compiled programs:
 
-``decode``   ``decode_step_slots(params, pool, tokens (B,1), t (B,1))``
-             — one lockstep token for all B slots. Each row carries its
-             OWN position (the pool cache tracks ``pos`` per row), so
-             rows admitted at different times coexist in one batch.
-             Inactive rows are padded with ``t = -1``: they write
-             nothing into the cache (their scatter index is dropped)
-             and their logits are ignored.
+``decode``   ``decode_step_slots(params, pool, tokens (B,1), t (B,1),
+             tables)`` — one lockstep token for all B slots. Each row
+             carries its OWN position (the pool tracks ``pos`` per
+             row), so rows admitted at different times coexist in one
+             batch. Inactive rows are padded with ``t = -1``: they
+             write nothing into the cache (their scatter index is
+             dropped) and their logits are ignored.
 
 ``chunk``    the same kernel at shape ``(1, C)`` applied to a single
-             slot row gathered out of the pool — one chunked-prefill
-             step. Prompts are processed ``C`` tokens at a time and the
+             slot's view of the pool — one chunked-prefill step.
+             Prompts are processed ``C`` tokens at a time and the
              scheduler interleaves at most one chunk per slot between
              decode steps, bounding how long a long prompt can stall
              token generation for already-running requests (the
              classic prefill/decode interference fix).
 
+Paged KV pool (block arena + block tables + free list)
+------------------------------------------------------
+
+KV bytes live in a shared BLOCK ARENA per layer group: ``(n_layers,
+n_blocks, block_len, ...)`` leaves, instead of one contiguous
+``cache_len`` row per slot. A host-side block table per group
+(``(n_slots, T)``, ``T = ceil(ring_len/block_len)``) maps each slot's
+logical block to an arena block; tables are tiny int32 arrays shipped
+into the jitted programs every tick, so allocation (LIFO free list) is
+pure host bookkeeping. Positions stay PER SLOT — an int32 word per
+logical position — which keeps validity masking and the RESET-SPEC
+recycle machinery unchanged, and is what makes block recycling safe: a
+freed block keeps its bytes, but the next slot that maps it has an
+empty ``pos`` row until it writes, so stale KV can never attend back
+in. SSM recurrent state is O(1) per row and stays slot-indexed.
+
+Sizing: contiguous reserved ``n_slots * cache_len`` positions up
+front; the paged pool holds ``n_blocks * block_len`` and hands them
+out on demand, so short requests stop taxing the pool at worst-case
+length and ``n_slots`` can exceed what a contiguous pool of equal
+bytes could back. ``block_len=cache_len, n_blocks=n_slots`` recovers
+the contiguous layout exactly (the benchmark baseline).
+
+Admission policy: ``submit`` rejects only what can never run
+(``prompt + max_new - 1 > cache_len`` — the final token is never
+written — or more blocks than the arena holds). A queued request is
+admitted when a slot is free AND the pool can back its prompt; decode
+allocates one block at a time as positions cross block boundaries.
+When the pool runs dry mid-decode, the YOUNGEST running request is
+preempted (blocks freed, requeued at the front) and later resumes by
+re-prefilling prompt + generated tokens — greedy decode is
+deterministic, so its tokens are unchanged. Preempting the youngest
+keeps the oldest progressing: no livelock.
+
 Slot lifecycle
 --------------
 
-1. **Admit** — a request is popped from the FIFO queue into a free
-   slot. The slot's cache row is reset in place per each cache's RESET
-   SPEC (``tfm.caches_reset_specs``): position leaves take the empty
-   sentinel (KV bytes are left stale and masked out, so an attention
-   reset is O(L) position words, not O(L·H·hd) cache bytes), while SSM
-   recurrent state — which feeds forward multiplicatively and cannot be
-   masked at read time — is zeroed.
+1. **Admit** — queue head -> free slot, prompt blocks allocated. The
+   slot's per-slot rows are reset in place per each cache's RESET SPEC
+   (``tfm.caches_reset_specs``): position leaves take the empty
+   sentinel, SSM recurrent state — which feeds forward multiplicatively
+   and cannot be masked at read time — is zeroed; arena bytes are
+   shared and never touched.
 2. **Prefill** — the prompt streams through ``chunk`` steps; KV lands
-   directly in the slot's rows of the pool. The final chunk's logits
-   (taken at the last real token) yield the first generated token
-   (TTFT is recorded here).
+   in the slot's mapped arena blocks. The final chunk's logits (taken
+   at the last real token) yield the first generated token (TTFT).
 3. **Decode** — the slot joins the lockstep ``decode`` batch until it
-   emits ``max_new_tokens`` tokens (or EOS).
-4. **Evict** — the slot is freed and the next queued request is
-   admitted into it on the following scheduler tick. JIT shapes never
-   change throughout.
+   emits ``max_new_tokens`` tokens (or EOS), growing by one block each
+   time its position crosses a block boundary.
+4. **Evict** — blocks return to the free list, the slot frees, and the
+   next queued request is admitted on the following scheduler tick.
+   JIT shapes never change throughout.
 
 Because the decode batch shape is pinned at ``n_slots``, oversubscribed
 traffic (more requests than slots) queues on the host and drains into
@@ -53,11 +86,12 @@ Support matrix: every token-only stack — attention (``dense`` /
 ``moe``; MoE pad slots are masked out of expert dispatch so free slots
 never perturb live requests), SSM (``ssm`` — per-row ``pos: (B, 1)``
 validity leaf; pad rows freeze the recurrence), MLA (``mla_dense`` /
-``mla_moe`` — batched ``pos: (B, L)`` over the latent cache) and the
-parallel attention+SSM hybrids (``hybrid_full`` / ``hybrid_swa``,
-sliding-window ring rows included). vlm/audio archs need a frontend
-prefix the token-only chunked prefill cannot feed — ``ServingEngine``
-still raises for those (ROADMAP open item).
+``mla_moe`` — paged latent arena) and the parallel attention+SSM
+hybrids (``hybrid_full`` / ``hybrid_swa`` — sliding-window groups ring
+at ``min(window, cache_len)`` so they page fewer blocks per slot).
+vlm/audio archs need a frontend prefix the token-only chunked prefill
+cannot feed — ``ServingEngine`` still raises for those (ROADMAP open
+item).
 """
 from repro.serving.cache import CachePool
 from repro.serving.engine import Request, ServingEngine

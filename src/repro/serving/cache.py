@@ -1,59 +1,86 @@
-"""Slot-indexed cache pool for the continuous-batching engine.
+"""Paged block-granular cache pool for the continuous-batching engine.
 
-The pool is the ``tfm.init_caches_slots`` pytree: per layer group, a
-stack of per-layer caches whose leaves carry ``(n_layers, B, ...)`` with
-the slot (batch-row) axis at position 1 and a per-row position leaf
-(``pos: (n_layers, B, L)`` for attention/MLA, ``pos: (n_layers, B, 1)``
-for SSM state). Row operations, all built on ``lax.dynamic_slice`` /
-``lax.dynamic_update_slice`` with the slot index as a traced scalar so
-each compiles exactly once:
+Layout
+------
+Per layer group, KV bytes live in a shared BLOCK ARENA: leaves of shape
+``(n_layers, n_blocks, block_len, ...)`` instead of one contiguous
+``cache_len`` row per slot. A host-side block table per group
+(``(n_slots, T)`` int32, T = ceil(ring_len / block_len), -1 = free)
+maps each slot's logical block j to an arena block; the tables are tiny
+and are shipped into the jitted decode/chunk programs every tick, so
+allocation is pure host bookkeeping — zero device dispatches.
 
-- ``gather_row``  — slice one slot's row out of every leaf (the (1, C)
-  chunked-prefill step runs on this row tree);
-- ``scatter_row`` — write an updated row tree back into the pool;
-- ``mask_fresh`` / ``reset_row`` — invalidate a row per a RESET SPEC: a
-  pytree of the cache's structure whose string leaves say what slot
-  recycling means for that leaf. ``"keep"`` leaves stay stale-but-masked
-  (KV bytes — a reset costs O(L) position words, not O(L * Hkv * hd)
-  cache bytes), ``"empty"`` leaves are filled with the EMPTY_POS
-  sentinel, ``"zero"`` leaves are cleared (SSM recurrent state feeds
-  forward multiplicatively and cannot be masked at read time). The spec
-  comes from ``tfm.caches_reset_specs`` — cache modules own their
-  recycle semantics instead of this pool key-matching ``"pos"``.
+What stays per slot (axis 1 of the stacked leaves, as before):
+
+- position leaves (``pos: (n_layers, n_slots, T*block_len)``) — int32
+  words, so validity masking and the RESET-SPEC recycle machinery are
+  unchanged. This is also the stale-KV story for block recycling: a
+  freed arena block keeps its bytes, but the next slot that maps it has
+  an empty ``pos`` row until it writes, so the old owner's KV can never
+  attend back in.
+- SSM recurrent state (``h``/``conv``) — O(1) per row; nothing to page.
+
+Allocation
+----------
+``alloc(slot, upto)`` assigns arena blocks (LIFO free list, per group)
+covering logical positions ``[0, upto)`` — all-or-nothing, so a failed
+call changes nothing and the engine can preempt and retry. Sliding-
+window groups ring at ``min(window, cache_len)``: their logical blocks
+wrap (``t % (T*block_len)``), so a slot never needs more than T blocks
+per group no matter how long the request runs. ``release_slot`` returns
+every block to the free lists.
+
+Sizing: the contiguous layout reserved ``n_slots * cache_len`` KV
+positions per group up front; the paged pool holds ``n_blocks *
+block_len`` and hands them out on demand, so short requests stop taxing
+the pool at worst-case length and ``n_slots`` can exceed what a
+contiguous pool of equal bytes could back. ``block_len=cache_len,
+n_blocks=n_slots`` degenerates to exactly the old contiguous semantics
+(one block per slot) — the baseline benchmarks compare against.
+
+Row operations (``gather_row`` / ``scatter_row`` / ``mask_fresh`` /
+``reset_row``) are driven by two per-leaf spec pytrees from the cache
+modules: SLOT AXES (does this leaf have a slot axis, or is it a shared
+arena passed through whole?) and RESET SPECS (``keep`` / ``empty`` /
+``zero`` — what slot recycling means for the leaf).
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import ModelConfig
 from repro.models.lm.attention import EMPTY_POS
 from repro.models.lm import transformer as tfm
 
+DEFAULT_BLOCK_LEN = 16
 
-def _tree_gather_row(pool, slot):
-    """Slice row `slot` (length-1) off axis 1 of every stacked leaf.
 
-    Leaves with ndim < 2 (the per-layer ``window`` scalars, stacked to
-    (n_layers,)) have no slot axis and pass through whole.
+def _tree_gather_row(pool, slot, axes):
+    """Slice row `slot` (length-1) off axis 1 of every per-slot leaf.
+
+    Shared leaves — block arenas and the per-layer ``window`` scalars —
+    pass through whole (the chunk program writes arenas via the block
+    table, not by slot row).
     """
-    def one(leaf):
-        if leaf.ndim < 2:
+    def one(leaf, per_slot):
+        if not per_slot or leaf.ndim < 2:
             return leaf
         return jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=1)
-    return jax.tree.map(one, pool)
+    return jax.tree.map(one, pool, axes)
 
 
-def _tree_scatter_row(pool, row, slot):
-    def one(dst, src):
-        if dst.ndim < 2:
-            return dst
+def _tree_scatter_row(pool, row, slot, axes):
+    def one(dst, src, per_slot):
+        if not per_slot or dst.ndim < 2:
+            return src          # shared leaf: take the updated arena whole
         return jax.lax.dynamic_update_slice_in_dim(
             dst, src.astype(dst.dtype), slot, axis=1)
-    return jax.tree.map(one, pool, row)
+    return jax.tree.map(one, pool, row, axes)
 
 
 def _reset_fill(val, how):
@@ -71,7 +98,8 @@ def _tree_mask_fresh(row, fresh, spec):
     """Conditionally invalidate a gathered row tree: where ``fresh`` is
     nonzero, every resettable leaf takes its spec'd reset value (a
     select, not a write — this folds slot recycling into the first
-    prefill chunk so admission costs zero extra device dispatches)."""
+    prefill chunk so admission costs zero extra device dispatches).
+    Arena leaves are always ``keep`` and pass through untouched."""
     def one(val, how):
         fill = _reset_fill(val, how)
         if fill is None:
@@ -81,7 +109,8 @@ def _tree_mask_fresh(row, fresh, spec):
 
 
 def _tree_reset_row(pool, slot, spec):
-    """Invalidate one slot in place per the reset spec."""
+    """Invalidate one slot in place per the reset spec (non-``keep``
+    leaves are per slot by construction: positions and SSM state)."""
     def one(val, how):
         fill = _reset_fill(val, how)
         if fill is None:
@@ -92,19 +121,118 @@ def _tree_reset_row(pool, slot, spec):
 
 
 class CachePool:
-    """Device-resident slot pool + its jitted row operations."""
+    """Device-resident paged pool + host block allocator + jitted row ops.
+
+    Parameters
+    ----------
+    n_slots : decode batch rows.
+    cache_len : per-REQUEST logical capacity (positions a single request
+        may write; the block tables address ceil(ring/block_len) blocks).
+    block_len : KV positions per arena block. ``cache_len`` degenerates
+        to the contiguous layout.
+    n_blocks : arena blocks per full-length group. Groups that ring
+        shorter (sliding-window) and any explicit oversize are capped at
+        ``n_slots * T_g`` (every slot fully backed — more can never be
+        used). 0/None = full backing, i.e. the contiguous pool's
+        capacity at block granularity.
+    """
 
     def __init__(self, cfg: ModelConfig, n_slots: int, cache_len: int,
-                 cache_dtype=jnp.bfloat16):
+                 cache_dtype=jnp.bfloat16, block_len: int = 0,
+                 n_blocks: int = 0):
         self.cfg = cfg
         self.n_slots = int(n_slots)
         self.cache_len = int(cache_len)
-        self.caches: Dict[str, Any] = tfm.init_caches_slots(
-            cfg, n_slots, cache_len, cache_dtype=cache_dtype)
+        self.block_len = int(block_len) or min(DEFAULT_BLOCK_LEN, cache_len)
+        # {group: blocks per slot (T)} for KV-bearing groups
+        self.layout: Dict[str, int] = tfm.paged_group_layout(
+            cfg, cache_len, self.block_len)
+        self.n_blocks: Dict[str, int] = {
+            g: min(int(n_blocks) or self.n_slots * T, self.n_slots * T)
+            for g, T in self.layout.items()}
+        self.caches: Dict[str, Any] = tfm.init_caches_paged(
+            cfg, self.n_slots, cache_len, self.n_blocks, self.block_len,
+            cache_dtype=cache_dtype)
         self.reset_spec: Dict[str, Any] = tfm.caches_reset_specs(cfg)
+        self.slot_axes: Dict[str, Any] = tfm.caches_slot_axes(cfg)
         self._reset = jax.jit(
             functools.partial(_tree_reset_row, spec=self.reset_spec))
+        # host allocator state: block tables + LIFO free lists
+        self.tables: Dict[str, np.ndarray] = {
+            g: np.full((self.n_slots, T), -1, np.int32)
+            for g, T in self.layout.items()}
+        self.free: Dict[str, List[int]] = {
+            g: list(range(nb)) for g, nb in self.n_blocks.items()}
+        self.alloc_count = 0            # lifetime block grants (stats)
+        self._dev_tables = None         # rebuilt lazily after mutation
 
+    # ------------------------------------------------------- allocator
+    def blocks_for(self, n_positions: int) -> Dict[str, int]:
+        """Blocks per group needed to back ``n_positions`` written
+        positions (ring groups cap at their T — logical blocks wrap)."""
+        bl = self.block_len
+        return {g: min(-(-max(n_positions, 0) // bl), T)
+                for g, T in self.layout.items()}
+
+    def fits(self, n_positions: int) -> bool:
+        """Could a request writing ``n_positions`` EVER be served (worst
+        case vs total arena size)? Gate at submit — guarantees a lone
+        slot can always run to completion, so preemption cannot livelock."""
+        need = self.blocks_for(n_positions)
+        return all(need[g] <= self.n_blocks[g] for g in need)
+
+    def alloc(self, slot: int, upto: int) -> bool:
+        """Ensure blocks covering logical positions ``[0, upto)`` are
+        assigned to ``slot`` — all-or-nothing; False leaves the pool
+        untouched (the engine preempts and retries)."""
+        need = self.blocks_for(upto)
+        missing: Dict[str, List[int]] = {}
+        for g, j_max in need.items():
+            tab = self.tables[g]
+            miss = [j for j in range(j_max) if tab[slot, j] < 0]
+            if len(miss) > len(self.free[g]):
+                return False
+            missing[g] = miss
+        grew = False
+        for g, miss in missing.items():
+            for j in miss:
+                self.tables[g][slot, j] = self.free[g].pop()
+                self.alloc_count += 1
+                grew = True
+        if grew:
+            self._dev_tables = None
+        return True
+
+    def release_slot(self, slot: int) -> None:
+        """Return every block owned by ``slot`` to the free lists."""
+        for g, tab in self.tables.items():
+            owned = tab[slot][tab[slot] >= 0]
+            if owned.size:
+                self.free[g].extend(int(b) for b in owned)
+                tab[slot] = -1
+                self._dev_tables = None
+
+    def device_tables(self) -> Dict[str, jax.Array]:
+        """Block tables as device arrays (cached until the next mutation)."""
+        if self._dev_tables is None:
+            self._dev_tables = {g: jnp.asarray(t)
+                                for g, t in self.tables.items()}
+        return self._dev_tables
+
+    def table_rows(self, slot: int) -> Dict[str, jax.Array]:
+        """One slot's ``(1, T)`` table rows (the chunk program's view) —
+        sliced from the cached device tables, so the prefill hot loop
+        pays no host->device transfer while the tables are unchanged."""
+        dev = self.device_tables()
+        return {g: t[slot:slot + 1] for g, t in dev.items()}
+
+    def block_stats(self) -> Dict[str, float]:
+        total = sum(self.n_blocks.values())
+        used = total - sum(len(f) for f in self.free.values())
+        return {"blocks_used": used, "blocks_total": total,
+                "util": used / total if total else 0.0}
+
+    # ------------------------------------------------------ device ops
     def reset_slot(self, slot: int) -> None:
         self.caches = self._reset(self.caches, jnp.asarray(slot, jnp.int32))
 

@@ -1,10 +1,12 @@
-"""Continuous-batching scheduler: request queue -> slot pool -> tokens.
+"""Continuous-batching scheduler: request queue -> paged block pool -> tokens.
 
 See ``repro.serving.__init__`` for the design. The engine is pure
 host-side control flow around two jitted device programs (a lockstep
 ``(B, 1)`` decode over all slots and a ``(1, C)`` chunked-prefill step
-for one slot), so every scheduling decision — admission, eviction,
-prefill/decode interleave — costs zero retraces.
+for one slot), so every scheduling decision — admission, block
+allocation, preemption, eviction, prefill/decode interleave — costs
+zero retraces. Block tables are host numpy; they ride into the device
+programs as tiny int32 arguments each tick.
 """
 from __future__ import annotations
 
@@ -51,18 +53,34 @@ class _Slot:
     pending: List[int] = dataclasses.field(default_factory=list)
     last_token: int = 0                # next decode input
     fresh: bool = False                # first chunk must invalidate the row
+    seq: int = -1                      # admission order (preemption picks max)
 
 
 class ServingEngine:
-    """Slot-based continuous batching over ``decode_step_slots``.
+    """Slot-based continuous batching over a PAGED block-granular KV pool.
 
     Dense/SSM/MLA/hybrid archs decode bit-identically to the one-shot
     path regardless of scheduling (every cache kind carries per-row
-    positions; SSM recurrent state is zeroed on slot recycle). MoE archs
-    mask pad slots out of expert dispatch (they consume no capacity),
-    but token-choice routing still depends on which LIVE requests share
-    the capacity pool — the same composition effect the one-shot MoE
-    paths document in tests/test_decode.py.
+    positions; SSM recurrent state is zeroed on slot recycle; recycled
+    arena blocks are masked by the new occupant's empty position row).
+    MoE archs mask pad slots out of expert dispatch (they consume no
+    capacity), but token-choice routing still depends on which LIVE
+    requests share the capacity pool — the same composition effect the
+    one-shot MoE paths document in tests/test_decode.py.
+
+    Admission & preemption (paged pool)
+    -----------------------------------
+    ``submit`` rejects only what can NEVER run: ``len(prompt) +
+    max_new_tokens - 1 > cache_len`` (the final generated token is never
+    written back, so a request writes exactly P + max_new - 1 positions)
+    or more blocks than the whole arena holds. ``_admit`` takes the FIFO
+    head when a slot is free AND the pool can back its prompt; decode
+    allocates one block at a time as positions cross block boundaries.
+    When the pool runs dry mid-decode, the YOUNGEST running request is
+    preempted — blocks freed, request pushed back to the queue front —
+    and resumes later by re-prefilling prompt + generated tokens (greedy
+    decode is deterministic, so tokens are unchanged). Preempting the
+    youngest means the oldest always progresses: no livelock.
 
     Parameters
     ----------
@@ -73,15 +91,26 @@ class ServingEngine:
         prefix the token-only chunked prefill cannot feed and still
         raise.
     n_slots : decode batch size (fixed for the engine's lifetime).
-    cache_len : per-slot KV capacity; every admitted request must fit
-        ``len(prompt) + max_new_tokens <= cache_len``.
+    cache_len : per-REQUEST logical KV capacity; every admitted request
+        must satisfy ``len(prompt) + max_new_tokens - 1 <= cache_len``.
     prefill_chunk : tokens per chunked-prefill step. The scheduler runs
         at most one chunk per slot between decode steps.
+    block_len : KV positions per arena block (``cache_len`` degenerates
+        to the old contiguous one-row-per-slot layout).
+    n_blocks : arena blocks per full-length layer group; 0 = full
+        backing (``n_slots * ceil(cache_len/block_len)``). Set lower to
+        oversubscribe slots against KV bytes — short requests then only
+        pay for the blocks they touch.
+    history_limit : bound host-side growth for indefinite serves: per-
+        slot admission history and the completed map keep only the most
+        recent N entries, and metrics sample reservoirs roll (aggregate
+        counters stay exact). None = unbounded (tests, benches).
     """
 
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 4,
                  cache_len: int = 256, prefill_chunk: int = 16,
-                 cache_dtype=jnp.bfloat16,
+                 cache_dtype=jnp.bfloat16, block_len: int = 0,
+                 n_blocks: int = 0, history_limit: Optional[int] = None,
                  clock: Callable[[], float] = time.perf_counter):
         if not tfm.supports_slot_serving(cfg):
             kinds = sorted({k for _, k, _ in tfm.group_names(cfg)})
@@ -96,12 +125,17 @@ class ServingEngine:
         self.n_slots = int(n_slots)
         self.cache_len = int(cache_len)
         self.prefill_chunk = int(prefill_chunk)
-        self.pool = CachePool(cfg, n_slots, cache_len, cache_dtype)
-        self.metrics = ServingMetrics(clock)
+        self.pool = CachePool(cfg, n_slots, cache_len, cache_dtype,
+                              block_len=block_len, n_blocks=n_blocks)
+        self.history_limit = history_limit
+        self.metrics = ServingMetrics(clock, max_samples=history_limit)
         self.queue: Deque[Request] = deque()
         self.slots = [_Slot() for _ in range(self.n_slots)]
+        self._admit_seq = 0
         # rid admission order per slot — observability + slot-reuse tests
-        self.slot_history: List[List[int]] = [[] for _ in range(self.n_slots)]
+        self.slot_history: List[Any] = [
+            deque(maxlen=history_limit) if history_limit else []
+            for _ in range(self.n_slots)]
         self.completed: Dict[int, Request] = {}
 
         # Greedy argmax happens on-device inside the jitted programs: the
@@ -110,36 +144,56 @@ class ServingEngine:
         # requested position (`logits_at`); the other C-1 vocab-matmul
         # rows would be discarded by the scheduler anyway. The pool is
         # donated: the scatter updates alias the input buffers instead of
-        # copying the whole KV pool every step.
-        def _decode_fn(p, pool, tok, t):
-            logits, npool = tfm.decode_step_slots(p, pool, tok, t, cfg)
+        # copying the whole KV pool every step. Block tables arrive as a
+        # separate (non-donated) tiny int32 pytree each call.
+        def _decode_fn(p, pool, tok, t, tables):
+            logits, npool = tfm.decode_step_slots(p, pool, tok, t, cfg,
+                                                  tables=tables)
             return jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32), \
                 npool
 
         reset_spec = self.pool.reset_spec
+        slot_axes = self.pool.slot_axes
 
-        def _chunk_fn(p, pool, tok, t, slot, fresh, last):
-            row = CachePool.gather_row(pool, slot)
+        def _chunk_fn(p, pool, tok, t, slot, fresh, last, tables):
+            row = CachePool.gather_row(pool, slot, slot_axes)
             # recycle the slot in-chunk, per the cache's own reset spec
-            # (mask stale KV positions / zero SSM recurrent state)
+            # (mask stale positions / zero SSM recurrent state; arena
+            # bytes are shared and stay put — the empty pos row is what
+            # keeps a recycled block's old KV out of attention)
             row = CachePool.mask_fresh(row, fresh, reset_spec)
             logits, nrow = tfm.decode_step_slots(p, row, tok, t, cfg,
-                                                 logits_at=last)
+                                                 logits_at=last,
+                                                 tables=tables)
             return jnp.argmax(logits[0, 0]).astype(jnp.int32), \
-                CachePool.scatter_row(pool, nrow, slot)
+                CachePool.scatter_row(pool, nrow, slot, slot_axes)
 
         self._decode = jax.jit(_decode_fn, donate_argnums=(1,))
         self._chunk = jax.jit(_chunk_fn, donate_argnums=(1,))
 
     # ------------------------------------------------------------ intake
     def submit(self, req: Request) -> None:
-        need = len(req.prompt) + req.max_new_tokens
         if not req.prompt:
             raise ValueError(f"request {req.rid}: empty prompt")
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"request {req.rid}: max_new_tokens must be >= 1 (got "
+                f"{req.max_new_tokens}); zero-output requests have no "
+                f"defined first token")
+        # positions written are 0 .. P + max_new - 2: the final generated
+        # token is returned but never written back into the cache, so a
+        # request that EXACTLY fills the cache must be admitted
+        need = len(req.prompt) + req.max_new_tokens - 1
         if need > self.cache_len:
             raise ValueError(
-                f"request {req.rid}: prompt+max_new = {need} exceeds "
-                f"cache_len {self.cache_len}")
+                f"request {req.rid}: prompt+max_new-1 = {need} positions "
+                f"exceed cache_len {self.cache_len}")
+        if not self.pool.fits(need):
+            bl = self.pool.block_len
+            raise ValueError(
+                f"request {req.rid}: needs {-(-need // bl)} blocks of "
+                f"{bl}, more than the arena holds "
+                f"({min(self.pool.n_blocks.values())}); raise n_blocks")
         self.metrics.record_arrival(req.rid, len(req.prompt))
         self.queue.append(req)
 
@@ -157,24 +211,41 @@ class ServingEngine:
         self._admit()
         self._prefill_tick()
         self._decode_tick()
-        self.metrics.record_step(len(self.queue), self.n_active)
+        self.metrics.record_step(len(self.queue), self.n_active,
+                                 self.pool.block_stats()["util"])
 
     def run(self) -> Dict[int, Request]:
-        """Drain queue + slots to completion; returns completed requests."""
+        """Drain queue + slots to completion; returns completed requests
+        (only the most recent ``history_limit`` when bounded)."""
         while self.busy:
             self.step()
         return self.completed
+
+    def drain_completed(self) -> Dict[int, Request]:
+        """Hand over and forget finished requests — the long-running
+        serve loop's hook for keeping host memory flat."""
+        done, self.completed = self.completed, {}
+        return done
 
     def _admit(self) -> None:
         for i, slot in enumerate(self.slots):
             if slot.state != FREE or not self.queue:
                 continue
-            req = self.queue.popleft()
+            req = self.queue[0]
+            # resume-after-preemption re-prefills prompt + already-
+            # generated tokens (greedy is deterministic); fresh requests
+            # have out_tokens == [] so this is the same code path
+            seq_tokens = list(req.prompt) + list(req.out_tokens)
+            if not self.pool.alloc(i, len(seq_tokens)):
+                break                   # FIFO: no skipping the queue head
+            self.queue.popleft()
             slot.state = PREFILL
             slot.req = req
             slot.pos = 0
-            slot.pending = list(req.prompt)
+            slot.pending = seq_tokens
             slot.fresh = True           # row invalidated by the 1st chunk
+            slot.seq = self._admit_seq
+            self._admit_seq += 1
             self.slot_history[i].append(req.rid)
             self.metrics.record_admit(req.rid)
 
@@ -192,22 +263,52 @@ class ServingEngine:
             t[0, :n] = slot.pos + np.arange(n)
             tok0, self.pool.caches = self._chunk(
                 self.params, self.pool.caches, tok, t,
-                np.int32(i), np.int32(slot.fresh), np.int32(n - 1))
+                np.int32(i), np.int32(slot.fresh), np.int32(n - 1),
+                self.pool.table_rows(i))
             slot.fresh = False
             slot.pos += n
             self.metrics.record_prefill(n)
             if slot.pending:
                 continue
-            # prompt fully cached: last real token's argmax is token #1
+            # prompt fully cached: last real token's argmax is the next
+            # generated token (token #1 for fresh requests; the resume
+            # point after a preemption)
             first = int(tok0)
             slot.req.out_tokens.append(first)
             self.metrics.record_first_token(slot.req.rid)
             slot.last_token = first
             slot.state = DECODE
-            if slot.req.done:           # max_new_tokens == 1 (or EOS)
+            if slot.req.done:           # max_new_tokens reached (or EOS)
                 self._finish(i)
 
+    def _ensure_decode_blocks(self) -> None:
+        """Every DECODE slot writes position ``slot.pos`` this tick;
+        allocate the covering block, preempting the youngest running
+        request whenever the pool is dry. ``submit`` guarantees a lone
+        request always fits, so this terminates with progress."""
+        for i in range(self.n_slots):
+            if self.slots[i].state != DECODE:
+                continue
+            # re-read slots[i] each pass: _preempt may replace it (even i)
+            while self.slots[i].state == DECODE and \
+                    not self.pool.alloc(i, self.slots[i].pos + 1):
+                victim = max(
+                    (j for j, s in enumerate(self.slots) if s.state != FREE),
+                    key=lambda j: self.slots[j].seq)
+                self._preempt(victim)   # may be slot i itself
+
+    def _preempt(self, i: int) -> None:
+        """Evict a running request, free its blocks, and requeue it at
+        the FRONT for resume-by-re-prefill."""
+        slot = self.slots[i]
+        req = slot.req
+        self.pool.release_slot(i)
+        self.metrics.record_preempt(req.rid)
+        self.queue.appendleft(req)
+        self.slots[i] = _Slot()
+
     def _decode_tick(self) -> None:
+        self._ensure_decode_blocks()
         live = [i for i, s in enumerate(self.slots) if s.state == DECODE]
         if not live:
             return
@@ -218,7 +319,8 @@ class ServingEngine:
             t[i, 0] = self.slots[i].pos
         t0 = self.metrics.clock()
         toks, self.pool.caches = self._decode(
-            self.params, self.pool.caches, tok, t)
+            self.params, self.pool.caches, tok, t,
+            self.pool.device_tables())
         nxt = np.asarray(toks)                                  # syncs
         self.metrics.record_decode(len(live), self.metrics.clock() - t0)
         for i in live:
@@ -233,6 +335,10 @@ class ServingEngine:
     def _finish(self, i: int) -> None:
         slot = self.slots[i]
         req = slot.req
+        self.pool.release_slot(i)       # blocks back to the free lists
         self.metrics.record_done(req.rid, len(req.out_tokens))
         self.completed[req.rid] = req
+        if self.history_limit:
+            while len(self.completed) > self.history_limit:
+                self.completed.pop(next(iter(self.completed)))
         self.slots[i] = _Slot()         # back to FREE; reset at next admit

@@ -1,14 +1,24 @@
-"""Serving metrics: per-request latency, aggregate throughput, queue depth.
+"""Serving metrics: per-request latency, aggregate throughput, queue
+depth, paged-pool utilization.
 
 Everything is host-side bookkeeping around an injectable clock (tests
 pass a fake clock for determinism). ``summary()`` condenses to the
 numbers the CLI / bench print: decode tokens/s, time-to-first-token
-percentiles, queue depth, slot occupancy.
+percentiles, queue depth, slot occupancy, block-pool utilization,
+preemption count.
+
+Bounded mode (``max_samples``): long-running serves must not grow host
+memory without bound, so the per-request table evicts the oldest DONE
+entries and the per-step sample lists become rolling windows. Aggregate
+counters (requests done, tokens generated, decode/prefill totals,
+preemptions) are kept exactly either way; only the percentile-style
+numbers (TTFT, queue depth) reduce to the rolling window.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+from collections import deque
 from typing import Callable, Dict, List, Optional
 
 
@@ -38,11 +48,21 @@ def _pct(xs: List[float], q: float) -> float:
 
 
 class ServingMetrics:
-    def __init__(self, clock: Callable[[], float] = time.perf_counter):
+    def __init__(self, clock: Callable[[], float] = time.perf_counter,
+                 max_samples: Optional[int] = None):
         self.clock = clock
+        self.max_samples = max_samples
         self.requests: Dict[int, RequestTimes] = {}
-        self.queue_depth_samples: List[int] = []
-        self.active_samples: List[int] = []
+
+        def _samples():
+            return deque(maxlen=max_samples) if max_samples else []
+
+        self.queue_depth_samples = _samples()
+        self.active_samples = _samples()
+        self.pool_util_samples = _samples()
+        self.done_count = 0             # exact even when `requests` rolls
+        self.gen_count = 0
+        self.preempts = 0
         self.decode_steps = 0
         self.decode_tokens = 0          # useful (non-pad) tokens decoded
         self.decode_time = 0.0
@@ -68,16 +88,32 @@ class ServingMetrics:
         self._req(rid).admit = self.clock()
 
     def record_first_token(self, rid: int) -> None:
-        self._req(rid).first_token = self.clock()
+        r = self._req(rid)
+        if r.first_token is None:       # preemption resume: keep the first
+            r.first_token = self.clock()
+
+    def record_preempt(self, rid: int) -> None:
+        self.preempts += 1
 
     def record_done(self, rid: int, n_generated: int) -> None:
         r = self._req(rid)
         r.done = self.end_time = self.clock()
         r.n_generated = n_generated
+        self.done_count += 1
+        self.gen_count += n_generated
+        if self.max_samples and len(self.requests) > self.max_samples:
+            # evict oldest DONE entries (insertion order); live ones stay
+            for old in list(self.requests):
+                if len(self.requests) <= self.max_samples:
+                    break
+                if self.requests[old].done is not None:
+                    del self.requests[old]
 
-    def record_step(self, queue_depth: int, n_active: int) -> None:
+    def record_step(self, queue_depth: int, n_active: int,
+                    pool_util: float = 0.0) -> None:
         self.queue_depth_samples.append(queue_depth)
         self.active_samples.append(n_active)
+        self.pool_util_samples.append(pool_util)
 
     def record_decode(self, n_tokens: int, dt: float) -> None:
         self.decode_steps += 1
@@ -90,13 +126,16 @@ class ServingMetrics:
 
     # --------------------------------------------------------- summary
     def summary(self) -> Dict[str, float]:
-        done = [r for r in self.requests.values() if r.done is not None]
-        gen = sum(r.n_generated for r in done)
         elapsed = ((self.end_time or self.clock())
                    - (self.start_time or 0.0)) if self.start_time else 0.0
-        ttfts = [r.ttft for r in done if r.ttft is not None]
+        ttfts = [r.ttft for r in self.requests.values()
+                 if r.done is not None and r.ttft is not None]
+        gen = self.gen_count
+        qd = list(self.queue_depth_samples)
+        act = list(self.active_samples)
+        pu = list(self.pool_util_samples)
         return {
-            "requests_done": len(done),
+            "requests_done": self.done_count,
             "generated_tokens": gen,
             "elapsed_s": elapsed,
             "tokens_per_s": gen / elapsed if elapsed > 0 else 0.0,
@@ -105,13 +144,12 @@ class ServingMetrics:
             "decode_steps": self.decode_steps,
             "prefill_chunks": self.prefill_chunks,
             "prefill_tokens": self.prefill_tokens,
+            "preemptions": self.preempts,
             "ttft_mean_s": (sum(ttfts) / len(ttfts)) if ttfts else float("nan"),
             "ttft_p95_s": _pct(ttfts, 0.95),
-            "queue_depth_max": max(self.queue_depth_samples, default=0),
-            "queue_depth_mean": (sum(self.queue_depth_samples)
-                                 / len(self.queue_depth_samples)
-                                 if self.queue_depth_samples else 0.0),
-            "slot_occupancy": (sum(self.active_samples)
-                               / len(self.active_samples)
-                               if self.active_samples else 0.0),
+            "queue_depth_max": max(qd, default=0),
+            "queue_depth_mean": sum(qd) / len(qd) if qd else 0.0,
+            "slot_occupancy": sum(act) / len(act) if act else 0.0,
+            "pool_util_mean": sum(pu) / len(pu) if pu else 0.0,
+            "pool_util_max": max(pu, default=0.0),
         }
