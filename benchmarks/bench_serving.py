@@ -21,6 +21,13 @@ Variants: fp32 weights and ``wbits 8`` packed-int8 serving (the engine
 consumes PackedTensor weights directly, dequant-on-read; the baseline
 serves the up-front dequantized copy — outputs must still match).
 
+Runner/SamplingParams sections (PR 4): ``bench_sampling`` drains a
+mixed greedy+sampled stream (one jitted program per decode tick) and
+asserts sampled determinism across reruns plus greedy-row isolation;
+``bench_basecaller`` streams simulated squiggle reads through the
+BasecallerRunner and asserts the incremental CTC merge equals the
+offline whole-read basecall, reporting reads/s and bases/s.
+
 Smoke mode (``run(emit)`` registry / CLI default) runs all four arch
 families' smoke configs on CPU (quant variants on qwen only);
 ``--arch``/``--slots``/... scale it up on real hardware.
@@ -39,6 +46,7 @@ from repro.config import get_config
 from repro.models import api
 from repro.models.lm import transformer as tfm
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.sampling import SamplingParams
 
 
 def make_workload(cfg, slots: int, oversub: int, prompt_len: int,
@@ -109,13 +117,12 @@ def run_engine(engine: ServingEngine, workload, eos_id: int = None
                ) -> Tuple[float, Dict[int, List[int]]]:
     """One full drain of the workload through an (already-built, possibly
     warm) engine. Metrics are reset so each pass reports itself."""
-    from repro.serving.metrics import ServingMetrics
-    engine.metrics = ServingMetrics(engine.metrics.clock)
-    engine.completed = {}
+    engine.reset_stats()
     t0 = time.perf_counter()
     for i, (prompt, mnew) in enumerate(workload):
-        engine.submit(Request(rid=i, prompt=prompt, max_new_tokens=mnew,
-                              eos_id=eos_id))
+        engine.submit(Request(rid=i, prompt=prompt,
+                              sampling=SamplingParams(max_new_tokens=mnew,
+                                                      eos_id=eos_id)))
     done = engine.run()
     dt = time.perf_counter() - t0
     return dt, {i: r.out_tokens for i, r in done.items()}
@@ -315,6 +322,118 @@ def bench_paged(emit, arch: str = "qwen1.5-4b-smoke", base_slots: int = 2,
              f"{mp['slot_occupancy']:.2f}<={mc['slot_occupancy']:.2f}")
 
 
+def bench_sampling(emit, arch: str = "qwen1.5-4b-smoke", slots: int = 2,
+                   oversub: int = 2, prompt_len: int = 8,
+                   max_tokens: int = 12, prefill_chunk: int = 4,
+                   seed: int = 0) -> None:
+    """Sampled decode through the engine: a mixed greedy+sampled stream
+    (every decode batch carries both kinds of rows — one jitted
+    program). Checks (a) DETERMINISM — two full drains produce
+    token-identical outputs, sampled rows included, because sample
+    noise is keyed by (seed, rid, step); (b) ISOLATION — the greedy
+    requests' tokens are identical to an all-greedy run of the same
+    engine (a hot-temperature neighbour must not perturb a greedy
+    row). Emits decode throughput for the mixed run."""
+    cfg = get_config(arch)
+    cache_len = prompt_len + max_tokens
+    params = api.init_params(jax.random.key(0), cfg)
+    base = make_workload(cfg, slots, oversub, prompt_len, max_tokens, seed)
+    engine = ServingEngine(params, cfg, n_slots=slots, cache_len=cache_len,
+                           prefill_chunk=prefill_chunk,
+                           cache_dtype=jnp.dtype(cfg.dtype))
+
+    def drain(sampled: bool):
+        engine.reset_stats()
+        t0 = time.perf_counter()
+        for i, (prompt, mnew) in enumerate(base):
+            sp = SamplingParams(max_new_tokens=mnew, temperature=0.8,
+                                top_k=20, top_p=0.95, seed=100 + i) \
+                if sampled and i % 2 else SamplingParams(max_new_tokens=mnew)
+            engine.submit(Request(rid=i, prompt=prompt, sampling=sp))
+        done = engine.run()
+        return time.perf_counter() - t0, {i: r.out_tokens
+                                          for i, r in done.items()}
+
+    drain(True)                                   # warm/compile
+    dt1, out1 = drain(True)
+    _, out2 = drain(True)
+    _, greedy = drain(False)
+    determinism = out1 == out2
+    isolation = all(out1[i] == greedy[i] for i in range(0, len(base), 2))
+    m = engine.metrics.summary()
+    n_sampled = len(base) // 2
+    emit("serving_sampled_mixed",
+         engine.metrics.decode_time * 1e6
+         / max(engine.metrics.decode_tokens, 1),
+         f"decode={m['decode_tokens_per_s']:.1f}tok/s;"
+         f"mix={len(base)-n_sampled}greedy+{n_sampled}sampled;"
+         f"determinism={'ok' if determinism else 'MISMATCH'};"
+         f"greedy_isolation={'ok' if isolation else 'MISMATCH'}")
+    if not determinism:
+        raise AssertionError("sampled decode not deterministic across "
+                             "reruns (seed/rid/step keying broke)")
+    if not isolation:
+        raise AssertionError("greedy rows perturbed by sampled neighbours")
+
+
+def bench_basecaller(emit, arch: str = "bonito-smoke", slots: int = 2,
+                     reads: int = 6, read_bases: int = 80,
+                     chunk_samples: int = 256, seed: int = 0) -> None:
+    """Squiggle serving through the BasecallerRunner: simulated reads
+    stream as halo-padded chunks with incremental greedy CTC merge.
+    Emits reads/s + bases/s and checks every served read's base calls
+    EQUAL the offline whole-read forward + greedy_decode (bit-exact
+    for non-act-quantized configs — the CTC-merge parity gate)."""
+    from repro.data.squiggle import (SquiggleConfig, normalize, pore_table,
+                                     simulate_read)
+    from repro.models.basecaller import model as bc
+    from repro.models.basecaller.ctc import greedy_decode
+    cfg = get_config(arch)
+    params = api.init_params(jax.random.key(0), cfg)
+    state = bc.init_state(cfg)
+    rs = np.random.RandomState(seed)
+    sim = SquiggleConfig(noise=0.1, drift=0.0)
+    table = pore_table()
+    sigs = []
+    for i in range(reads):
+        n = int(rs.randint(max(read_bases // 2, 8), read_bases + 1))
+        sig, _ = simulate_read(rs, sim, table, n)
+        sigs.append(normalize(sig))
+    engine = ServingEngine(params, cfg, n_slots=slots,
+                           chunk_samples=chunk_samples)
+
+    def drain():
+        engine.reset_stats()
+        t0 = time.perf_counter()
+        for i, s in enumerate(sigs):
+            engine.submit(Request(rid=i, signal=s))
+        done = engine.run()
+        return time.perf_counter() - t0, done
+
+    drain()                                       # warm/compile
+    dt, done = drain()
+    offline = jax.jit(lambda p, x: bc.forward(p, state, x, cfg,
+                                              train=False)[0])
+    parity = True
+    n_bases = 0
+    for i, s in enumerate(sigs):
+        ref = np.asarray(offline(params, jnp.asarray(s[None, :, None])))
+        want = [int(v) for v in greedy_decode(ref)[0]]
+        n_bases += len(want)
+        parity &= done[i].out_tokens == want
+    m = engine.metrics.summary()
+    emit(f"serving_basecaller_{arch.replace('-smoke', '').replace('-', '_')}",
+         dt / reads * 1e6,
+         f"reads_per_s={reads/max(dt,1e-9):.2f};"
+         f"bases_per_s={n_bases/max(dt,1e-9):.0f};"
+         f"chunk={engine.runner.core};halo={engine.runner.halo};"
+         f"occupancy={m['slot_occupancy']:.2f}/{slots};"
+         f"ctc_merge_parity={'ok' if parity else 'MISMATCH'}")
+    if not parity:
+        raise AssertionError(f"{arch}: served base calls != offline "
+                             f"whole-read basecall")
+
+
 # One smoke config per slot-servable cache family. Quant variants run on
 # qwen only — wbits isolates scheduling, not the arch's cache layout.
 FAMILY_ARCHS = ("qwen1.5-4b-smoke", "mamba2-130m-smoke",
@@ -327,16 +446,24 @@ def run(emit) -> None:
         wbits = (0, 8, 4) if arch.startswith("qwen") else (0,)
         bench(emit, arch=arch, wbits_list=wbits, tag_arch=True)
     bench_paged(emit)
+    bench_sampling(emit, slots=4, oversub=2, prompt_len=16, max_tokens=24,
+                   prefill_chunk=8)
+    bench_basecaller(emit, reads=8, read_bases=120)
 
 
 def run_smoke(emit) -> None:
     """Fast CI gate: engine-vs-static token parity through the paged
-    pool on the dense smoke arch, plus the paged-vs-contiguous
-    admission comparison. Minutes, not tens of minutes — the full
-    four-family / quant sweep stays in the slow job (``run``)."""
+    pool on the dense smoke arch, the paged-vs-contiguous admission
+    comparison, a mixed greedy+sampled decode section (determinism +
+    greedy isolation), and a basecaller-runner section (reads/s +
+    CTC-merge parity vs the offline whole-read basecall). Minutes, not
+    tens of minutes — the full four-family / quant sweep stays in the
+    slow job (``run``)."""
     bench(emit, arch="qwen1.5-4b-smoke", slots=2, oversub=2,
           prompt_len=8, max_tokens=12, prefill_chunk=4, wbits_list=(0,))
     bench_paged(emit, base_slots=2, cache_len=24, block_len=8)
+    bench_sampling(emit)
+    bench_basecaller(emit)
 
 
 def main() -> None:

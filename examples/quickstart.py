@@ -1,11 +1,17 @@
-"""Quickstart: the RUBICON pipeline in 60 lines.
+"""Quickstart: the RUBICON pipeline in ~80 lines.
 
 1. QABAS searches a (tiny) quantization-aware space for a basecaller.
 2. The derived model trains briefly on simulated squiggles.
 3. Weights are quantized per the searched policy and a read is basecalled.
+4. The trained basecaller SERVES a stream of reads through the
+   continuous-batching engine (BasecallerRunner: squiggle chunks in,
+   bases out — same scheduler that serves the LM zoo).
 
-Run: PYTHONPATH=src python examples/quickstart.py
+Run: PYTHONPATH=src python examples/quickstart.py \
+         [--search-steps 6] [--train-steps 200]
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -14,10 +20,12 @@ from repro.core.qabas.search import QABASConfig, derive_config, run_search
 from repro.core.qabas.space import TINY_SPACE
 from repro.core.quant.policy import quantize_tree, tree_size_bytes
 from repro.data.align import identity
-from repro.data.squiggle import SquiggleConfig, batches
+from repro.data.squiggle import (SquiggleConfig, batches, normalize,
+                                 pore_table, simulate_read)
 from repro.models import api
 from repro.models.basecaller import model as bc
 from repro.models.basecaller.ctc import greedy_decode
+from repro.serving import Request, ServingEngine
 from repro.training.optimizer import AdamWConfig, init_opt_state
 
 SIM = SquiggleConfig(chunk_len=512, k=3, dwell_jitter=False, noise=0.08,
@@ -30,11 +38,16 @@ def data():
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--search-steps", type=int, default=6)
+    ap.add_argument("--train-steps", type=int, default=200)
+    ap.add_argument("--serve-reads", type=int, default=6)
+    args = ap.parse_args()
     rng = jax.random.key(0)
 
     print("== 1. QABAS search (reduced space; full space is "
           f"{TINY_SPACE.size():.1e} options here, ~1.8e32 at paper scale)")
-    qc = QABASConfig(steps=6, channels=32, chunk=512)
+    qc = QABASConfig(steps=args.search_steps, channels=32, chunk=512)
     _, arch, hist = run_search(rng, TINY_SPACE, qc, data())
     cfg = derive_config(arch, TINY_SPACE, channels=32)
     print(f"   derived: {cfg.n_blocks} blocks, kernels={cfg.kernel_sizes}, "
@@ -43,14 +56,15 @@ def main():
 
     print("== 2. train the derived basecaller on simulated squiggles")
     params = api.init_params(rng, cfg)
-    opt = AdamWConfig(lr=5e-3, total_steps=200, warmup_steps=5)
+    opt = AdamWConfig(lr=5e-3, total_steps=max(args.train_steps, 1),
+                      warmup_steps=5)
     step = jax.jit(api.make_train_step(cfg, opt, n_micro=1))
     carry = api.TrainCarry(params, init_opt_state(params, opt),
                            api.init_model_state(cfg))
     it = data()
-    for i in range(200):
+    for i in range(args.train_steps):
         carry, m = step(carry, next(it))
-        if (i + 1) % 50 == 0:
+        if (i + 1) % 50 == 0 or i + 1 == args.train_steps:
             print(f"   step {i+1}: ctc loss {float(m['loss']):.2f}")
 
     print("== 3. quantize per searched policy and basecall")
@@ -65,6 +79,26 @@ def main():
     ids = [identity(c, np.asarray(b["labels"])[i][: int(b["label_lengths"][i])])
            for i, c in enumerate(calls)]
     print(f"   read identity on fresh reads: {np.mean(ids):.3f}")
+
+    print("== 4. serve reads through the continuous-batching engine "
+          "(BasecallerRunner)")
+    engine = ServingEngine(carry.params, cfg, n_slots=2, chunk_samples=512,
+                           model_state=carry.model_state)
+    rs = np.random.RandomState(7)
+    table = pore_table(k=SIM.k)
+    reads = []
+    for i in range(args.serve_reads):
+        sig, seq = simulate_read(rs, SIM, table, int(rs.randint(40, 90)))
+        reads.append(seq + 1)           # base ids 1..4 (0 = CTC blank)
+        engine.submit(Request(rid=i, signal=normalize(sig)))
+    done = engine.run()
+    s = engine.metrics.summary()
+    serve_ids = [identity(np.asarray(done[i].out_tokens, np.int64), reads[i])
+                 for i in range(args.serve_reads)]
+    print(f"   served {s['requests_done']} reads / "
+          f"{s['generated_tokens']} bases "
+          f"({s['tokens_per_s']:.0f} bases/s, slot occupancy "
+          f"{s['slot_occupancy']:.2f}/2); identity {np.mean(serve_ids):.3f}")
     print("done.")
 
 

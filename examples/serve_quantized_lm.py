@@ -1,72 +1,86 @@
-"""Serve a (smoke-scale) LM with batched requests and RUBICON-style
-weight quantization — the paper's mixed-precision serving idea on the
-assigned-architecture zoo.
+"""Serve a (smoke-scale) LM through the continuous-batching engine with
+RUBICON-style weight quantization — packed int8/int4 weights consumed
+directly by the engine (dequant-on-read), plus per-request
+``SamplingParams`` (a mixed greedy + sampled request stream shares every
+decode batch).
 
 Run: PYTHONPATH=src python examples/serve_quantized_lm.py \
-         [--arch qwen1.5-4b] [--wbits 8]
-Compares bf16 vs int8/int4-weight decode wall time on CPU and prints the
-v5e memory-roofline projection for the full config.
+         [--arch qwen1.5-4b] [--wbits 8] [--requests 8] [--tokens 12]
+Compares bf16 vs packed-int engine decode throughput on CPU and prints
+the v5e memory-roofline projection for the full config.
 """
 import argparse
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.analysis.roofline import HBM_BW
 from repro.config import QuantPolicy, get_config
-from repro.core.quant.policy import PackedTensor, dequantize, quantize_tree
+from repro.core.quant.policy import quantize_tree
 from repro.models import api
-from repro.models.lm import transformer as tfm
+from repro.serving import Request, SamplingParams, ServingEngine
 
 
-def decode_n(params, cfg, batch, prompt_len, n, kw):
-    logits, caches = tfm.prefill(params, batch["tokens"], cfg,
-                                 cache_len=prompt_len + n + 4, **kw)
-    step = jax.jit(lambda p, c, tok, t: tfm.decode_step(p, c, tok, t, cfg))
-    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
-    t0 = None
-    for i in range(n):
-        logits, caches = step(params, caches, tok,
-                              jnp.asarray(prompt_len + i, jnp.int32))
-        jax.block_until_ready(logits)
-        if i == 0:
-            t0 = time.time()      # skip compile step
-        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
-    return (time.time() - t0) / max(n - 1, 1)
+def serve_stream(params, cfg, args, label):
+    """Drain a mixed greedy+sampled stream twice (compile, then timed);
+    returns (decode tok/s, outputs) — outputs are deterministic, so the
+    two drains must agree token-for-token."""
+    engine = ServingEngine(params, cfg, n_slots=args.slots,
+                           cache_len=args.prompt_len + args.tokens,
+                           prefill_chunk=8,
+                           cache_dtype=jnp.dtype(cfg.dtype))
+    rs = np.random.RandomState(0)
+    workload = []
+    for i in range(args.requests):
+        prompt = rs.randint(1, cfg.vocab_size, size=args.prompt_len).tolist()
+        sp = (SamplingParams(max_new_tokens=args.tokens, temperature=0.7,
+                             top_k=16, top_p=0.95, seed=i)
+              if i % 2 else SamplingParams(max_new_tokens=args.tokens))
+        workload.append((prompt, sp))
+
+    def drain():
+        engine.reset_stats()
+        for i, (prompt, sp) in enumerate(workload):
+            engine.submit(Request(rid=i, prompt=list(prompt), sampling=sp))
+        done = engine.run()
+        return {i: r.out_tokens for i, r in done.items()}
+
+    first = drain()                       # compile
+    t0 = time.time()
+    second = drain()
+    dt = time.time() - t0
+    assert first == second, "sampled decode must be deterministic"
+    s = engine.metrics.summary()
+    print(f"[{label}] {s['generated_tokens']} tokens in {dt:.2f}s "
+          f"({s['decode_tokens_per_s']:.1f} tok/s decode, "
+          f"{args.requests // 2} sampled + "
+          f"{args.requests - args.requests // 2} greedy requests)")
+    return s["decode_tokens_per_s"], second
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-4b")
     ap.add_argument("--wbits", type=int, default=8)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--tokens", type=int, default=12)
     args = ap.parse_args()
 
     cfg = get_config(args.arch + "-smoke")
     full = get_config(args.arch)
-    rng = jax.random.key(0)
-    params = api.init_params(rng, cfg)
-    batch = api.make_smoke_batch(rng, cfg, args.batch, 32)
-    kw = {}
-    if cfg.family == "vlm":
-        kw["patch_embeds"] = batch["patch_embeds"]
-    if cfg.family == "audio":
-        from repro.models.lm import encdec
-        kw["enc_out"] = encdec.encode(params["encoder"], batch["frames"],
-                                      cfg)
+    params = api.init_params(jax.random.key(0), cfg)
 
-    t_fp = decode_n(params, cfg, batch, 32, args.tokens, kw)
+    tps_fp, _ = serve_stream(params, cfg, args, "engine bf16")
     qt = quantize_tree(params, QuantPolicy(weight_bits=args.wbits),
                        min_size=256)
-    pq = jax.tree.map(lambda l: dequantize(l, jnp.dtype(cfg.dtype))
-                      if isinstance(l, PackedTensor) else l, qt,
-                      is_leaf=lambda l: isinstance(l, PackedTensor))
-    t_q = decode_n(pq, cfg, batch, 32, args.tokens, kw)
-    print(f"[smoke decode] bf16 {t_fp*1e3:.1f} ms/tok | "
-          f"int{args.wbits}-dequant {t_q*1e3:.1f} ms/tok (CPU wall time; "
-          f"the int path wins on TPU via kernels/qmatmul HBM savings)")
+    tps_q, _ = serve_stream(qt, cfg, args, f"engine int{args.wbits}")
+    print(f"[smoke] packed int{args.wbits} vs bf16 decode: "
+          f"{tps_q:.1f} vs {tps_fp:.1f} tok/s (CPU wall time; the int "
+          f"path wins on TPU via kernels/qmatmul HBM savings)")
 
     # v5e projection at full scale: decode is weight+cache bandwidth bound
     n_params = api.active_params(full)
@@ -75,6 +89,7 @@ def main():
     print(f"[v5e projection, {full.name} @256 chips] weight-read per "
           f"decode step: bf16 {w_bf16*1e3:.2f} ms -> int{args.wbits} "
           f"{w_q*1e3:.2f} ms ({w_bf16/w_q:.2f}x)")
+    print("done.")
 
 
 if __name__ == "__main__":

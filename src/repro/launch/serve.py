@@ -12,13 +12,29 @@ admits them as capacity frees up, prompts prefill in ``--prefill-chunk``
 token chunks interleaved with decode steps, and JIT shapes never change.
 The run ends with a metrics summary (tokens/s, TTFT, queue depth).
 
-Any token-only arch serves — attention (qwen, llama3, ...), MoE
-(granite), SSM (``--arch mamba2-130m``), hybrid (``--arch hymba-1.5b``)
-and MLA/MoE (``--arch deepseek-v3-671b``): every cache kind carries
-per-row positions, so requests admitted at different times share one
-lockstep batch. ``--eos-id`` marks a stop token on every request
-(greedy decode ends early when it's emitted), which exercises
-early-eviction slot recycling under the Poisson stream.
+The engine dispatches through the serving RUNNER REGISTRY
+(``repro.serving.runner``), so three workload families share one
+scheduler:
+
+- token-only LMs — attention (qwen, llama3, ...), MoE (granite), SSM
+  (``--arch mamba2-130m``), hybrid (``--arch hymba-1.5b``), MLA/MoE
+  (``--arch deepseek-v3-671b``);
+- audio enc-dec (``--arch whisper-tiny``) — each request carries stub
+  log-mel frames; the encoder runs once at admission and its K/V is
+  staged per slot (EncoderPrefixRunner);
+- the paper's own basecallers (``--arch bonito`` / ``rubicall`` /
+  ``causalcall``) — requests are simulated squiggle READS that stream
+  through halo-padded chunks with incremental CTC merge
+  (BasecallerRunner; ``--chunk-samples``/``--beam``); the summary
+  reports reads/s and bases/s.
+
+Per-request sampling (``repro.serving.sampling.SamplingParams``):
+``--temperature``/``--top-k``/``--top-p``/``--seed`` configure sampled
+decode; ``--sampled-frac`` mixes greedy and sampled requests in one
+stream (they share every decode batch — one jitted program), and the
+run header reports the resulting sampler mix. Sampled tokens are
+deterministic in (seed, rid, step), so reruns reproduce exactly.
+``--eos-id`` marks a stop token on every LM request.
 
 KV lives in a PAGED block pool (``repro.serving.cache``): ``--block-len``
 sets the arena block size and ``--n-blocks`` the arena depth per layer
@@ -68,40 +84,95 @@ def dequantize_tree(params, dtype):
         params, is_leaf=lambda l: isinstance(l, PackedTensor))
 
 
+def request_samples(args, i: int) -> bool:
+    """Deterministic Bresenham mix: request ``i`` samples iff the
+    running count of sampled requests crosses an integer at i — spreads
+    ``--sampled-frac`` evenly through the stream (so greedy and sampled
+    rows genuinely share decode batches)."""
+    frac = min(max(args.sampled_frac, 0.0), 1.0)
+    if args.temperature <= 0 or frac <= 0:
+        return False
+    return int((i + 1) * frac) > int(i * frac)
+
+
 def build_request_stream(cfg, args, seed: int = 0):
-    """Synthetic Poisson arrivals with variable prompt/output lengths."""
+    """Synthetic Poisson arrivals. LM archs get variable prompt/output
+    lengths (+ audio frames for enc-dec); basecallers get simulated
+    squiggle reads."""
     from repro.serving.engine import Request
+    from repro.serving.sampling import SamplingParams
     rs = np.random.RandomState(seed)
     arrivals = np.cumsum(rs.exponential(1.0 / args.rate, size=args.requests))
     eos = args.eos_id if args.eos_id >= 0 else None
     reqs = []
+    if cfg.family == "basecaller":
+        from repro.data.squiggle import (SquiggleConfig, normalize,
+                                         pore_table, simulate_read)
+        sim = SquiggleConfig(noise=0.1, drift=0.0)
+        table = pore_table()
+        for i in range(args.requests):
+            n_bases = int(rs.randint(max(args.read_bases // 2, 8),
+                                     args.read_bases + 1))
+            sig, _ = simulate_read(rs, sim, table, n_bases)
+            reqs.append(Request(rid=i, signal=normalize(sig),
+                                arrival_time=float(arrivals[i])))
+        return reqs
+    frames_needed = cfg.family == "audio"
     for i in range(args.requests):
         plen = int(rs.randint(max(args.prompt_len // 2, 1),
                               args.prompt_len + 1))
         mnew = int(rs.randint(max(args.tokens // 4, 1), args.tokens + 1))
         prompt = rs.randint(1, cfg.vocab_size, size=plen).tolist()
-        reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=mnew,
-                            eos_id=eos, arrival_time=float(arrivals[i])))
+        if request_samples(args, i):
+            sp = SamplingParams(max_new_tokens=mnew, eos_id=eos,
+                                temperature=args.temperature,
+                                top_k=args.top_k, top_p=args.top_p,
+                                seed=args.seed + i)
+        else:
+            sp = SamplingParams(max_new_tokens=mnew, eos_id=eos)
+        frames = (rs.randn(cfg.frontend_tokens, cfg.d_model)
+                  .astype(np.float32) if frames_needed else None)
+        reqs.append(Request(rid=i, prompt=prompt, sampling=sp,
+                            frames=frames, arrival_time=float(arrivals[i])))
     return reqs
 
 
 def run_engine(params, cfg, args) -> None:
+    runner_kw = {}
+    if cfg.family == "basecaller":
+        runner_kw = dict(chunk_samples=args.chunk_samples, beam=args.beam)
     engine = api.make_serving_engine(
         params, cfg, n_slots=args.slots, cache_len=args.cache_len,
         prefill_chunk=args.prefill_chunk,
         cache_dtype=jnp.dtype(cfg.dtype),
         block_len=args.block_len, n_blocks=args.n_blocks,
-        history_limit=args.history_limit or None)
-    pool = engine.pool
+        history_limit=args.history_limit or None, **runner_kw)
     pending = build_request_stream(cfg, args)
-    print(f"[serve] engine: {args.requests} requests over "
+    basecall = cfg.family == "basecaller"
+    print(f"[serve] engine ({type(engine.runner).__name__}): "
+          f"{args.requests} requests over "
           f"{pending[-1].arrival_time:.2f}s (rate {args.rate}/s), "
-          f"{args.slots} slots, chunk {args.prefill_chunk}")
-    print(f"[serve] paged pool: block_len {pool.block_len}, "
-          f"{pool.block_stats()['blocks_total']} blocks "
-          f"({pool.nbytes()/2**20:.1f} MiB cache)"
-          + (f", history_limit {args.history_limit}"
-             if args.history_limit else ""))
+          f"{args.slots} slots"
+          + (f", chunk {engine.runner.core} samples (halo "
+             f"{engine.runner.halo})" if basecall
+             else f", chunk {args.prefill_chunk}"))
+    if basecall:
+        print(f"[serve] basecalling: "
+              f"{'prefix-beam ' + str(args.beam) if args.beam else 'greedy'}"
+              f" CTC merge, stride {engine.runner.stride}")
+    else:
+        n_sampled = sum(r.sampling.temperature > 0 for r in pending)
+        mix = (f"{len(pending) - n_sampled} greedy, {n_sampled} sampled"
+               + (f" (T={args.temperature}, top_k={args.top_k}, "
+                  f"top_p={args.top_p}, seeds {args.seed}+rid)"
+                  if n_sampled else ""))
+        print(f"[serve] sampler mix: {mix}")
+        pool = engine.pool
+        print(f"[serve] paged pool: block_len {pool.block_len}, "
+              f"{pool.block_stats()['blocks_total']} blocks "
+              f"({pool.nbytes()/2**20:.1f} MiB cache)"
+              + (f", history_limit {args.history_limit}"
+                 if args.history_limit else ""))
     t0 = time.perf_counter()
     i = 0
     while i < len(pending) or engine.busy:
@@ -114,17 +185,24 @@ def run_engine(params, cfg, args) -> None:
         elif i < len(pending):
             time.sleep(min(pending[i].arrival_time - now, 0.01))
     s = engine.metrics.summary()
-    print(f"[serve] done: {s['requests_done']} requests, "
-          f"{s['generated_tokens']} tokens in {s['elapsed_s']:.2f}s "
-          f"({s['tokens_per_s']:.1f} tok/s end-to-end, "
-          f"{s['decode_tokens_per_s']:.1f} tok/s decode)")
+    if basecall:
+        print(f"[serve] done: {s['requests_done']} reads, "
+              f"{s['generated_tokens']} bases in {s['elapsed_s']:.2f}s "
+              f"({s['requests_done']/max(s['elapsed_s'],1e-9):.2f} reads/s, "
+              f"{s['tokens_per_s']:.0f} bases/s)")
+    else:
+        print(f"[serve] done: {s['requests_done']} requests, "
+              f"{s['generated_tokens']} tokens in {s['elapsed_s']:.2f}s "
+              f"({s['tokens_per_s']:.1f} tok/s end-to-end, "
+              f"{s['decode_tokens_per_s']:.1f} tok/s decode)")
     print(f"[serve] ttft mean {s['ttft_mean_s']*1e3:.0f}ms "
           f"p95 {s['ttft_p95_s']*1e3:.0f}ms | queue depth "
           f"max {s['queue_depth_max']} mean {s['queue_depth_mean']:.1f} | "
           f"slot occupancy {s['slot_occupancy']:.2f}/{args.slots}")
-    print(f"[serve] pool util mean {s['pool_util_mean']:.2f} "
-          f"max {s['pool_util_max']:.2f} | "
-          f"preemptions {s['preemptions']:.0f}")
+    if not basecall:
+        print(f"[serve] pool util mean {s['pool_util_mean']:.2f} "
+              f"max {s['pool_util_max']:.2f} | "
+              f"preemptions {s['preemptions']:.0f}")
     done = engine.drain_completed()
     if done:
         sample = done[min(done)].out_tokens[:16]
@@ -186,8 +264,32 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=16)
     ap.add_argument("--eos-id", type=int, default=-1,
                     help="stop-token id for every request (engine path; "
-                         "-1 = none). Requests end early when the greedy "
+                         "-1 = none). Requests end early when the decoded "
                          "token equals it — exercises early slot recycling")
+    # ---- sampling (SamplingParams) ----
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy argmax)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k truncation for sampled requests (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus (top-p) truncation (1.0 = off)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="sampling seed base; request i uses seed + i "
+                         "(tokens are deterministic in (seed, rid, step))")
+    ap.add_argument("--sampled-frac", type=float, default=1.0,
+                    help="fraction of requests that sample when "
+                         "--temperature > 0; the rest stay greedy and "
+                         "share the same decode batches (sampler mix is "
+                         "reported per run)")
+    # ---- basecaller runner ----
+    ap.add_argument("--read-bases", type=int, default=300,
+                    help="basecaller archs: mean bases per simulated read")
+    ap.add_argument("--chunk-samples", type=int, default=1024,
+                    help="basecaller archs: core squiggle samples per "
+                         "streamed chunk")
+    ap.add_argument("--beam", type=int, default=0,
+                    help="basecaller archs: prefix-beam width for the "
+                         "incremental CTC merge (0 = greedy)")
     ap.add_argument("--cache-len", type=int, default=0,
                     help="per-request KV capacity (0 = prompt+tokens)")
     ap.add_argument("--block-len", type=int, default=16,

@@ -220,9 +220,24 @@ def make_decode_step(cfg: ModelConfig) -> Callable:
 
 
 def make_serving_engine(params, cfg: ModelConfig, **kw):
-    """Continuous-batching engine over this model (repro.serving)."""
+    """Continuous-batching engine over this model (repro.serving).
+
+    Dispatches through the serving runner registry: token-only LMs
+    (TokenRunner over the paged KV pool, per-request SamplingParams),
+    audio enc-dec (EncoderPrefixRunner — encoder K/V staged per slot at
+    admission), and basecallers (BasecallerRunner — squiggle chunks in,
+    bases out). vlm frontends have no runner yet and raise
+    NotImplementedError. Extra ``**kw`` reach the runner (e.g.
+    ``chunk_samples``/``beam``/``model_state`` for basecallers)."""
     from repro.serving.engine import ServingEngine
     return ServingEngine(params, cfg, **kw)
+
+
+def make_runner(params, cfg: ModelConfig, **kw):
+    """The registered serving backend alone (no scheduler) — see
+    ``repro.serving.runner``."""
+    from repro.serving.runner import make_runner as _make
+    return _make(params, cfg, **kw)
 
 
 # ---------------------------------------------------------------------------

@@ -132,10 +132,29 @@ def block_state(cfg: ModelConfig, i: int) -> State:
     return s
 
 
+def _mask_outside(h: jax.Array, bounds, s: int) -> jax.Array:
+    """Zero positions outside the read (streamed-chunk serving).
+
+    ``bounds = (start, read_len)`` are traced scalars: position ``i`` at
+    cumulative stride ``s`` anchors global sample ``start + i*s``. The
+    whole-read forward's convs implicitly zero-pad beyond the read; a
+    chunk window's halo positions beyond the read edge would otherwise
+    carry BatchNorm-biased values into the next K>1 conv, breaking the
+    chunked == whole-read bit-parity the BasecallerRunner relies on.
+    """
+    if bounds is None:
+        return h
+    start, read_len = bounds
+    gpos = start + jnp.arange(h.shape[1], dtype=jnp.int32) * s
+    ok = (gpos >= 0) & (gpos < read_len)
+    return h * ok[None, :, None].astype(h.dtype)
+
+
 def block_forward(p: Params, s: State, x: jax.Array, cfg: ModelConfig,
                   i: int, *, train: bool = True,
                   skip_gate: Optional[jax.Array] = None,
-                  dilation: int = 1, causal: bool = False
+                  dilation: int = 1, causal: bool = False,
+                  bounds=None, s_in: int = 1
                   ) -> Tuple[jax.Array, State]:
     reps = cfg.repeats[i]
     stride = cfg.strides[i]
@@ -144,6 +163,12 @@ def block_forward(p: Params, s: State, x: jax.Array, cfg: ModelConfig,
     h = x
     for j in range(reps):
         last = (j == reps - 1)
+        # each grouped (K > 1) conv must see zeros beyond the read edge,
+        # exactly like the whole-read forward's implicit padding; the
+        # pointwise convs / BN / ReLU in between are positionwise and
+        # cannot smear out-of-read values inward, so masking the repeat
+        # inputs is sufficient
+        h = _mask_outside(h, bounds, s_in if j == 0 else s_in * stride)
         h, ns = sep_conv(p[f"rep{j}"], s[f"rep{j}"], h, cfg, f"{tag}/rep{j}",
                          stride=stride if j == 0 else 1,
                          dilation=dilation, causal=causal,

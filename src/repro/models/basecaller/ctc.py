@@ -79,37 +79,83 @@ def greedy_decode(log_probs: np.ndarray) -> List[np.ndarray]:
     return out
 
 
+def _lse(*xs):
+    xs = [x for x in xs if x > -np.inf]
+    if not xs:
+        return -np.inf
+    m = max(xs)
+    return m + np.log(sum(np.exp(x - m) for x in xs))
+
+
+class GreedyCTCMerge:
+    """Incremental greedy CTC over a streamed read: feed per-chunk
+    argmax frame ids, get newly-emitted bases back. Carrying the last
+    frame id across chunk boundaries makes the concatenated emissions
+    EXACTLY :func:`greedy_decode` of the whole read's frames — the
+    parity contract the serving BasecallerRunner is tested against."""
+
+    def __init__(self):
+        self._prev = -1                 # sentinel: nothing seen yet
+
+    def feed(self, ids) -> List[int]:
+        """ids: (T,) int frame argmaxes for one chunk (reads left to
+        right). Returns the bases this chunk commits."""
+        out: List[int] = []
+        for v in np.asarray(ids).reshape(-1):
+            v = int(v)
+            if v != self._prev and v != BLANK:
+                out.append(v)
+            self._prev = v
+        return out
+
+    def finalize(self) -> List[int]:
+        return []                       # greedy commits as it goes
+
+
+class BeamCTCMerge:
+    """Incremental prefix-beam CTC: feed per-chunk frame log-probs,
+    call :meth:`finalize` once the read ends. The beam state (prefix ->
+    (logp_blank, logp_nonblank)) carries across chunks, so the result
+    equals :func:`beam_decode` over the whole read's frames — prefix
+    beam search is frame-sequential, chunking is free."""
+
+    def __init__(self, beam: int = 5):
+        self.beam = beam
+        self.beams = {(): (0.0, -np.inf)}
+
+    def feed(self, log_probs) -> List[int]:
+        """log_probs: (T, V) for one chunk. Emits nothing — the best
+        prefix may still change until the read ends."""
+        lp = np.asarray(log_probs, np.float64)
+        T, V = lp.shape
+        for t in range(T):
+            new = {}
+            for prefix, (pb, pnb) in self.beams.items():
+                for v in range(V):
+                    p = lp[t, v]
+                    if v == BLANK:
+                        nb = new.get(prefix, (-np.inf, -np.inf))
+                        new[prefix] = (_lse(nb[0], pb + p, pnb + p), nb[1])
+                    else:
+                        ext = prefix + (v,)
+                        nb = new.get(ext, (-np.inf, -np.inf))
+                        if prefix and prefix[-1] == v:
+                            new[ext] = (nb[0], _lse(nb[1], pb + p))
+                            same = new.get(prefix, (-np.inf, -np.inf))
+                            new[prefix] = (same[0], _lse(same[1], pnb + p))
+                        else:
+                            new[ext] = (nb[0], _lse(nb[1], pb + p, pnb + p))
+            self.beams = dict(sorted(new.items(),
+                                     key=lambda kv: -_lse(*kv[1]))[:self.beam])
+        return []
+
+    def finalize(self) -> List[int]:
+        best = max(self.beams.items(), key=lambda kv: _lse(*kv[1]))[0]
+        return [int(v) for v in best]
+
+
 def beam_decode(log_probs: np.ndarray, beam: int = 5) -> np.ndarray:
     """Prefix beam search for one sequence. log_probs: (T, V)."""
-    lp = np.asarray(log_probs, np.float64)
-    T, V = lp.shape
-    beams = {(): (0.0, -np.inf)}    # prefix -> (logp_blank, logp_nonblank)
-
-    def lse(*xs):
-        xs = [x for x in xs if x > -np.inf]
-        if not xs:
-            return -np.inf
-        m = max(xs)
-        return m + np.log(sum(np.exp(x - m) for x in xs))
-
-    for t in range(T):
-        new = {}
-        for prefix, (pb, pnb) in beams.items():
-            for v in range(V):
-                p = lp[t, v]
-                if v == BLANK:
-                    nb = new.get(prefix, (-np.inf, -np.inf))
-                    new[prefix] = (lse(nb[0], pb + p, pnb + p), nb[1])
-                else:
-                    ext = prefix + (v,)
-                    nb = new.get(ext, (-np.inf, -np.inf))
-                    if prefix and prefix[-1] == v:
-                        new[ext] = (nb[0], lse(nb[1], pb + p))
-                        same = new.get(prefix, (-np.inf, -np.inf))
-                        new[prefix] = (same[0], lse(same[1], pnb + p))
-                    else:
-                        new[ext] = (nb[0], lse(nb[1], pb + p, pnb + p))
-        beams = dict(sorted(new.items(),
-                            key=lambda kv: -lse(*kv[1]))[:beam])
-    best = max(beams.items(), key=lambda kv: lse(*kv[1]))[0]
-    return np.asarray(best, np.int32)
+    merge = BeamCTCMerge(beam)
+    merge.feed(log_probs)
+    return np.asarray(merge.finalize(), np.int32)

@@ -7,10 +7,11 @@ Input: normalized squiggle chunks (B, S, 1). Output: CTC log-probs
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import ModelConfig
 from repro.models.basecaller import blocks as bl
@@ -38,25 +39,117 @@ def init_state(cfg: ModelConfig) -> State:
 
 def forward(params: Params, state: State, signal: jax.Array,
             cfg: ModelConfig, *, train: bool = True,
-            skip_gates: Optional[jax.Array] = None
-            ) -> Tuple[jax.Array, State]:
+            skip_gates: Optional[jax.Array] = None,
+            bounds=None) -> Tuple[jax.Array, State]:
     """signal: (B, S, 1) -> (log_probs (B, T, n_bases), new_state).
 
     ``skip_gates``: (n_blocks,) in [0,1] — SkipClip's anneal handle.
+    ``bounds``: optional traced ``(start, read_len)`` scalars for
+    streamed-chunk serving: the window anchors global sample ``start``
+    (may be negative at the read head) of a ``read_len``-sample read,
+    and positions outside the read are re-zeroed before every K > 1
+    conv so chunked outputs match the whole-read forward bit-exactly.
     """
     x = signal.astype(cfg.dtype)
     new_state: State = {}
     causal = cfg.name.startswith("causalcall")
+    s_in = 1
     for i in range(cfg.n_blocks):
         gate = None if skip_gates is None else skip_gates[i]
         dilation = 2 ** (i % 5) if causal else 1
         x, ns = bl.block_forward(params[f"block{i:02d}"],
                                  state[f"block{i:02d}"], x, cfg, i,
                                  train=train, skip_gate=gate,
-                                 dilation=dilation, causal=causal)
+                                 dilation=dilation, causal=causal,
+                                 bounds=bounds, s_in=s_in)
         new_state[f"block{i:02d}"] = ns
+        s_in *= int(cfg.strides[i])
     logits = bl.conv1d(x, params["head_pw"].astype(x.dtype))
     return jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1), new_state
+
+
+# ---------------------------------------------------------------------------
+# Streamed (chunked) basecalling — the serving BasecallerRunner's substrate.
+#
+# A read is processed as fixed-size CORE windows of ``core`` samples,
+# each padded with a HALO of real neighbouring samples on both sides.
+# Because every op in the network is local (convs) or positionwise
+# (BN-eval, ReLU, log-softmax), a core frame whose full receptive field
+# lies inside the padded window is BIT-IDENTICAL to the whole-read
+# forward's frame — zero-padding at the window edges only corrupts
+# frames within the receptive field of an edge, and the halo keeps
+# those out of the core. Read edges zero-pad in both paths, so chunked
+# frames == offline frames exactly, and the incremental CTC merge
+# (repro.models.basecaller.ctc) equals the offline decode.
+
+
+def total_stride(cfg: ModelConfig) -> int:
+    """Cumulative downsampling squiggle samples -> CTC frames."""
+    s = 1
+    for st in cfg.strides[:cfg.n_blocks]:
+        s *= int(st)
+    return s
+
+
+def receptive_field(cfg: ModelConfig) -> int:
+    """Receptive field of one output frame, in input samples (both
+    conv dilation — causalcall — and strides accounted)."""
+    causal = cfg.name.startswith("causalcall")
+    r, s = 1, 1
+    for i in range(cfg.n_blocks):
+        dil = 2 ** (i % 5) if causal else 1
+        for j in range(cfg.repeats[i]):
+            r += (cfg.kernel_sizes[i] - 1) * dil * s
+            if j == 0:
+                s *= int(cfg.strides[i])
+    return r
+
+
+def chunk_halo(cfg: ModelConfig) -> int:
+    """Halo (samples each side) that guarantees core frames are exact:
+    the full receptive field, rounded up to a stride multiple so chunk
+    boundaries stay frame-aligned."""
+    st = total_stride(cfg)
+    return -(-receptive_field(cfg) // st) * st
+
+
+def chunk_windows(signal: np.ndarray, core: int, halo: int, stride: int
+                  ) -> List[Tuple[np.ndarray, int, int]]:
+    """Slice one read into model-input windows.
+
+    signal: (S,) float squiggle (normalized). Returns a list of
+    ``(window (core + 2*halo, 1) float32, n_frames, n_samples)`` —
+    ``n_frames`` core CTC frames are valid (``ceil(n_samples/stride)``;
+    the rest of the last window is zero padding, exactly what the
+    whole-read forward's implicit edge padding sees).
+    """
+    sig = np.asarray(signal, np.float32).reshape(-1)
+    S = sig.shape[0]
+    out: List[Tuple[np.ndarray, int, int]] = []
+    W = core + 2 * halo
+    for a in range(0, S, core):
+        valid = min(core, S - a)
+        window = np.zeros((W, 1), np.float32)
+        lo, hi = a - halo, a + core + halo
+        src = sig[max(lo, 0):min(hi, S)]
+        off = max(lo, 0) - lo
+        window[off:off + src.shape[0], 0] = src
+        out.append((window, -(-valid // stride), valid))
+    return out
+
+
+def forward_window(params: Params, state: State, window: jax.Array,
+                   cfg: ModelConfig, start: jax.Array, read_len: jax.Array
+                   ) -> jax.Array:
+    """Eval-mode forward over one padded window (B, W, 1) -> CTC
+    log-probs (B, W/stride, n_bases). ``start``/``read_len`` are traced
+    scalars (global sample of window[0] — negative at the read head —
+    and the read's length) so the read-edge masking retraces nothing.
+    The jitted hot loop of the serving BasecallerRunner (one compile —
+    all windows share W)."""
+    log_probs, _ = forward(params, state, window, cfg, train=False,
+                           bounds=(start, read_len))
+    return log_probs
 
 
 def loss_fn(params: Params, state: State, batch: Dict, cfg: ModelConfig,

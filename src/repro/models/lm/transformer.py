@@ -218,16 +218,18 @@ def block_decode(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
 # Every token-only kind carries per-row cache positions: attention/MLA
 # caches track ``pos: (B, L)``, SSM caches a ``pos: (B, 1)`` validity
 # leaf (recurrent state is zeroed on slot recycle — see
-# ``block_cache_reset_spec``). Only xdec (audio) remains out: its
-# cross-attention needs an encoder prefix the token-only chunked prefill
-# cannot feed.
+# ``block_cache_reset_spec``). xdec (audio decoder) serves too: its
+# self-attention KV pages like dense and its cross-attention reads a
+# per-slot encoder K/V buffer the EncoderPrefixRunner stages at
+# admission (``enc_kv`` below).
 SLOT_KINDS = ("dense", "moe", "ssm", "mla_dense", "mla_moe",
-              "hybrid_full", "hybrid_swa")
+              "hybrid_full", "hybrid_swa", "xdec")
 
 
 def supports_slot_serving(cfg: ModelConfig) -> bool:
-    # frontend archs (vlm/audio) have an all-dense layer plan but need a
-    # patch/frame prefix the token-only chunked prefill cannot feed
+    # frontend archs (vlm/audio) need a patch/frame prefix the token-only
+    # chunked prefill cannot feed — they serve through their own runners
+    # (repro.serving.runner), not the TokenRunner this gate guards
     if cfg.frontend_tokens or cfg.family in ("vlm", "audio"):
         return False
     return all(kind in SLOT_KINDS for _, kind, _ in group_names(cfg))
@@ -235,12 +237,16 @@ def supports_slot_serving(cfg: ModelConfig) -> bool:
 
 def block_decode_slots(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
                        cfg: ModelConfig, kind: str,
-                       table: Optional[jax.Array] = None
+                       table: Optional[jax.Array] = None,
+                       enc_kv: Optional[Dict] = None
                        ) -> Tuple[jax.Array, Dict]:
     """Per-slot-position variant of :func:`block_decode`. t: (B, C).
 
     ``table`` (paged serving pool): per-slot block table ``(B, T)`` for
-    this layer group's KV arena; SSM state is per-slot either way."""
+    this layer group's KV arena; SSM state is per-slot either way.
+    ``enc_kv`` (xdec only): per-slot encoder K/V ``(B, Se, Hkv, hd)``
+    leaves — cross-attention state, written once per request at
+    admission, never by the decode step itself."""
     if kind not in SLOT_KINDS:
         raise NotImplementedError(
             f"slot-batched decode not implemented for block kind {kind!r}")
@@ -262,6 +268,12 @@ def block_decode_slots(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
         mix, nc = attn_mod.attn_decode_slots(p["attn"], h, cache, t, cfg,
                                              table=table)
     x = constrain(x + mix, DECODE_RESID)
+    if kind == "xdec" and enc_kv is not None:
+        # pad rows (t < 0) produce garbage the scheduler ignores; cross-
+        # attention writes no state so they cannot corrupt anything
+        hx = rmsnorm(p["ln_x"], x, cfg.norm_eps)
+        x = constrain(x + _cross_attn(p["xattn"], hx, enc_kv, cfg),
+                      DECODE_RESID)
     h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
     if kind in ("moe", "mla_moe"):
         # pad slots (t < 0) are masked out of expert dispatch so they
@@ -270,7 +282,8 @@ def block_decode_slots(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
         y, _ = moe_mod.moe_ffn(p["ffn"], h2, cfg, decode=x.shape[1] == 1,
                                pad_mask=(t >= 0))
     else:
-        y = mlp(p["ffn"], h2, cfg=cfg, tag="mlp",
+        act = "gelu" if cfg.family == "audio" else "silu"
+        y = mlp(p["ffn"], h2, cfg=cfg, tag="mlp", act=act,
                 hidden_spec=P(None, None, "model"))
     return constrain(x + y, DECODE_RESID), nc
 
@@ -586,7 +599,8 @@ def decode_step(params: Params, caches: Dict, tokens: jax.Array,
 def decode_step_slots(params: Params, caches: Dict, tokens: jax.Array,
                       t: jax.Array, cfg: ModelConfig,
                       logits_at: Optional[jax.Array] = None,
-                      tables: Optional[Dict[str, jax.Array]] = None
+                      tables: Optional[Dict[str, jax.Array]] = None,
+                      enc_kv: Optional[Dict[str, Dict]] = None
                       ) -> Tuple[jax.Array, Dict]:
     """Slot-batched decode/chunk step for the continuous-batching engine.
 
@@ -604,6 +618,10 @@ def decode_step_slots(params: Params, caches: Dict, tokens: jax.Array,
     for KV-bearing groups — the caches then hold shared block arenas
     instead of contiguous per-slot rows. One table per group, shared by
     every layer in the group (each layer has its own arena slice).
+
+    ``enc_kv`` (audio serving): {xdec group name: per-layer-stacked
+    cross-attention K/V ``(n_layers, B, Se, Hkv, hd)``} — the per-slot
+    encoder buffers the EncoderPrefixRunner stages at admission.
     """
     x = embed_tokens(params, jnp.maximum(tokens, 0), cfg)
     new_caches: Dict[str, Any] = {}
@@ -611,14 +629,20 @@ def decode_step_slots(params: Params, caches: Dict, tokens: jax.Array,
         pstack = params["groups"][gname]
         cstack = caches[gname]
         table = None if tables is None else tables.get(gname)
+        ekv_stack = None if enc_kv is None else enc_kv.get(gname)
 
         def step(xc, xs):
-            pl, cl = xs
+            if ekv_stack is not None:
+                pl, cl, ekv = xs
+            else:
+                (pl, cl), ekv = xs, None
             xo, nc = block_decode_slots(pl, xc, cl, t, cfg, kind,
-                                        table=table)
+                                        table=table, enc_kv=ekv)
             return xo, nc
 
-        x, ncache = jax.lax.scan(step, x, (pstack, cstack))
+        xs_in = ((pstack, cstack, ekv_stack) if ekv_stack is not None
+                 else (pstack, cstack))
+        x, ncache = jax.lax.scan(step, x, xs_in)
         new_caches[gname] = ncache
     if logits_at is not None:
         x = jax.lax.dynamic_slice_in_dim(x, logits_at, 1, axis=1)

@@ -1,27 +1,50 @@
-"""Continuous-batching serving engine over a paged block-granular KV pool.
+"""Continuous-batching serving: one engine for LMs, audio, and the
+basecaller itself.
 
-Scheduler design (slot-based continuous batching, fixed JIT shapes)
-===================================================================
+Architecture (post Runner/SamplingParams redesign)
+==================================================
 
-The engine serves variable-length autoregressive requests at a fixed
-device footprint. All shape-polymorphism lives on the host; the device
-only ever sees two compiled programs:
+The stack splits into three layers:
 
-``decode``   ``decode_step_slots(params, pool, tokens (B,1), t (B,1),
-             tables)`` — one lockstep token for all B slots. Each row
-             carries its OWN position (the pool tracks ``pos`` per
-             row), so rows admitted at different times coexist in one
-             batch. Inactive rows are padded with ``t = -1``: they
-             write nothing into the cache (their scatter index is
-             dropped) and their logits are ignored.
+``engine``   :class:`ServingEngine` — PURE host-side scheduling: FIFO
+             queue, fixed slot pool, admission, chunked-prefill/decode
+             interleave, preempt-youngest + resume-by-re-prefill,
+             metrics. It imports no model code; everything model-shaped
+             goes through a runner.
 
-``chunk``    the same kernel at shape ``(1, C)`` applied to a single
-             slot's view of the pool — one chunked-prefill step.
-             Prompts are processed ``C`` tokens at a time and the
-             scheduler interleaves at most one chunk per slot between
-             decode steps, bounding how long a long prompt can stall
-             token generation for already-running requests (the
-             classic prefill/decode interference fix).
+``runner``   the :class:`ModelRunner` protocol (``validate`` /
+             ``make_chunks`` / ``admit`` / ``alloc_pool`` /
+             ``prefill_chunk`` / ``decode_tick`` / ``reset_row``) plus a
+             registry (:func:`make_runner`) with three backends:
+
+             - ``TokenRunner`` — every token-only arch (attention
+               ``dense``/``moe``, SSM, MLA, hybrid) over the paged
+               block-granular KV pool, driving the two fixed-shape
+               jitted programs (lockstep ``(B, 1)`` decode over all
+               slots; ``(1, C)`` chunked prefill for one slot).
+             - ``EncoderPrefixRunner`` — whisper-style audio enc-dec:
+               ``encdec.encode`` runs once per request at admission and
+               each decoder layer's cross-attention K/V is scattered
+               into a per-slot device buffer; decoder tokens then
+               schedule exactly like a token-only arch.
+             - ``BasecallerRunner`` — squiggle-in, bases-out: reads
+               stream through the CTC basecaller as fixed-size
+               halo-padded chunks (bit-identical to the whole-read
+               forward) with incremental greedy/beam CTC merge. No
+               decode phase, no KV pool — but the same slots, queue,
+               admission and metrics.
+
+``sampling`` :class:`SamplingParams` — per-request stopping criteria +
+             temperature/top-k/top-p/seed. Sampling is vectorized
+             on-device: per-slot parameter rows ride into the decode
+             step, so a mixed greedy+sampled batch stays ONE jitted
+             program, and sample noise is keyed by
+             ``fold_in(PRNGKey(seed), rid, step)`` — deterministic
+             across restarts, slot placement, and preemption/resume.
+             ``temperature == 0`` rows take EXACT argmax; a pure-greedy
+             tick runs a program with no sampling ops at all, pinned
+             bit-identical to the pre-redesign engine by regression
+             tests.
 
 Paged KV pool (block arena + block tables + free list)
 ------------------------------------------------------
@@ -32,69 +55,71 @@ n_blocks, block_len, ...)`` leaves, instead of one contiguous
 (``(n_slots, T)``, ``T = ceil(ring_len/block_len)``) maps each slot's
 logical block to an arena block; tables are tiny int32 arrays shipped
 into the jitted programs every tick, so allocation (LIFO free list) is
-pure host bookkeeping. Positions stay PER SLOT — an int32 word per
-logical position — which keeps validity masking and the RESET-SPEC
-recycle machinery unchanged, and is what makes block recycling safe: a
-freed block keeps its bytes, but the next slot that maps it has an
-empty ``pos`` row until it writes, so stale KV can never attend back
-in. SSM recurrent state is O(1) per row and stays slot-indexed.
+pure host bookkeeping. Positions stay PER SLOT — which keeps validity
+masking and the RESET-SPEC recycle machinery unchanged, and is what
+makes block recycling safe: a freed block keeps its bytes, but the next
+slot that maps it has an empty ``pos`` row until it writes, so stale KV
+can never attend back in. SSM recurrent state is O(1) per row and stays
+slot-indexed. ``block_len=cache_len, n_blocks=n_slots`` recovers the
+contiguous layout exactly (the benchmark baseline).
 
-Sizing: contiguous reserved ``n_slots * cache_len`` positions up
-front; the paged pool holds ``n_blocks * block_len`` and hands them
-out on demand, so short requests stop taxing the pool at worst-case
-length and ``n_slots`` can exceed what a contiguous pool of equal
-bytes could back. ``block_len=cache_len, n_blocks=n_slots`` recovers
-the contiguous layout exactly (the benchmark baseline).
-
-Admission policy: ``submit`` rejects only what can never run
-(``prompt + max_new - 1 > cache_len`` — the final token is never
-written — or more blocks than the arena holds). A queued request is
-admitted when a slot is free AND the pool can back its prompt; decode
-allocates one block at a time as positions cross block boundaries.
-When the pool runs dry mid-decode, the YOUNGEST running request is
-preempted (blocks freed, requeued at the front) and later resumes by
-re-prefilling prompt + generated tokens — greedy decode is
-deterministic, so its tokens are unchanged. Preempting the youngest
-keeps the oldest progressing: no livelock.
+Admission policy: ``submit`` rejects only what can never run (runner
+``validate``: ``prompt + max_new - 1 > cache_len`` — the final token is
+never written — more blocks than the arena holds, or a malformed
+payload). A queued request is admitted when a slot is free AND the
+runner can back its payload; decode allocates one block at a time as
+positions cross block boundaries. When the pool runs dry mid-decode,
+the YOUNGEST running request is preempted (pool row freed, requeued at
+the front) and later resumes by re-prefilling prompt + generated
+tokens — greedy decode is deterministic and sampled decode replays its
+``(seed, rid, step)`` keys, so tokens are unchanged either way.
 
 Slot lifecycle
 --------------
 
-1. **Admit** — queue head -> free slot, prompt blocks allocated. The
-   slot's per-slot rows are reset in place per each cache's RESET SPEC
-   (``tfm.caches_reset_specs``): position leaves take the empty
-   sentinel, SSM recurrent state — which feeds forward multiplicatively
-   and cannot be masked at read time — is zeroed; arena bytes are
-   shared and never touched.
-2. **Prefill** — the prompt streams through ``chunk`` steps; KV lands
-   in the slot's mapped arena blocks. The final chunk's logits (taken
-   at the last real token) yield the first generated token (TTFT).
-3. **Decode** — the slot joins the lockstep ``decode`` batch until it
-   emits ``max_new_tokens`` tokens (or EOS), growing by one block each
-   time its position crosses a block boundary.
-4. **Evict** — blocks return to the free list, the slot frees, and the
-   next queued request is admitted on the following scheduler tick.
-   JIT shapes never change throughout.
+1. **Admit** — queue head -> free slot; the runner backs the payload
+   (``alloc_pool``) and stages per-request device state (``admit`` —
+   the audio runner encodes frames and scatters cross-attention K/V
+   into the slot's buffer). Per-slot cache rows are reset in place per
+   each cache's RESET SPEC on the first chunk.
+2. **Prefill** — the payload streams through ``prefill_chunk`` steps
+   (prompt tokens for LMs; halo-padded squiggle windows for reads,
+   which emit merged bases as they go). The final chunk of an
+   autoregressive prompt emits generated token #1 (TTFT).
+3. **Decode** — autoregressive slots join the lockstep ``decode_tick``
+   batch until ``max_new_tokens`` or EOS, growing by one block at block
+   crossings. Basecaller reads skip this phase entirely: they finish
+   with their last chunk.
+4. **Evict** — ``reset_row`` returns pool blocks / clears per-slot
+   runner state; the next queued request is admitted on the following
+   tick. JIT shapes never change throughout.
 
 Because the decode batch shape is pinned at ``n_slots``, oversubscribed
-traffic (more requests than slots) queues on the host and drains into
-freed slots — steady-state decode throughput stays at the full-batch
-rate instead of draining to the stragglers' rate, which is where the
-throughput win over static batching comes from (bench_serving.py).
+traffic queues on the host and drains into freed slots — steady-state
+decode throughput stays at the full-batch rate instead of draining to
+the stragglers' rate (bench_serving.py).
 
-Support matrix: every token-only stack — attention (``dense`` /
-``moe``; MoE pad slots are masked out of expert dispatch so free slots
-never perturb live requests), SSM (``ssm`` — per-row ``pos: (B, 1)``
-validity leaf; pad rows freeze the recurrence), MLA (``mla_dense`` /
-``mla_moe`` — paged latent arena) and the parallel attention+SSM
-hybrids (``hybrid_full`` / ``hybrid_swa`` — sliding-window groups ring
-at ``min(window, cache_len)`` so they page fewer blocks per slot).
-vlm/audio archs need a frontend prefix the token-only chunked prefill
-cannot feed — ``ServingEngine`` still raises for those (ROADMAP open
-item).
+Migration note (PR 4)
+---------------------
+
+``Request(prompt, max_new_tokens=…, eos_id=…)`` is deprecated: stopping
+criteria moved into ``SamplingParams`` alongside the sampler knobs —
+``Request(rid, prompt, SamplingParams(max_new_tokens=…, eos_id=…,
+temperature=…, top_k=…, top_p=…, seed=…))``. The legacy kwargs still
+work (mapped to a default-greedy SamplingParams + DeprecationWarning),
+and ``req.max_new_tokens`` / ``req.eos_id`` remain readable. New payload
+kwargs: ``frames=`` (audio encoder input) and ``signal=`` (squiggle) —
+exactly one of ``prompt``/``signal`` per request.
 """
 from repro.serving.cache import CachePool
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.metrics import ServingMetrics
+from repro.serving.runner import (BasecallerRunner, EncoderPrefixRunner,
+                                  ModelRunner, TokenRunner, make_runner,
+                                  register_runner)
+from repro.serving.sampling import GREEDY, SamplingParams
 
-__all__ = ["CachePool", "Request", "ServingEngine", "ServingMetrics"]
+__all__ = ["CachePool", "Request", "ServingEngine", "ServingMetrics",
+           "SamplingParams", "GREEDY", "ModelRunner", "TokenRunner",
+           "EncoderPrefixRunner", "BasecallerRunner", "make_runner",
+           "register_runner"]

@@ -1,132 +1,190 @@
-"""Continuous-batching scheduler: request queue -> paged block pool -> tokens.
+"""Continuous-batching scheduler: request queue -> runner -> tokens.
 
-See ``repro.serving.__init__`` for the design. The engine is pure
-host-side control flow around two jitted device programs (a lockstep
-``(B, 1)`` decode over all slots and a ``(1, C)`` chunked-prefill step
-for one slot), so every scheduling decision — admission, block
-allocation, preemption, eviction, prefill/decode interleave — costs
-zero retraces. Block tables are host numpy; they ride into the device
-programs as tiny int32 arguments each tick.
+See ``repro.serving.__init__`` for the design. The engine is PURE
+host-side control flow — queue, slots, admission, block accounting,
+preemption, metrics. Everything model-shaped (which jitted programs
+run, what a payload is, how a pool backs it) lives behind the
+:class:`repro.serving.runner.ModelRunner` protocol, so one scheduler
+serves token LMs, audio enc-dec, and the squiggle basecaller alike;
+this module imports no model code at all.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from collections import deque
-from typing import Any, Callable, Deque, Dict, List, Optional, Sequence
+from typing import (Any, Callable, Deque, Dict, List, Optional, Sequence)
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.config import ModelConfig
-from repro.models.lm import transformer as tfm
-from repro.serving.cache import CachePool
 from repro.serving.metrics import ServingMetrics
+from repro.serving.runner import Chunk, DecodeView, make_runner
+from repro.serving.sampling import GREEDY, SamplingParams
 
 FREE, PREFILL, DECODE = "free", "prefill", "decode"
 
 
-@dataclasses.dataclass
 class Request:
-    """One serving request. ``out_tokens`` fills as the engine runs."""
-    rid: int
-    prompt: Sequence[int]
-    max_new_tokens: int
-    eos_id: Optional[int] = None
-    arrival_time: float = 0.0          # virtual arrival (Poisson replay)
-    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    """One serving request: a payload union + per-request sampling.
+
+    Payloads (exactly one):
+      ``prompt``  token ids — LM decoding (audio archs also take
+                  ``frames``, the encoder input, alongside the decoder
+                  prompt).
+      ``signal``  a 1-D float squiggle — basecaller serving;
+                  ``out_tokens`` fills with base ids (1..4) as chunks
+                  stream through, and stopping criteria don't apply
+                  (the read ends when the signal does).
+
+    ``sampling`` is a :class:`repro.serving.sampling.SamplingParams`
+    (stopping criteria + temperature/top-k/top-p/seed). The legacy
+    ``Request(prompt, max_new_tokens=…, eos_id=…)`` kwargs still work —
+    they map onto a default-greedy SamplingParams and emit a
+    DeprecationWarning.
+
+    ``out_tokens`` fills as the engine runs.
+    """
+
+    def __init__(self, rid: int, prompt: Sequence[int] = (),
+                 sampling: Optional[SamplingParams] = None, *,
+                 frames=None, signal=None, arrival_time: float = 0.0,
+                 max_new_tokens: Optional[int] = None,
+                 eos_id: Optional[int] = None):
+        if max_new_tokens is not None or eos_id is not None:
+            if sampling is not None:
+                raise ValueError(
+                    f"request {rid}: pass either `sampling=SamplingParams"
+                    f"(...)` or the legacy max_new_tokens/eos_id kwargs, "
+                    f"not both")
+            warnings.warn(
+                "Request(max_new_tokens=..., eos_id=...) is deprecated; "
+                "use Request(rid, prompt, SamplingParams(max_new_tokens"
+                "=..., eos_id=...)) — the legacy kwargs map to greedy "
+                "sampling", DeprecationWarning, stacklevel=2)
+            sampling = SamplingParams(
+                max_new_tokens=(GREEDY.max_new_tokens
+                                if max_new_tokens is None
+                                else max_new_tokens),
+                eos_id=eos_id)
+        if signal is not None and len(prompt):
+            raise ValueError(
+                f"request {rid}: carries both a prompt and a signal — a "
+                f"request is exactly one payload (token prompt OR "
+                f"squiggle read)")
+        self.rid = rid
+        self.prompt = prompt
+        self.sampling = sampling if sampling is not None else GREEDY
+        self.frames = frames
+        self.signal = signal
+        self.arrival_time = arrival_time    # virtual arrival (Poisson replay)
+        self.out_tokens: List[int] = []
+        self.finished = False               # set by the engine at _finish
+
+    # legacy accessors (the pre-SamplingParams field names)
+    @property
+    def max_new_tokens(self) -> int:
+        return self.sampling.max_new_tokens
+
+    @property
+    def eos_id(self) -> Optional[int]:
+        return self.sampling.eos_id
 
     @property
     def done(self) -> bool:
-        if len(self.out_tokens) >= self.max_new_tokens:
+        if self.signal is not None:         # reads end with their signal
+            return self.finished
+        if len(self.out_tokens) >= self.sampling.max_new_tokens:
             return True
-        return (self.eos_id is not None and len(self.out_tokens) > 0
-                and self.out_tokens[-1] == self.eos_id)
+        eos = self.sampling.eos_id
+        return (eos is not None and len(self.out_tokens) > 0
+                and self.out_tokens[-1] == eos)
+
+    def __repr__(self) -> str:              # tests print these on failure
+        payload = (f"signal[{np.asarray(self.signal).size}]"
+                   if self.signal is not None else f"prompt[{len(self.prompt)}]")
+        return (f"Request(rid={self.rid}, {payload}, "
+                f"sampling={self.sampling}, out={len(self.out_tokens)})")
 
 
 @dataclasses.dataclass
 class _Slot:
     state: str = FREE
     req: Optional[Request] = None
-    pos: int = 0                       # tokens already written to the cache
-    pending: List[int] = dataclasses.field(default_factory=list)
+    pos: int = 0                       # payload units already consumed
+    pending: List[Chunk] = dataclasses.field(default_factory=list)
     last_token: int = 0                # next decode input
     fresh: bool = False                # first chunk must invalidate the row
     seq: int = -1                      # admission order (preemption picks max)
 
 
 class ServingEngine:
-    """Slot-based continuous batching over a PAGED block-granular KV pool.
+    """Slot-based continuous batching over a :class:`ModelRunner`.
 
-    Dense/SSM/MLA/hybrid archs decode bit-identically to the one-shot
-    path regardless of scheduling (every cache kind carries per-row
-    positions; SSM recurrent state is zeroed on slot recycle; recycled
-    arena blocks are masked by the new occupant's empty position row).
-    MoE archs mask pad slots out of expert dispatch (they consume no
-    capacity), but token-choice routing still depends on which LIVE
-    requests share the capacity pool — the same composition effect the
-    one-shot MoE paths document in tests/test_decode.py.
+    The runner registry (``repro.serving.runner``) picks the backend:
+    token-only archs (dense/moe/ssm/mla/hybrid) serve over the paged
+    block-granular KV pool with per-request SamplingParams; audio
+    enc-dec archs stage their encoder K/V per slot at admission; the
+    basecaller streams squiggle chunks with incremental CTC merge (no
+    decode phase at all). Scheduling invariants are runner-independent:
+    greedy rows decode bit-identically to the one-shot path regardless
+    of scheduling, and sampled rows replay deterministically from their
+    ``(seed, rid, step)`` keys (so preemption + re-prefill resume is
+    token-exact for both).
 
     Admission & preemption (paged pool)
     -----------------------------------
-    ``submit`` rejects only what can NEVER run: ``len(prompt) +
-    max_new_tokens - 1 > cache_len`` (the final generated token is never
-    written back, so a request writes exactly P + max_new - 1 positions)
-    or more blocks than the whole arena holds. ``_admit`` takes the FIFO
-    head when a slot is free AND the pool can back its prompt; decode
+    ``submit`` rejects only what can NEVER run (runner ``validate``:
+    capacity, payload shape). ``_admit`` takes the FIFO head when a slot
+    is free AND the runner can back its payload (``alloc_pool``); decode
     allocates one block at a time as positions cross block boundaries.
     When the pool runs dry mid-decode, the YOUNGEST running request is
-    preempted — blocks freed, request pushed back to the queue front —
-    and resumes later by re-prefilling prompt + generated tokens (greedy
-    decode is deterministic, so tokens are unchanged). Preempting the
-    youngest means the oldest always progresses: no livelock.
+    preempted — pool row released, request pushed back to the queue
+    front — and resumes later by re-prefilling prompt + generated
+    tokens (decode is deterministic, so tokens are unchanged).
+    Preempting the youngest means the oldest always progresses: no
+    livelock.
 
     Parameters
     ----------
-    params, cfg : the model. Any token-only arch serves — layer kinds
-        ``dense``/``moe`` (qwen, granite), ``ssm`` (mamba2),
-        ``mla_dense``/``mla_moe`` (deepseek), ``hybrid_full``/
-        ``hybrid_swa`` (hymba). vlm/audio frontends need a patch/frame
-        prefix the token-only chunked prefill cannot feed and still
-        raise.
+    params, cfg : the model; the runner registry dispatches on ``cfg``
+        (vlm frontends have no runner yet and raise NotImplementedError).
     n_slots : decode batch size (fixed for the engine's lifetime).
-    cache_len : per-REQUEST logical KV capacity; every admitted request
-        must satisfy ``len(prompt) + max_new_tokens - 1 <= cache_len``.
+    cache_len : per-REQUEST logical KV capacity; every admitted token
+        request must satisfy ``len(prompt) + max_new_tokens - 1 <=
+        cache_len``. (Ignored by the basecaller runner — reads stream.)
     prefill_chunk : tokens per chunked-prefill step. The scheduler runs
         at most one chunk per slot between decode steps.
     block_len : KV positions per arena block (``cache_len`` degenerates
         to the old contiguous one-row-per-slot layout).
     n_blocks : arena blocks per full-length layer group; 0 = full
-        backing (``n_slots * ceil(cache_len/block_len)``). Set lower to
-        oversubscribe slots against KV bytes — short requests then only
-        pay for the blocks they touch.
-    history_limit : bound host-side growth for indefinite serves: per-
-        slot admission history and the completed map keep only the most
-        recent N entries, and metrics sample reservoirs roll (aggregate
+        backing. Set lower to oversubscribe slots against KV bytes.
+    history_limit : bound host-side growth for indefinite serves (slot
+        history, completed map, metrics reservoirs roll; aggregate
         counters stay exact). None = unbounded (tests, benches).
+    runner : pre-built ModelRunner (overrides the registry dispatch).
+    **runner_kw : extra backend knobs, e.g. ``chunk_samples``/``beam``/
+        ``model_state`` for the basecaller runner.
     """
 
-    def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 4,
+    def __init__(self, params, cfg, *, n_slots: int = 4,
                  cache_len: int = 256, prefill_chunk: int = 16,
-                 cache_dtype=jnp.bfloat16, block_len: int = 0,
+                 cache_dtype=None, block_len: int = 0,
                  n_blocks: int = 0, history_limit: Optional[int] = None,
-                 clock: Callable[[], float] = time.perf_counter):
-        if not tfm.supports_slot_serving(cfg):
-            kinds = sorted({k for _, k, _ in tfm.group_names(cfg)})
-            raise NotImplementedError(
-                f"continuous batching needs a token-only arch (no "
-                f"vision/audio frontend) with layer kinds in "
-                f"{tfm.SLOT_KINDS}; {cfg.name} has "
-                f"family={cfg.family!r}, kinds={kinds}, "
-                f"frontend_tokens={cfg.frontend_tokens}")
+                 clock: Callable[[], float] = time.perf_counter,
+                 runner=None, **runner_kw):
+        if cache_dtype is None:
+            import jax.numpy as jnp   # local: engine itself is model-free
+            cache_dtype = jnp.bfloat16
         self.params = params
         self.cfg = cfg
         self.n_slots = int(n_slots)
         self.cache_len = int(cache_len)
         self.prefill_chunk = int(prefill_chunk)
-        self.pool = CachePool(cfg, n_slots, cache_len, cache_dtype,
-                              block_len=block_len, n_blocks=n_blocks)
+        self.runner = runner if runner is not None else make_runner(
+            params, cfg, n_slots=self.n_slots, cache_len=self.cache_len,
+            prefill_chunk=self.prefill_chunk, cache_dtype=cache_dtype,
+            block_len=block_len, n_blocks=n_blocks, **runner_kw)
         self.history_limit = history_limit
         self.metrics = ServingMetrics(clock, max_samples=history_limit)
         self.queue: Deque[Request] = deque()
@@ -138,63 +196,17 @@ class ServingEngine:
             for _ in range(self.n_slots)]
         self.completed: Dict[int, Request] = {}
 
-        # Greedy argmax happens on-device inside the jitted programs: the
-        # host sees token ids, not (B,1,vocab) logits — one dispatch and
-        # a tiny transfer per tick. The chunk step unembeds only the
-        # requested position (`logits_at`); the other C-1 vocab-matmul
-        # rows would be discarded by the scheduler anyway. The pool is
-        # donated: the scatter updates alias the input buffers instead of
-        # copying the whole KV pool every step. Block tables arrive as a
-        # separate (non-donated) tiny int32 pytree each call.
-        def _decode_fn(p, pool, tok, t, tables):
-            logits, npool = tfm.decode_step_slots(p, pool, tok, t, cfg,
-                                                  tables=tables)
-            return jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32), \
-                npool
-
-        reset_spec = self.pool.reset_spec
-        slot_axes = self.pool.slot_axes
-
-        def _chunk_fn(p, pool, tok, t, slot, fresh, last, tables):
-            row = CachePool.gather_row(pool, slot, slot_axes)
-            # recycle the slot in-chunk, per the cache's own reset spec
-            # (mask stale positions / zero SSM recurrent state; arena
-            # bytes are shared and stay put — the empty pos row is what
-            # keeps a recycled block's old KV out of attention)
-            row = CachePool.mask_fresh(row, fresh, reset_spec)
-            logits, nrow = tfm.decode_step_slots(p, row, tok, t, cfg,
-                                                 logits_at=last,
-                                                 tables=tables)
-            return jnp.argmax(logits[0, 0]).astype(jnp.int32), \
-                CachePool.scatter_row(pool, nrow, slot, slot_axes)
-
-        self._decode = jax.jit(_decode_fn, donate_argnums=(1,))
-        self._chunk = jax.jit(_chunk_fn, donate_argnums=(1,))
+    @property
+    def pool(self):
+        """The runner's cache pool (None for poolless runners)."""
+        return self.runner.pool
 
     # ------------------------------------------------------------ intake
     def submit(self, req: Request) -> None:
-        if not req.prompt:
-            raise ValueError(f"request {req.rid}: empty prompt")
-        if req.max_new_tokens < 1:
-            raise ValueError(
-                f"request {req.rid}: max_new_tokens must be >= 1 (got "
-                f"{req.max_new_tokens}); zero-output requests have no "
-                f"defined first token")
-        # positions written are 0 .. P + max_new - 2: the final generated
-        # token is returned but never written back into the cache, so a
-        # request that EXACTLY fills the cache must be admitted
-        need = len(req.prompt) + req.max_new_tokens - 1
-        if need > self.cache_len:
-            raise ValueError(
-                f"request {req.rid}: prompt+max_new-1 = {need} positions "
-                f"exceed cache_len {self.cache_len}")
-        if not self.pool.fits(need):
-            bl = self.pool.block_len
-            raise ValueError(
-                f"request {req.rid}: needs {-(-need // bl)} blocks of "
-                f"{bl}, more than the arena holds "
-                f"({min(self.pool.n_blocks.values())}); raise n_blocks")
-        self.metrics.record_arrival(req.rid, len(req.prompt))
+        self.runner.validate(req)      # capacity/payload; raises ValueError
+        n_in = (int(np.asarray(req.signal).size) if req.signal is not None
+                else len(req.prompt))
+        self.metrics.record_arrival(req.rid, n_in)
         self.queue.append(req)
 
     @property
@@ -212,7 +224,7 @@ class ServingEngine:
         self._prefill_tick()
         self._decode_tick()
         self.metrics.record_step(len(self.queue), self.n_active,
-                                 self.pool.block_stats()["util"])
+                                 self.runner.pool_util())
 
     def run(self) -> Dict[int, Request]:
         """Drain queue + slots to completion; returns completed requests
@@ -227,22 +239,30 @@ class ServingEngine:
         done, self.completed = self.completed, {}
         return done
 
+    def reset_stats(self) -> None:
+        """Fresh metrics + completed map for a new measurement pass over
+        the SAME warm engine (benchmarks drain the same workload
+        repeatedly; each pass should report itself). Slot history and
+        admission sequencing intentionally keep accumulating — they
+        describe the engine's lifetime, not one drain."""
+        self.metrics = ServingMetrics(self.metrics.clock,
+                                      max_samples=self.history_limit)
+        self.completed = {}
+
     def _admit(self) -> None:
         for i, slot in enumerate(self.slots):
             if slot.state != FREE or not self.queue:
                 continue
             req = self.queue[0]
-            # resume-after-preemption re-prefills prompt + already-
-            # generated tokens (greedy is deterministic); fresh requests
-            # have out_tokens == [] so this is the same code path
-            seq_tokens = list(req.prompt) + list(req.out_tokens)
-            if not self.pool.alloc(i, len(seq_tokens)):
+            chunks = self.runner.make_chunks(req)
+            if not self.runner.alloc_pool(i, sum(c.n_units for c in chunks)):
                 break                   # FIFO: no skipping the queue head
             self.queue.popleft()
+            self.runner.admit(i, req)   # stage per-request device state
             slot.state = PREFILL
             slot.req = req
             slot.pos = 0
-            slot.pending = seq_tokens
+            slot.pending = chunks
             slot.fresh = True           # row invalidated by the 1st chunk
             slot.seq = self._admit_seq
             self._admit_seq += 1
@@ -250,36 +270,33 @@ class ServingEngine:
             self.metrics.record_admit(req.rid)
 
     def _prefill_tick(self) -> None:
-        C = self.prefill_chunk
         for i, slot in enumerate(self.slots):
             if slot.state != PREFILL:
                 continue
-            chunk = slot.pending[:C]
-            slot.pending = slot.pending[C:]
-            n = len(chunk)
-            tok = np.zeros((1, C), np.int32)
-            tok[0, :n] = chunk
-            t = np.full((1, C), -1, np.int32)
-            t[0, :n] = slot.pos + np.arange(n)
-            tok0, self.pool.caches = self._chunk(
-                self.params, self.pool.caches, tok, t,
-                np.int32(i), np.int32(slot.fresh), np.int32(n - 1),
-                self.pool.table_rows(i))
+            chunk = slot.pending.pop(0)
+            final = not slot.pending
+            emitted = self.runner.prefill_chunk(i, chunk.payload, slot.pos,
+                                                slot.fresh, slot.req, final)
             slot.fresh = False
-            slot.pos += n
-            self.metrics.record_prefill(n)
-            if slot.pending:
+            slot.pos += chunk.n_units
+            self.metrics.record_prefill(chunk.n_units)
+            if emitted:
+                first = not slot.req.out_tokens
+                slot.req.out_tokens.extend(emitted)
+                if first:
+                    self.metrics.record_first_token(slot.req.rid)
+            if not final:
                 continue
-            # prompt fully cached: last real token's argmax is the next
-            # generated token (token #1 for fresh requests; the resume
-            # point after a preemption)
-            first = int(tok0)
-            slot.req.out_tokens.append(first)
-            self.metrics.record_first_token(slot.req.rid)
-            slot.last_token = first
-            slot.state = DECODE
-            if slot.req.done:           # max_new_tokens reached (or EOS)
-                self._finish(i)
+            if self.runner.autoregressive:
+                # prompt fully cached: the final chunk emitted the next
+                # generated token (token #1 for fresh requests; the
+                # resume point after a preemption)
+                slot.last_token = slot.req.out_tokens[-1]
+                slot.state = DECODE
+                if slot.req.done:       # max_new_tokens reached (or EOS)
+                    self._finish(i)
+            else:
+                self._finish(i)         # reads end with their last chunk
 
     def _ensure_decode_blocks(self) -> None:
         """Every DECODE slot writes position ``slot.pos`` this tick;
@@ -291,37 +308,35 @@ class ServingEngine:
                 continue
             # re-read slots[i] each pass: _preempt may replace it (even i)
             while self.slots[i].state == DECODE and \
-                    not self.pool.alloc(i, self.slots[i].pos + 1):
+                    not self.runner.alloc_pool(i, self.slots[i].pos + 1):
                 victim = max(
                     (j for j, s in enumerate(self.slots) if s.state != FREE),
                     key=lambda j: self.slots[j].seq)
                 self._preempt(victim)   # may be slot i itself
 
     def _preempt(self, i: int) -> None:
-        """Evict a running request, free its blocks, and requeue it at
+        """Evict a running request, free its pool row, and requeue it at
         the FRONT for resume-by-re-prefill."""
         slot = self.slots[i]
         req = slot.req
-        self.pool.release_slot(i)
+        self.runner.reset_row(i)
         self.metrics.record_preempt(req.rid)
         self.queue.appendleft(req)
         self.slots[i] = _Slot()
 
     def _decode_tick(self) -> None:
+        if not self.runner.autoregressive:
+            return
         self._ensure_decode_blocks()
         live = [i for i, s in enumerate(self.slots) if s.state == DECODE]
         if not live:
             return
-        tok = np.zeros((self.n_slots, 1), np.int32)
-        t = np.full((self.n_slots, 1), -1, np.int32)
+        views: List[Optional[DecodeView]] = [None] * self.n_slots
         for i in live:
-            tok[i, 0] = self.slots[i].last_token
-            t[i, 0] = self.slots[i].pos
+            s = self.slots[i]
+            views[i] = DecodeView(s.last_token, s.pos, s.req)
         t0 = self.metrics.clock()
-        toks, self.pool.caches = self._decode(
-            self.params, self.pool.caches, tok, t,
-            self.pool.device_tables())
-        nxt = np.asarray(toks)                                  # syncs
+        nxt = self.runner.decode_tick(views)                    # syncs
         self.metrics.record_decode(len(live), self.metrics.clock() - t0)
         for i in live:
             slot = self.slots[i]
@@ -335,7 +350,8 @@ class ServingEngine:
     def _finish(self, i: int) -> None:
         slot = self.slots[i]
         req = slot.req
-        self.pool.release_slot(i)       # blocks back to the free lists
+        self.runner.reset_row(i)        # pool row back to the free lists
+        req.finished = True
         self.metrics.record_done(req.rid, len(req.out_tokens))
         self.completed[req.rid] = req
         if self.history_limit:

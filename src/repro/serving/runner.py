@@ -1,0 +1,507 @@
+"""ModelRunner protocol + registry: the serving engine's model backend.
+
+The engine (``repro.serving.engine``) is pure host-side scheduling —
+queue, slots, admission, preemption, metrics. Everything model-shaped
+lives behind a :class:`ModelRunner`:
+
+``validate``       submit-time capacity/payload checks (raise ValueError)
+``make_chunks``    split a request's payload into prefill chunks
+``admit``          stage per-request device state into a slot (e.g. the
+                   audio runner's encoder K/V)
+``alloc_pool``     back payload positions ``[0, upto)`` with pool blocks
+``prefill_chunk``  run one chunk through the model; returns tokens it
+                   commits (the final chunk of an autoregressive prompt
+                   emits exactly the first generated token)
+``decode_tick``    one lockstep token for every live slot (autoregressive
+                   runners only)
+``reset_row``      release a slot's pool blocks / per-slot runner state
+
+Three registered implementations:
+
+TokenRunner           every token-only arch (dense/moe/ssm/mla/hybrid)
+                      over the paged KV pool, with per-request
+                      ``SamplingParams`` (greedy rows stay bit-identical
+                      to the pre-runner engine — the pure-greedy decode
+                      program contains no sampling ops at all).
+EncoderPrefixRunner   whisper-style audio enc-dec: ``encdec.encode`` runs
+                      once per request at admission and the per-layer
+                      cross-attention K/V is scattered into a per-slot
+                      buffer the decode/chunk programs read; the decoder
+                      tokens then serve exactly like a token-only arch.
+BasecallerRunner      squiggle-in, bases-out: reads stream through the
+                      CTC basecaller as fixed-size halo-padded chunks
+                      (bit-identical to the whole-read forward — see
+                      ``repro.models.basecaller.model``) with an
+                      incremental greedy/beam CTC merge per slot. Not
+                      autoregressive: a read finishes with its last
+                      chunk and never occupies a decode slot.
+
+``make_runner(params, cfg, **kw)`` dispatches on the config; register
+custom backends with :func:`register_runner`.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.serving.cache import CachePool
+from repro.serving.sampling import any_sampled, pack_rows, sample_tokens
+
+
+class Chunk(NamedTuple):
+    """One prefill unit: an opaque payload + how many logical positions
+    it advances a slot (tokens for LMs, squiggle samples for reads)."""
+    payload: Any
+    n_units: int
+
+
+class DecodeView(NamedTuple):
+    """What a runner needs to decode one live slot for one tick."""
+    last_token: int
+    pos: int
+    req: Any                    # repro.serving.engine.Request
+
+
+# ---------------------------------------------------------------------------
+# Protocol
+
+
+class ModelRunner:
+    """Duck-typed base for serving backends (see the module docstring
+    for the contract). The engine only ever touches these members."""
+
+    autoregressive: bool = True
+    pool = None                         # CachePool or None
+
+    def validate(self, req) -> None:
+        raise NotImplementedError
+
+    def make_chunks(self, req) -> List[Chunk]:
+        raise NotImplementedError
+
+    def admit(self, slot: int, req) -> None:
+        pass
+
+    def alloc_pool(self, slot: int, upto: int) -> bool:
+        return True
+
+    def reset_row(self, slot: int) -> None:
+        pass
+
+    def pool_util(self) -> float:
+        return 0.0
+
+    def prefill_chunk(self, slot: int, payload, pos: int, fresh: bool,
+                      req, final: bool) -> List[int]:
+        raise NotImplementedError
+
+    def decode_tick(self, views: List[Optional["DecodeView"]]) -> np.ndarray:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# TokenRunner — token-only archs over the paged KV pool
+
+
+class TokenRunner(ModelRunner):
+    """Drives ``decode_step_slots`` (lockstep ``(B, 1)`` decode + ``(1,
+    C)`` chunked prefill) over a paged :class:`CachePool`, with
+    vectorized per-request sampling.
+
+    Two decode programs are kept: the pure-greedy one is byte-for-byte
+    the pre-SamplingParams program (argmax only — the greedy-parity
+    regression gate), and the sampling one adds the per-row top-k/top-p/
+    Gumbel work. A tick uses the sampling program only when a live row
+    actually samples; greedy rows inside it still take exact argmax.
+    """
+
+    autoregressive = True
+
+    def __init__(self, params, cfg: ModelConfig, *, n_slots: int,
+                 cache_len: int, prefill_chunk: int, cache_dtype,
+                 block_len: int = 0, n_blocks: int = 0, _check: bool = True,
+                 **_):
+        from repro.models.lm import transformer as tfm
+        if _check and not tfm.supports_slot_serving(cfg):
+            kinds = sorted({k for _, k, _ in tfm.group_names(cfg)})
+            raise NotImplementedError(
+                f"TokenRunner needs a token-only arch (no vision/audio "
+                f"frontend) with layer kinds in {tfm.SLOT_KINDS}; "
+                f"{cfg.name} has family={cfg.family!r}, kinds={kinds}, "
+                f"frontend_tokens={cfg.frontend_tokens}")
+        self._tfm = tfm
+        self.params = params
+        self.cfg = cfg
+        self.n_slots = int(n_slots)
+        self.cache_len = int(cache_len)
+        self.chunk_tokens = int(prefill_chunk)
+        self.pool = CachePool(cfg, n_slots, cache_len, cache_dtype,
+                              block_len=block_len, n_blocks=n_blocks)
+        self.enc_kv: Optional[Dict[str, Dict]] = None    # audio subclass
+        self._build_programs()
+
+    def _build_programs(self) -> None:
+        cfg, tfm = self.cfg, self._tfm
+        reset_spec = self.pool.reset_spec
+        slot_axes = self.pool.slot_axes
+
+        # Greedy argmax / sampling happen on-device inside the jitted
+        # programs: the host sees token ids, not (B,1,vocab) logits —
+        # one dispatch and a tiny transfer per tick. The chunk step
+        # unembeds only the requested position (`logits_at`). The pool
+        # is donated: scatter updates alias the input buffers. Block
+        # tables and sampling rows arrive as tiny (non-donated) int32/
+        # f32 pytrees each call; ``ekv`` is None for token-only archs
+        # and the per-slot encoder K/V buffers for the audio runner.
+        def decode_greedy(p, pool, tok, t, tables, ekv):
+            logits, npool = tfm.decode_step_slots(p, pool, tok, t, cfg,
+                                                  tables=tables, enc_kv=ekv)
+            return jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32), \
+                npool
+
+        def decode_sampled(p, pool, tok, t, tables, sp, ekv):
+            logits, npool = tfm.decode_step_slots(p, pool, tok, t, cfg,
+                                                  tables=tables, enc_kv=ekv)
+            return sample_tokens(logits[:, 0, :], sp), npool
+
+        def chunk_row(pool, tok, t, slot, fresh, last, tables, ekv, p):
+            row = CachePool.gather_row(pool, slot, slot_axes)
+            # recycle the slot in-chunk, per the cache's own reset spec
+            # (mask stale positions / zero SSM recurrent state; arena
+            # bytes are shared and stay put — the empty pos row is what
+            # keeps a recycled block's old KV out of attention)
+            row = CachePool.mask_fresh(row, fresh, reset_spec)
+            ekv_row = None if ekv is None else jax.tree.map(
+                lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1),
+                ekv)
+            logits, nrow = tfm.decode_step_slots(p, row, tok, t, cfg,
+                                                 logits_at=last,
+                                                 tables=tables,
+                                                 enc_kv=ekv_row)
+            return logits, CachePool.scatter_row(pool, nrow, slot, slot_axes)
+
+        def chunk_greedy(p, pool, tok, t, slot, fresh, last, tables, ekv):
+            logits, npool = chunk_row(pool, tok, t, slot, fresh, last,
+                                      tables, ekv, p)
+            return jnp.argmax(logits[0, 0]).astype(jnp.int32), npool
+
+        def chunk_sampled(p, pool, tok, t, slot, fresh, last, tables, sp,
+                          ekv):
+            logits, npool = chunk_row(pool, tok, t, slot, fresh, last,
+                                      tables, ekv, p)
+            return sample_tokens(logits[:, 0, :], sp)[0], npool
+
+        self._decode_greedy = jax.jit(decode_greedy, donate_argnums=(1,))
+        self._decode_sampled = jax.jit(decode_sampled, donate_argnums=(1,))
+        self._chunk_greedy = jax.jit(chunk_greedy, donate_argnums=(1,))
+        self._chunk_sampled = jax.jit(chunk_sampled, donate_argnums=(1,))
+
+    # ------------------------------------------------------------ intake
+    def validate(self, req) -> None:
+        if req.signal is not None:
+            raise ValueError(
+                f"request {req.rid}: {type(self).__name__} serves token "
+                f"prompts, not squiggle signals (use a basecaller arch)")
+        if not req.prompt:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"request {req.rid}: max_new_tokens must be >= 1 (got "
+                f"{req.max_new_tokens}); zero-output requests have no "
+                f"defined first token")
+        # positions written are 0 .. P + max_new - 2: the final generated
+        # token is returned but never written back into the cache, so a
+        # request that EXACTLY fills the cache must be admitted
+        need = len(req.prompt) + req.max_new_tokens - 1
+        if need > self.cache_len:
+            raise ValueError(
+                f"request {req.rid}: prompt+max_new-1 = {need} positions "
+                f"exceed cache_len {self.cache_len}")
+        if not self.pool.fits(need):
+            bl = self.pool.block_len
+            raise ValueError(
+                f"request {req.rid}: needs {-(-need // bl)} blocks of "
+                f"{bl}, more than the arena holds "
+                f"({min(self.pool.n_blocks.values())}); raise n_blocks")
+
+    def make_chunks(self, req) -> List[Chunk]:
+        # resume-after-preemption re-prefills prompt + already-generated
+        # tokens (decode is deterministic — greedy by definition, sampled
+        # because the (seed, rid, step) keys replay); fresh requests have
+        # out_tokens == [] so this is the same code path
+        seq = list(req.prompt) + list(req.out_tokens)
+        C = self.chunk_tokens
+        return [Chunk(seq[i:i + C], len(seq[i:i + C]))
+                for i in range(0, len(seq), C)]
+
+    def admit(self, slot: int, req) -> None:
+        pass                                # nothing to stage for tokens
+
+    # ------------------------------------------------------------- pool
+    def alloc_pool(self, slot: int, upto: int) -> bool:
+        return self.pool.alloc(slot, upto)
+
+    def reset_row(self, slot: int) -> None:
+        self.pool.release_slot(slot)
+
+    def pool_util(self) -> float:
+        return self.pool.block_stats()["util"]
+
+    # ------------------------------------------------------------ device
+    def prefill_chunk(self, slot: int, payload, pos: int, fresh: bool,
+                      req, final: bool) -> List[int]:
+        C = self.chunk_tokens
+        n = len(payload)
+        tok = np.zeros((1, C), np.int32)
+        tok[0, :n] = payload
+        t = np.full((1, C), -1, np.int32)
+        t[0, :n] = pos + np.arange(n)
+        args = (self.params, self.pool.caches, tok, t, np.int32(slot),
+                np.int32(fresh), np.int32(n - 1),
+                self.pool.table_rows(slot))
+        # only the FINAL chunk's token is ever used, so mid-prompt chunks
+        # always run the cheap greedy program (cache updates are identical
+        # in both; the sampled program's sort/top-k/Gumbel work would be
+        # discarded)
+        if final and req.sampling.temperature > 0:
+            sp = pack_rows([(req.sampling, req.rid, len(req.out_tokens))])
+            tok0, self.pool.caches = self._chunk_sampled(*args, sp,
+                                                         self.enc_kv)
+        else:
+            tok0, self.pool.caches = self._chunk_greedy(*args, self.enc_kv)
+        # the prompt's final chunk emits generated token #1 (the argmax/
+        # sample at the last real position); mid-prompt chunks emit
+        # nothing (their speculative token is discarded)
+        return [int(tok0)] if final else []
+
+    def decode_tick(self, views: List[Optional[DecodeView]]) -> np.ndarray:
+        B = self.n_slots
+        tok = np.zeros((B, 1), np.int32)
+        t = np.full((B, 1), -1, np.int32)
+        rows: List[Optional[Tuple]] = [None] * B
+        for i, v in enumerate(views):
+            if v is None:
+                continue
+            tok[i, 0] = v.last_token
+            t[i, 0] = v.pos
+            rows[i] = (v.req.sampling, v.req.rid, len(v.req.out_tokens))
+        tables = self.pool.device_tables()
+        if any_sampled(rows):
+            toks, self.pool.caches = self._decode_sampled(
+                self.params, self.pool.caches, tok, t, tables,
+                pack_rows(rows), self.enc_kv)
+        else:
+            toks, self.pool.caches = self._decode_greedy(
+                self.params, self.pool.caches, tok, t, tables, self.enc_kv)
+        return np.asarray(toks)                                 # syncs
+
+
+# ---------------------------------------------------------------------------
+# EncoderPrefixRunner — audio enc-dec (whisper)
+
+
+class EncoderPrefixRunner(TokenRunner):
+    """Serve an encoder-decoder audio arch under the slot machinery.
+
+    Each request carries ``frames`` (the stub log-mel embeddings,
+    ``(frontend_tokens, d_model)``). At admission the encoder runs once
+    and every decoder layer's cross-attention K/V is scattered into a
+    per-slot device buffer (``(n_layers, n_slots, Se, Hkv, hd)`` per
+    xdec group); the chunk/decode programs read the slot's rows, so the
+    decoder tokens then schedule exactly like a token-only arch —
+    chunked prefill, paged self-attention KV, sampling, preemption
+    (resume restages the encoder output; ``encode`` is deterministic).
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, cache_dtype, **kw):
+        if cfg.family != "audio":
+            raise NotImplementedError(
+                f"EncoderPrefixRunner serves audio enc-dec archs, not "
+                f"{cfg.name} (family={cfg.family!r})")
+        super().__init__(params, cfg, cache_dtype=cache_dtype, _check=False,
+                         **kw)
+        tfm = self._tfm
+        Hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        Se = cfg.frontend_tokens
+        self.enc_kv = {
+            gname: {"k": jnp.zeros((n, self.n_slots, Se, Hkv, hd),
+                                   cache_dtype),
+                    "v": jnp.zeros((n, self.n_slots, Se, Hkv, hd),
+                                   cache_dtype)}
+            for gname, kind, n in tfm.group_names(cfg) if kind == "xdec"}
+
+        def stage(p, bufs, frames, slot):
+            from repro.models.lm import encdec
+            enc_out = encdec.encode(p["encoder"], frames[None], cfg)
+            new = {}
+            for gname in bufs:
+                pstack = p["groups"][gname]
+                kv = jax.vmap(lambda p1: tfm.enc_kv_for_layer(
+                    p1["xattn"], enc_out, cfg))(pstack)
+                new[gname] = jax.tree.map(
+                    lambda dst, src: jax.lax.dynamic_update_slice_in_dim(
+                        dst, src.astype(dst.dtype), slot, axis=1),
+                    bufs[gname], kv)
+            return new
+
+        self._stage = jax.jit(stage, donate_argnums=(1,))
+
+    def validate(self, req) -> None:
+        super().validate(req)
+        Se, d = self.cfg.frontend_tokens, self.cfg.d_model
+        if req.frames is None:
+            raise ValueError(
+                f"request {req.rid}: audio serving needs a `frames` "
+                f"payload of shape ({Se}, {d})")
+        if tuple(np.shape(req.frames)) != (Se, d):
+            raise ValueError(
+                f"request {req.rid}: frames shape "
+                f"{tuple(np.shape(req.frames))} != ({Se}, {d})")
+
+    def admit(self, slot: int, req) -> None:
+        frames = np.asarray(req.frames, np.float32)
+        self.enc_kv = self._stage(self.params, self.enc_kv, frames,
+                                  np.int32(slot))
+
+
+# ---------------------------------------------------------------------------
+# BasecallerRunner — squiggle in, bases out
+
+
+class BasecallerRunner(ModelRunner):
+    """Serve nanopore reads through the CTC basecaller.
+
+    A read's squiggle streams through fixed-size halo-padded windows
+    (one jitted forward, one compile); each window's core frames feed an
+    incremental CTC merge. With the read-edge masking in
+    ``repro.models.basecaller.model``, the concatenated core frames are
+    BIT-IDENTICAL to the whole-read offline forward, so greedy serving
+    output == offline ``greedy_decode`` exactly (the parity gate; note
+    act-quantized configs like rubicall compute activation scales over
+    the visible extent, so their chunked frames can differ at ~1e-7 and
+    parity is near-exact rather than bitwise). ``beam > 0`` switches to
+    the incremental prefix-beam merge — tokens then arrive all at once
+    when the read completes, equal to offline ``beam_decode``.
+
+    Reads are NOT autoregressive: there is no decode phase, no KV pool
+    (``alloc_pool`` always succeeds, so reads are never preempted), and
+    a read finishes with its final chunk. Slot/admission/queue machinery
+    — and the metrics — are shared with the LM runners unchanged.
+    """
+
+    autoregressive = False
+    pool = None
+
+    def __init__(self, params, cfg: ModelConfig, *, n_slots: int,
+                 chunk_samples: int = 1024, beam: int = 0,
+                 model_state=None, **_):
+        from repro.models.basecaller import model as bc
+        from repro.models.basecaller import ctc
+        self._bc, self._ctc = bc, ctc
+        self.params = params
+        self.cfg = cfg
+        self.n_slots = int(n_slots)
+        self.stride = bc.total_stride(cfg)
+        self.halo = bc.chunk_halo(cfg)
+        self.core = max(-(-int(chunk_samples) // self.stride), 1) * self.stride
+        self.beam = int(beam)
+        self.state = model_state if model_state is not None \
+            else bc.init_state(cfg)
+        self._merge: List[Optional[Any]] = [None] * self.n_slots
+        self._fwd = jax.jit(lambda p, s, w, start, read_len: bc.forward_window(
+            p, s, w, cfg, start, read_len))
+
+    # ------------------------------------------------------------ intake
+    def validate(self, req) -> None:
+        if req.signal is None:
+            raise ValueError(
+                f"request {req.rid}: basecaller serving needs a `signal` "
+                f"payload (1-D float squiggle)")
+        if np.asarray(req.signal).size < 1:
+            raise ValueError(f"request {req.rid}: empty signal")
+
+    def make_chunks(self, req) -> List[Chunk]:
+        sig = np.asarray(req.signal, np.float32).reshape(-1)
+        wins = self._bc.chunk_windows(sig, self.core, self.halo, self.stride)
+        return [Chunk((w, nf, k * self.core - self.halo, sig.shape[0]), ns)
+                for k, (w, nf, ns) in enumerate(wins)]
+
+    def admit(self, slot: int, req) -> None:
+        self._merge[slot] = (self._ctc.BeamCTCMerge(self.beam) if self.beam
+                             else self._ctc.GreedyCTCMerge())
+
+    # ------------------------------------------------------------- pool
+    def alloc_pool(self, slot: int, upto: int) -> bool:
+        return True                     # no KV pool — nothing to run dry
+
+    def reset_row(self, slot: int) -> None:
+        self._merge[slot] = None
+
+    def pool_util(self) -> float:
+        return 0.0
+
+    # ------------------------------------------------------------ device
+    def prefill_chunk(self, slot: int, payload, pos: int, fresh: bool,
+                      req, final: bool) -> List[int]:
+        window, n_frames, start, read_len = payload
+        lp = np.asarray(self._fwd(self.params, self.state, window[None],
+                                  np.int32(start), np.int32(read_len)))
+        f0 = self.halo // self.stride
+        core = lp[0, f0:f0 + n_frames]
+        merge = self._merge[slot]
+        out = merge.feed(core if self.beam else np.argmax(core, axis=-1))
+        if final:
+            out = out + merge.finalize()
+        return out
+
+    def decode_tick(self, views) -> np.ndarray:
+        raise RuntimeError("BasecallerRunner has no decode phase")
+
+
+# ---------------------------------------------------------------------------
+# Registry
+
+
+_RUNNERS: List[Tuple[str, Callable[[ModelConfig], bool], Callable]] = []
+
+
+def register_runner(name: str, predicate: Callable[[ModelConfig], bool],
+                    factory: Callable) -> None:
+    """Register a serving backend: first predicate match wins."""
+    _RUNNERS.append((name, predicate, factory))
+
+
+def runner_name_for(cfg: ModelConfig) -> Optional[str]:
+    for name, pred, _ in _RUNNERS:
+        if pred(cfg):
+            return name
+    return None
+
+
+def make_runner(params, cfg: ModelConfig, **kw):
+    """Build the registered runner for this config. Engine kwargs that a
+    runner does not consume (e.g. ``block_len`` for the basecaller) are
+    ignored by that runner."""
+    for name, pred, factory in _RUNNERS:
+        if pred(cfg):
+            return factory(params, cfg, **kw)
+    raise NotImplementedError(
+        f"no serving runner registered for {cfg.name} (family="
+        f"{cfg.family!r}, frontend_tokens={cfg.frontend_tokens}); "
+        f"registered: {[n for n, _, _ in _RUNNERS]}")
+
+
+def _token_supported(cfg: ModelConfig) -> bool:
+    from repro.models.lm import transformer as tfm
+    return tfm.supports_slot_serving(cfg)
+
+
+register_runner("basecaller", lambda cfg: cfg.family == "basecaller",
+                BasecallerRunner)
+register_runner("encoder_prefix", lambda cfg: cfg.family == "audio",
+                EncoderPrefixRunner)
+register_runner("token", _token_supported, TokenRunner)

@@ -1,0 +1,146 @@
+"""Per-request sampling for the serving engine: ``SamplingParams`` +
+a vectorized on-device sampler.
+
+Design
+------
+``SamplingParams`` is the per-request generation contract (vLLM-style):
+stopping criteria (``max_new_tokens``, ``eos_id``) plus the sampler
+knobs (``temperature``/``top_k``/``top_p``/``seed``). ``temperature ==
+0`` is EXACT greedy argmax — bit-identical to the pre-SamplingParams
+engine, which is what the greedy-parity regression tests pin.
+
+A mixed greedy+sampled batch stays ONE jitted program: the per-slot
+params ride into the decode step as tiny ``(B,)`` rows
+(:func:`pack_rows`) and :func:`sample_tokens` computes both the argmax
+and the sampled token per row, selecting by each row's temperature.
+Rows are fully independent — a high-temperature neighbour cannot
+perturb a greedy row's tokens.
+
+Reproducibility: the sample noise for a request's ``step``-th output
+token is keyed by ``fold_in(fold_in(PRNGKey(seed), rid), step)`` — a
+pure function of ``(seed, rid, step)``, independent of slot placement,
+batch composition, engine restarts, and preemption/re-prefill resume
+(the resume re-samples step ``len(out_tokens)`` with the key it would
+have used anyway; greedy resume relies on determinism the same way).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG = -1e30
+
+# host-side row record: (params, rid, step) — step is the index of the
+# output token about to be sampled (== len(request.out_tokens))
+Row = Tuple["SamplingParams", int, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request generation parameters.
+
+    max_new_tokens : output budget; generation stops after this many.
+    eos_id : optional stop token (generation ends when it is emitted).
+    temperature : 0 = greedy argmax (the default — exact pre-redesign
+        behaviour); > 0 softens the distribution before sampling.
+    top_k : keep only the k highest-probability tokens (0 = off).
+    top_p : nucleus sampling — keep the smallest prefix of the sorted
+        distribution with cumulative probability >= top_p (1.0 = off).
+    seed : per-request RNG seed; (seed, rid, step) fully determines the
+        sample noise, so reruns reproduce token-for-token.
+    """
+
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+GREEDY = SamplingParams()
+
+
+def pack_rows(rows: Sequence[Optional[Row]]) -> Dict[str, np.ndarray]:
+    """Pack per-slot ``(SamplingParams, rid, step)`` records into the
+    ``(B,)`` device rows :func:`sample_tokens` consumes. ``None`` slots
+    (free/pad rows) pack as greedy — their logits are garbage the
+    scheduler ignores either way."""
+    n = len(rows)
+    out = {
+        "temperature": np.zeros((n,), np.float32),
+        "top_k": np.zeros((n,), np.int32),
+        "top_p": np.ones((n,), np.float32),
+        "seed": np.zeros((n,), np.int32),
+        "rid": np.zeros((n,), np.int32),
+        "step": np.zeros((n,), np.int32),
+    }
+    for i, row in enumerate(rows):
+        if row is None:
+            continue
+        p, rid, step = row
+        out["temperature"][i] = p.temperature
+        out["top_k"][i] = p.top_k
+        out["top_p"][i] = p.top_p
+        out["seed"][i] = p.seed
+        out["rid"][i] = rid
+        out["step"][i] = step
+    return out
+
+
+def any_sampled(rows: Sequence[Optional[Row]]) -> bool:
+    """True if any live row actually samples (temperature > 0) — lets
+    the runner keep the pure-greedy decode program free of the sort/
+    top-k/top-p work (and identical to the pre-redesign program)."""
+    return any(row is not None and row[0].temperature > 0 for row in rows)
+
+
+def sample_tokens(logits: jax.Array, sp: Dict[str, jax.Array]) -> jax.Array:
+    """Sample one token per row. logits: (B, V); sp: packed (B,) rows.
+
+    Greedy rows (temperature <= 0) return EXACT ``argmax(logits)``.
+    Sampled rows: temperature-scale, intersect the top-k and top-p
+    (nucleus) masks, then Gumbel-max with the row's (seed, rid, step)
+    key — equivalent to a categorical draw from the masked softmax.
+    Everything is per-row vectorized so a mixed batch is one program.
+    """
+    logits = logits.astype(jnp.float32)
+    B, V = logits.shape
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    temp = jnp.maximum(sp["temperature"], 1e-6)[:, None]
+    scaled = logits / temp
+    srt = -jnp.sort(-scaled, axis=-1)                    # descending
+    # top-k: keep logits >= the k-th largest (k = V when off)
+    k = jnp.clip(jnp.where(sp["top_k"] > 0, sp["top_k"], V), 1, V)
+    kth = jnp.take_along_axis(srt, (k - 1)[:, None], axis=-1)
+    keep = scaled >= kth
+    # top-p (nucleus): smallest sorted prefix with cumulative
+    # probability >= top_p — i.e. keep ranks whose EXCLUSIVE cumsum is
+    # still below the threshold (rank 0 always survives)
+    probs = jax.nn.softmax(srt, axis=-1)
+    exclusive = jnp.cumsum(probs, axis=-1) - probs
+    nkeep = jnp.sum(exclusive < jnp.minimum(sp["top_p"], 1.0)[:, None],
+                    axis=-1)
+    pth = jnp.take_along_axis(srt, (jnp.maximum(nkeep, 1) - 1)[:, None],
+                              axis=-1)
+    keep &= scaled >= pth
+    masked = jnp.where(keep, scaled, NEG)
+
+    def row_key(seed, rid, step):
+        key = jax.random.PRNGKey(seed)
+        return jax.random.fold_in(jax.random.fold_in(key, rid), step)
+
+    keys = jax.vmap(row_key)(sp["seed"], sp["rid"], sp["step"])
+    gumbel = jax.vmap(lambda key: jax.random.gumbel(key, (V,), jnp.float32)
+                      )(keys)
+    sampled = jnp.argmax(masked + gumbel, axis=-1).astype(jnp.int32)
+    return jnp.where(sp["temperature"] > 0, sampled, greedy)

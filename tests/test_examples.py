@@ -1,0 +1,44 @@
+"""Import-and-smoke-run gate for examples/ — they previously had no CI
+coverage at all, so API drift broke them silently (PR 4 satellite).
+
+Each example runs as a subprocess at reduced scale (CLI knobs added for
+exactly this) and must exit 0 with its closing marker on stdout.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _run_example(script: str, args) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    res = subprocess.run(
+        [sys.executable, str(ROOT / "examples" / script), *args],
+        capture_output=True, text=True, timeout=540, env=env,
+        cwd=str(ROOT))
+    assert res.returncode == 0, (
+        f"{script} exited {res.returncode}\n--- stdout ---\n{res.stdout}"
+        f"\n--- stderr ---\n{res.stderr}")
+    return res.stdout
+
+
+def test_quickstart_runs_end_to_end():
+    out = _run_example("quickstart.py", ["--search-steps", "2",
+                                         "--train-steps", "8",
+                                         "--serve-reads", "4"])
+    assert "QABAS search" in out
+    assert "BasecallerRunner" in out        # serves through the engine
+    assert out.strip().endswith("done.")
+
+
+def test_serve_quantized_lm_runs_end_to_end():
+    out = _run_example("serve_quantized_lm.py",
+                       ["--requests", "4", "--tokens", "6",
+                        "--prompt-len", "6"])
+    assert "engine bf16" in out and "engine int8" in out
+    assert "v5e projection" in out
+    assert out.strip().endswith("done.")

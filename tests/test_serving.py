@@ -237,10 +237,10 @@ def test_pad_rows_never_write_or_advance_state():
     assert int(nc["pos"][0, 0]) == 5
 
 
-@pytest.mark.parametrize("arch", ["internvl2-1b-smoke",    # vision prefix
-                                  "whisper-tiny-smoke"])   # audio enc-dec
-def test_engine_rejects_unsupported_arch(arch):
-    cfg = get_config(arch)
+# audio (whisper) and basecaller archs serve through their own runners
+# now — see tests/test_serving_runners.py; only vlm remains runnerless
+def test_engine_rejects_unsupported_arch():
+    cfg = get_config("internvl2-1b-smoke")                 # vision prefix
     params = api.init_params(jax.random.key(0), cfg)
     with pytest.raises(NotImplementedError):
         ServingEngine(params, cfg, n_slots=2, cache_len=16)
