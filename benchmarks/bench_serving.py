@@ -28,6 +28,11 @@ asserts sampled determinism across reruns plus greedy-row isolation;
 BasecallerRunner and asserts the incremental CTC merge equals the
 offline whole-read basecall, reporting reads/s and bases/s.
 
+Decode-attention backend section (PR 5): ``bench_paged_attention``
+drains the same workload through the fused Pallas paged-attention
+kernel and the XLA gather reference, asserts token parity, and records
+decode tok/s plus per-tick read-position accounting for both.
+
 Smoke mode (``run(emit)`` registry / CLI default) runs all four arch
 families' smoke configs on CPU (quant variants on qwen only);
 ``--arch``/``--slots``/... scale it up on real hardware.
@@ -434,6 +439,68 @@ def bench_basecaller(emit, arch: str = "bonito-smoke", slots: int = 2,
                              f"whole-read basecall")
 
 
+def bench_paged_attention(emit, arch: str = "qwen1.5-4b-smoke",
+                          slots: int = 2, oversub: int = 2,
+                          prompt_len: int = 8, max_tokens: int = 12,
+                          prefill_chunk: int = 4, block_len: int = 4,
+                          seed: int = 0) -> None:
+    """Decode-attention backend comparison: the fused Pallas
+    paged-attention kernel (reading straight from the block arena) vs
+    the XLA gather reference, through the full engine on the same
+    workload. Asserts fused-vs-reference TOKEN PARITY (greedy decode
+    must be identical) and records decode tok/s for both backends plus
+    the bytes-moved story: the reference materialises the (B,
+    T*block_len) logical KV view per layer per tick, the fused path
+    reads only assigned blocks. On CPU the fused kernel runs in Pallas
+    interpret mode — a correctness gate, not a speed contest (interpret
+    is orders of magnitude slower; the tok/s numbers are still emitted
+    so TPU runs of the same section read apples-to-apples)."""
+    cfg = get_config(arch)
+    cache_len = prompt_len + max_tokens
+    params = api.init_params(jax.random.key(0), cfg)
+    workload = make_workload(cfg, slots, oversub, prompt_len, max_tokens,
+                             seed)
+    outs, stats = {}, {}
+    for backend in ("xla", "pallas"):
+        engine = ServingEngine(params, cfg, n_slots=slots,
+                               cache_len=cache_len,
+                               prefill_chunk=prefill_chunk,
+                               cache_dtype=jnp.float32,
+                               block_len=block_len, attn_backend=backend)
+        run_engine(engine, workload)                   # warm/compile
+        dt, out = run_engine(engine, workload)
+        outs[backend] = out
+        m = engine.metrics.summary()
+        pool = engine.pool
+        # per-tick read accounting (positions, per layer group): the
+        # gather path always touches the full logical view; the fused
+        # path touches only blocks the live slots actually own
+        leff = {g: T * pool.block_len for g, T in pool.layout.items()}
+        gather_pos = sum(slots * L for L in leff.values())
+        fused_pos = sum(m["pool_util_mean"] * nb * pool.block_len
+                        for g, nb in pool.n_blocks.items())
+        stats[backend] = m
+        emit(f"serving_attn_{backend}",
+             engine.metrics.decode_time * 1e6
+             / max(engine.metrics.decode_tokens, 1),
+             f"decode={m['decode_tokens_per_s']:.1f}tok/s;"
+             f"wall={sum(len(t) for t in out.values())/max(dt, 1e-9):.1f}tok/s;"
+             f"read_positions_per_tick="
+             f"{fused_pos if backend == 'pallas' else gather_pos:.0f};"
+             f"backend={engine.runner.attn_backend}"
+             + (";interpret" if backend == "pallas" else ""))
+    parity = all(outs["pallas"][i] == outs["xla"][i]
+                 for i in range(len(workload)))
+    mx, mp = stats["xla"], stats["pallas"]
+    emit("serving_attn_backend_parity", 0.0,
+         f"parity={'ok' if parity else 'MISMATCH'};"
+         f"decode_xla={mx['decode_tokens_per_s']:.1f}tok/s;"
+         f"decode_pallas={mp['decode_tokens_per_s']:.1f}tok/s")
+    if not parity:
+        raise AssertionError(
+            "fused (pallas) vs reference (xla) decode token mismatch")
+
+
 # One smoke config per slot-servable cache family. Quant variants run on
 # qwen only — wbits isolates scheduling, not the arch's cache layout.
 FAMILY_ARCHS = ("qwen1.5-4b-smoke", "mamba2-130m-smoke",
@@ -446,6 +513,7 @@ def run(emit) -> None:
         wbits = (0, 8, 4) if arch.startswith("qwen") else (0,)
         bench(emit, arch=arch, wbits_list=wbits, tag_arch=True)
     bench_paged(emit)
+    bench_paged_attention(emit)
     bench_sampling(emit, slots=4, oversub=2, prompt_len=16, max_tokens=24,
                    prefill_chunk=8)
     bench_basecaller(emit, reads=8, read_bases=120)
@@ -454,14 +522,17 @@ def run(emit) -> None:
 def run_smoke(emit) -> None:
     """Fast CI gate: engine-vs-static token parity through the paged
     pool on the dense smoke arch, the paged-vs-contiguous admission
-    comparison, a mixed greedy+sampled decode section (determinism +
-    greedy isolation), and a basecaller-runner section (reads/s +
-    CTC-merge parity vs the offline whole-read basecall). Minutes, not
-    tens of minutes — the full four-family / quant sweep stays in the
-    slow job (``run``)."""
+    comparison, a fused-vs-reference decode-attention backend section
+    (token parity + decode tok/s for both backends, the Pallas kernel
+    in interpret mode on CPU), a mixed greedy+sampled decode section
+    (determinism + greedy isolation), and a basecaller-runner section
+    (reads/s + CTC-merge parity vs the offline whole-read basecall).
+    Minutes, not tens of minutes — the full four-family / quant sweep
+    stays in the slow job (``run``)."""
     bench(emit, arch="qwen1.5-4b-smoke", slots=2, oversub=2,
           prompt_len=8, max_tokens=12, prefill_chunk=4, wbits_list=(0,))
     bench_paged(emit, base_slots=2, cache_len=24, block_len=8)
+    bench_paged_attention(emit)
     bench_sampling(emit)
     bench_basecaller(emit)
 

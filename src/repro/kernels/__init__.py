@@ -1,3 +1,6 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas compute hot-spots + their dispatch layer (ops.py) and pure-jnp
+# oracles (ref.py): flash_attention (prefill), paged_attention (the
+# decode-attention backend — fused paged-arena reads vs the XLA gather
+# reference), qmatmul / qconv1d (RUBICALL quantized serving), ssd_scan
+# (Mamba-2). Interpret-mode defaults resolve at call time via
+# ops.interpret_default(), never at import.

@@ -19,7 +19,6 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-INTERPRET = jax.default_backend() == "cpu"
 NEG_INF = -1e30
 
 
@@ -77,7 +76,9 @@ def flash_attention_p(q: jax.Array, k: jax.Array, v: jax.Array, *,
     bq, bk = min(bq, Sq), min(bk, Sk)
     assert Sq % bq == 0 and Sk % bk == 0
     nq, nk = Sq // bq, Sk // bk
-    interpret = INTERPRET if interpret is None else interpret
+    if interpret is None:       # resolved at call time (ops.py owns this)
+        from repro.kernels.ops import interpret_default
+        interpret = interpret_default()
     kern = functools.partial(_flash_kernel, scale=d ** -0.5, causal=causal,
                              bq=bq, bk=bk, nk=nk)
     return pl.pallas_call(

@@ -1,28 +1,183 @@
 """Public jit'd wrappers around the Pallas kernels.
 
-``interpret`` defaults to True on CPU (this container) and False on TPU;
-the wrappers also own layout glue (GQA head folding, halo padding,
-PackedTensor unwrapping) so models call a clean API.
+The wrappers own layout glue (GQA head folding, halo padding,
+PackedTensor unwrapping) so models call a clean API, plus the
+decode-attention BACKEND DISPATCH (:func:`decode_gqa` /
+:func:`decode_mla`): ``xla`` is the masked-dense gather reference,
+``pallas`` the fused paged kernel reading straight from the block
+arena (falling back to the reference for multi-token chunk steps).
+
+``interpret`` defaults are resolved at CALL time by
+:func:`interpret_default` — NOT frozen at import, so a backend change
+after import (or a test forcing interpret mode via
+``REPRO_PALLAS_INTERPRET``) behaves correctly.
 """
 from __future__ import annotations
 
 import functools
+import os
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.quant.policy import PackedTensor
+from repro.kernels import paged_attention as pa
 from repro.kernels.flash_attention import flash_attention_p
 from repro.kernels.qconv1d import qconv1d_block_p
 from repro.kernels.qmatmul import qmatmul_p
 from repro.kernels.ssd_scan import ssd_scan_p
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def interpret_default() -> bool:
+    """Pallas interpret default, resolved when a kernel is CALLED (the
+    old per-module ``INTERPRET = jax.default_backend() == "cpu"``
+    constants froze the answer at import time, so flipping the backend
+    afterwards ran compiled kernels on CPU or interpret on TPU).
+    ``REPRO_PALLAS_INTERPRET=1|0`` force-overrides (tests)."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "")
+    if env:
+        return env not in ("0", "false", "no")
+    return jax.default_backend() == "cpu"
+
+
+ATTN_BACKENDS = ("auto", "xla", "pallas")
+
+
+def resolve_attn_backend(name: Optional[str] = None) -> str:
+    """Resolve a decode-attention backend choice to ``xla``/``pallas``.
+
+    ``auto`` (or None) picks the fused Pallas kernel on a SINGLE-chip
+    TPU and the XLA gather reference everywhere else: the fused path
+    is not shard_map'd yet, so on a multi-chip mesh only the reference
+    carries the GSPMD flash-decoding partitioning (sequence over
+    'model'); and interpret-mode Pallas is a correctness tool (CPU CI
+    exercises the kernel body with it), not a fast path. Forcing
+    ``pallas`` overrides both considerations.
+    """
+    name = name or "auto"
+    if name not in ATTN_BACKENDS:
+        raise ValueError(f"attn backend {name!r} not in {ATTN_BACKENDS}")
+    if name == "auto":
+        return ("pallas" if jax.default_backend() == "tpu"
+                and jax.device_count() == 1 else "xla")
+    return name
+
+
+# ---------------------------------------------------------------------------
+# Decode-attention backend dispatch
+
+
+def decode_gqa(q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array,
+               t: jax.Array, *, window: int = 0,
+               table: Optional[jax.Array] = None,
+               backend: Optional[str] = None,
+               interpret: Optional[bool] = None,
+               shard_kv: Optional[Callable] = None) -> jax.Array:
+    """Decode attention over slot-pool KV — the one read path both
+    attention layouts share.
+
+    q: (B, C, H, hd); pos: (B, L); t: (B, C) (< 0 = pad row).
+    ``table`` None: k/v are contiguous per-slot rows (B, L, Hkv, hd).
+    ``table`` (B, T): k/v are shared arenas (n_blocks, block_len, Hkv,
+    hd) and the table maps logical to arena blocks (-1 = unassigned).
+    Returns (B, C, H*hd).
+
+    ``backend`` ``xla``/None: the gather reference — materialises the
+    (B, T*block_len) logical view per call. ``pallas``: the fused
+    kernel for single-token steps (C == 1; the decode tick); C > 1
+    chunk steps fall back to the reference, which applies the identical
+    mask so emitted tokens do not depend on the backend. The contiguous
+    layout runs fused too, viewed as a B-block arena with an identity
+    table. ``shard_kv`` optionally constrains the gathered reads
+    (flash-decoding sharding annotation; reference path only).
+    """
+    B, C, H, hd = q.shape
+    if backend == "pallas" and C == 1:
+        if table is None:
+            Hkv = k.shape[2]
+            karena, varena = k, v          # (B, L, Hkv, hd) == B blocks of L
+            tbl = jnp.arange(B, dtype=jnp.int32)[:, None]
+        else:
+            Hkv = k.shape[2]
+            karena, varena, tbl = k, v, table
+        group = H // Hkv
+        qh = q.reshape(B, Hkv, group, hd)
+        o = pa.gqa_paged_p(qh, karena, varena, pos, t[:, 0], tbl,
+                           window=window, interpret=interpret)
+        return o.reshape(B, 1, H * hd)
+    if table is not None:
+        Hkv = k.shape[2]
+        bl = k.shape[1]
+        gidx = jnp.maximum(table, 0)
+        Leff = table.shape[1] * bl
+        k_read = k[gidx].reshape(B, Leff, Hkv, hd)
+        v_read = v[gidx].reshape(B, Leff, Hkv, hd)
+        if shard_kv is not None:
+            k_read = shard_kv(k_read)
+            v_read = shard_kv(v_read)
+    else:
+        k_read, v_read = k, v
+    return pa.gqa_reference(q, k_read, v_read, pos, t, window=window)
+
+
+def decode_mla(q_abs: jax.Array, q_rope: jax.Array, c: jax.Array,
+               k_rope: jax.Array, pos: jax.Array, t: jax.Array, *,
+               scale: float, table: Optional[jax.Array] = None,
+               backend: Optional[str] = None,
+               interpret: Optional[bool] = None,
+               shard_kv: Optional[Callable] = None,
+               shard_s: Optional[Callable] = None) -> jax.Array:
+    """Absorbed-form MLA decode over the latent cache (see
+    :func:`decode_gqa` for the backend/fallback contract).
+
+    q_abs: (B, C, H, kvr); q_rope: (B, C, H, rope_d); ``table`` None:
+    c/k_rope are (B, L, kvr|rope_d) rows, else latent arenas
+    (n_blocks, block_len, ...). Returns o_lat (B, C, H, kvr) fp32 —
+    the caller applies the absorbed value projection."""
+    B, C, H, kvr = q_abs.shape
+    if backend == "pallas" and C == 1:
+        if table is None:
+            carena, krarena = c, k_rope
+            tbl = jnp.arange(B, dtype=jnp.int32)[:, None]
+        else:
+            carena, krarena, tbl = c, k_rope, table
+        o = pa.mla_paged_p(q_abs[:, 0], q_rope[:, 0], carena, krarena,
+                           pos, t[:, 0], tbl, scale=scale,
+                           interpret=interpret)
+        return o[:, None]
+    if table is not None:
+        bl = c.shape[1]
+        gidx = jnp.maximum(table, 0)
+        Leff = table.shape[1] * bl
+        c_read = c[gidx].reshape(B, Leff, kvr)
+        kr_read = k_rope[gidx].reshape(B, Leff, k_rope.shape[-1])
+        if shard_kv is not None:
+            c_read = shard_kv(c_read)
+            kr_read = shard_kv(kr_read)
+    else:
+        c_read, kr_read = c, k_rope
+    return pa.mla_reference(q_abs, q_rope, c_read, kr_read, pos, t,
+                            scale=scale, shard_s=shard_s)
+
+
+# The public wrappers resolve ``interpret=None`` BEFORE the jit
+# boundary: a concrete bool is the static arg, so flipping the backend
+# or REPRO_PALLAS_INTERPRET after a first call retraces instead of
+# silently reusing the stale cached program (resolving inside the
+# traced body would freeze the first answer under the `None` cache key).
+
+
 def qmatmul(x: jax.Array, w, scale=None, *, bits: int = 8,
             interpret=None) -> jax.Array:
     """x: (..., K) @ quantized w -> (..., N). Accepts a PackedTensor or a
     raw (int8 data, scale) pair."""
+    interpret = interpret_default() if interpret is None else interpret
+    return _qmatmul_jit(x, w, scale, bits=bits, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def _qmatmul_jit(x, w, scale, *, bits, interpret):
     if isinstance(w, PackedTensor):
         bits, scale, w = w.bits, w.scale, w.data
     lead = x.shape[:-1]
@@ -32,9 +187,17 @@ def qmatmul(x: jax.Array, w, scale=None, *, bits: int = 8,
     return out.reshape(lead + (out.shape[-1],))
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "interpret"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, interpret=None) -> jax.Array:
+    """q: (B, Sq, H, d); k/v: (B, Sk, Hkv, d). See the jitted body."""
+    interpret = interpret_default() if interpret is None else interpret
+    return _flash_attention_jit(q, k, v, causal=causal,
+                                interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "interpret"))
+def _flash_attention_jit(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         causal: bool = True, interpret=None) -> jax.Array:
     """q: (B, Sq, H, d); k/v: (B, Sk, Hkv, d) — GQA folded into batch rows
     so each kernel row sees one (head, kv-head) pair without repeat."""
     B, Sq, H, d = q.shape
@@ -50,10 +213,16 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return o.reshape(B, H, Sq, d).transpose(0, 2, 1, 3)
 
 
-@functools.partial(jax.jit, static_argnames=("relu", "interpret"))
 def qconv1d_block(x: jax.Array, dw, pw, gamma, beta, *, relu: bool = True,
                   interpret=None) -> jax.Array:
     """x: (B, T, C); dw/pw: PackedTensor (int8). Fused RUBICALL block."""
+    interpret = interpret_default() if interpret is None else interpret
+    return _qconv1d_block_jit(x, dw, pw, gamma, beta, relu=relu,
+                              interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "interpret"))
+def _qconv1d_block_jit(x, dw, pw, gamma, beta, *, relu, interpret):
     k = dw.orig_shape[0]
     pad = (k - 1) // 2
     xp = jnp.pad(x, ((0, 0), (pad, k - 1 - pad), (0, 0)))
@@ -66,12 +235,18 @@ def qconv1d_block(x: jax.Array, dw, pw, gamma, beta, *, relu: bool = True,
         relu=relu, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssd_chunk_scan(x, dt, A, Bm, Cm, D, *, chunk: int = 256,
                    interpret=None):
     """x: (B, S, nh, hd); dt: (B, S, nh); A/D: (nh,); Bm/Cm: (B, S, N).
 
     Folds (batch, head) into kernel rows; B/C shared across heads."""
+    interpret = interpret_default() if interpret is None else interpret
+    return _ssd_chunk_scan_jit(x, dt, A, Bm, Cm, D, chunk=chunk,
+                               interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _ssd_chunk_scan_jit(x, dt, A, Bm, Cm, D, *, chunk, interpret):
     B, S, nh, hd = x.shape
     N = Bm.shape[-1]
     xr = x.transpose(0, 2, 1, 3).reshape(B * nh, S, hd)

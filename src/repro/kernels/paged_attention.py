@@ -1,0 +1,347 @@
+"""Decode-attention backends: fused paged-attention Pallas kernels + the
+XLA gather reference — one home for every paged-KV read path.
+
+The serving engine pages K/V into shared block arenas (``repro.serving.
+cache``): per layer group the cache holds ``(n_blocks, block_len, ...)``
+leaves and a host block table ``(n_slots, T)`` maps each slot's logical
+block to an arena block. Decode attention then has two ways to read:
+
+``xla`` (reference)
+    Gather each row's T blocks into a ``(B, T*block_len)`` logical view
+    and run masked-dense attention over it — today's path, kept
+    bit-identical as the parity oracle and the GSPMD/multi-chip default.
+    The gather MATERIALISES the logical view: ``B * T*block_len``
+    positions of K plus V copied per layer per decode tick, even when a
+    slot has only a handful of blocks assigned.
+
+``pallas`` (fused)
+    The kernels below compute attention DIRECTLY from the arena. The
+    block table rides in as a scalar-prefetch operand, so each grid
+    step's ``BlockSpec`` index_map resolves ``table[b, j]`` and DMAs
+    exactly one arena block into VMEM — unassigned (``-1``) blocks are
+    skipped via ``pl.when``, no ``(B, T*block_len)`` copy ever exists.
+    Online softmax runs over the blocks with validity (``pos``), ring-
+    window and stale-KV masking fused into the score tile. Bytes moved
+    per tick drop from ``O(B * T * block_len)`` to ``O(assigned
+    blocks * block_len)``.
+
+Both backends share the same masking contract (a position participates
+iff ``pos >= 0 and pos <= t`` and, for ring groups, ``pos > t -
+window``), so a recycled arena block is invisible to its new owner until
+written — exactly the stale-KV story of the XLA path.
+
+Backend selection is dispatched by ``repro.kernels.ops.decode_gqa`` /
+``decode_mla`` (layout glue + fallback rules); the model layers
+(``models/lm/attention.py`` / ``mla.py``) call those and never touch a
+gather themselves. The fused path covers the lockstep decode tick
+(``C == 1`` queries); multi-token chunk steps fall back to the
+reference (prefill reads the same masked math, so tokens are identical
+either way).
+
+Rows with no valid position (pad slots, ``t < 0``) produce garbage in
+both backends — the scheduler never reads them. On TPU, block_len and
+the head dims want the usual (8, 128) tiling multiples; interpret mode
+(CPU CI) runs any shape.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+# Sentinel for "no token cached in this slot" — also what pads per-row
+# position vectors for inactive serving slots (any negative works: the
+# validity mask is pos >= 0).
+EMPTY_POS = -(10 ** 9)
+
+
+def _interpret(interpret):
+    if interpret is None:
+        from repro.kernels.ops import interpret_default  # lazy: no cycle
+        return interpret_default()
+    return interpret
+
+
+# ---------------------------------------------------------------------------
+# Shared index math (paged scatter/gather)
+
+
+def paged_indices(table: jax.Array, t: jax.Array, n_blocks: int,
+                  block_len: int):
+    """Block-indirect scatter/gather indices shared by the paged
+    attention and MLA decode paths.
+
+    table: (B, T) int32 arena-block table (-1 = unassigned); t: (B, C)
+    positions (< 0 = pad). Returns ``(wblk, off, lw, gidx, Leff)``:
+    arena block + in-block offset for the KV scatter ((B, C), pushed out
+    of bounds — dropped — for pad tokens and unassigned blocks), the pos
+    scatter index ``lw`` (kept in LOCKSTEP with the KV write: if the
+    mapped block is unassigned the pos write drops too, or a valid pos
+    entry would admit another block's garbage through the clamped
+    gather), the clamped (B, T) arena gather indices, and the padded
+    ring length ``Leff = T * block_len``.
+    """
+    B, T = table.shape
+    Leff = T * block_len
+    bidx = jnp.arange(B)[:, None]
+    l = jnp.where(t >= 0, t % Leff, Leff)         # Leff is OOB -> drop
+    blk = table[bidx, jnp.minimum(l // block_len, T - 1)]
+    wblk = jnp.where((t >= 0) & (blk >= 0), blk, n_blocks)
+    lw = jnp.where(wblk < n_blocks, l, Leff)
+    return wblk, l % block_len, lw, jnp.maximum(table, 0), Leff
+
+
+def valid_mask(pos: jax.Array, t: jax.Array, window: int = 0) -> jax.Array:
+    """(B, C, L) participation mask: cached position ``pos`` is visible
+    to query position ``t`` iff it is written (>= 0), causal (<= t) and,
+    for ring-buffer groups, inside the sliding window."""
+    valid = (pos >= 0)[:, None, :] & (pos[:, None, :] <= t[:, :, None])
+    if window > 0:
+        valid &= pos[:, None, :] > (t[:, :, None] - window)
+    return valid
+
+
+# ---------------------------------------------------------------------------
+# XLA reference backend (the pre-fusion gather path, verbatim)
+
+
+def gqa_reference(q: jax.Array, k_read: jax.Array, v_read: jax.Array,
+                  pos: jax.Array, t: jax.Array, *, window: int = 0
+                  ) -> jax.Array:
+    """Masked-dense GQA decode over a logical (B, L, Hkv, hd) KV view.
+
+    q: (B, C, H, hd); pos: (B, L); t: (B, C). Returns (B, C, H*hd).
+    f8 caches compute in bf16 (converts fuse on TPU); otherwise the
+    storage dtype, fp32 accumulation — one pass over the view per step.
+    """
+    B, C, H, hd = q.shape
+    Hkv = k_read.shape[2]
+    group = H // Hkv
+    cdt = jnp.bfloat16 if jnp.dtype(k_read.dtype).itemsize == 1 \
+        else k_read.dtype
+    qg = q.reshape(B, C, Hkv, group, hd).astype(cdt)
+    s = jnp.einsum("bckgd,blkd->bckgl", qg, k_read.astype(cdt),
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    valid = valid_mask(pos, t, window)
+    s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bckgl,blkd->bckgd", prob.astype(cdt),
+                   v_read.astype(cdt),
+                   preferred_element_type=jnp.float32).astype(q.dtype)
+    return o.reshape(B, C, H * hd)
+
+
+def mla_reference(q_abs: jax.Array, q_rope: jax.Array, c_read: jax.Array,
+                  kr_read: jax.Array, pos: jax.Array, t: jax.Array, *,
+                  scale: float, shard_s=None) -> jax.Array:
+    """Absorbed-form MLA decode over a logical latent view.
+
+    q_abs: (B, C, H, kvr); q_rope: (B, C, H, rope_d); c_read: (B, L,
+    kvr); kr_read: (B, L, rope_d); pos: (B, L); t: (B, C). Returns
+    o_lat (B, C, H, kvr), fp32 — the caller applies the absorbed value
+    projection. ``shard_s`` is an optional constraint hook on the score
+    tensor (the flash-decoding 'model'-axis annotation)."""
+    s = jnp.einsum("bchr,blr->bchl", q_abs, c_read,
+                   preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bchp,blp->bchl", q_rope.astype(kr_read.dtype),
+                       kr_read, preferred_element_type=jnp.float32)
+    if shard_s is not None:
+        s = shard_s(s)
+    s = s * scale
+    valid = valid_mask(pos, t)
+    s = jnp.where(valid[:, :, None, :], s, NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bchl,blr->bchr", prob.astype(c_read.dtype), c_read,
+                      preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Fused Pallas backend — GQA
+
+
+def _gqa_kernel(tbl_ref, t_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
+                m_ref, l_ref, acc_ref, *, scale: float, window: int,
+                nT: int):
+    b, j = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # unassigned (-1) logical blocks contribute nothing: skip the whole
+    # tile (their pos words are EMPTY_POS anyway — writes drop in
+    # lockstep — but skipping also skips the DMA'd garbage compute)
+    @pl.when(tbl_ref[b, j] >= 0)
+    def _body():
+        # mirror the reference's compute dtypes (gqa_reference): QK/PV
+        # inputs in the cache dtype (bf16 for f8 storage), fp32 scores/
+        # stats/accumulation — keeps fused-vs-reference numerics matched
+        # for bf16 caches, not just the fp32 parity-suite configs
+        cdt = jnp.bfloat16 if jnp.dtype(k_ref.dtype).itemsize == 1 \
+            else k_ref.dtype
+        q = q_ref[0, 0].astype(cdt)                    # (group, hd)
+        k = k_ref[0, :, 0].astype(cdt)                 # (bl, hd)
+        v = v_ref[0, :, 0].astype(cdt)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        pos = pos_ref[0]                               # (bl,) int32
+        tq = t_ref[b]
+        valid = (pos >= 0) & (pos <= tq)
+        if window > 0:
+            valid &= pos > tq - window
+        s = jnp.where(valid[None, :], s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p.astype(cdt), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nT - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def gqa_paged_p(q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array,
+                t: jax.Array, table: jax.Array, *, window: int = 0,
+                interpret: bool | None = None) -> jax.Array:
+    """Fused paged GQA decode. q: (B, Hkv, group, hd); k/v: arenas
+    (n_blocks, block_len, Hkv, hd); pos: (B, T*block_len); t: (B,);
+    table: (B, T). Returns (B, Hkv, group, hd) in q's dtype.
+
+    Grid (B, Hkv, T), block axis innermost: the table is a scalar-
+    prefetch operand, so each step's index_map DMAs arena block
+    ``table[b, j]`` straight into VMEM — the logical (B, T*block_len)
+    view is never materialised. Rows with no valid position produce
+    garbage (the scheduler ignores them)."""
+    B, Hkv, group, hd = q.shape
+    bl = k.shape[1]
+    T = table.shape[1]
+    kern = functools.partial(_gqa_kernel, scale=hd ** -0.5, window=window,
+                             nT=T)
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                      # table, t
+        grid=(B, Hkv, T),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, hd), lambda b, h, j, tbl, t: (b, h, 0, 0)),
+            pl.BlockSpec((1, bl, 1, hd),
+                         lambda b, h, j, tbl, t: (jnp.maximum(tbl[b, j], 0),
+                                                  0, h, 0)),
+            pl.BlockSpec((1, bl, 1, hd),
+                         lambda b, h, j, tbl, t: (jnp.maximum(tbl[b, j], 0),
+                                                  0, h, 0)),
+            pl.BlockSpec((1, bl), lambda b, h, j, tbl, t: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, hd),
+                               lambda b, h, j, tbl, t: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern, grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, group, hd), q.dtype),
+        interpret=_interpret(interpret),
+    )(table.astype(jnp.int32), t.astype(jnp.int32), q, k, v, pos)
+
+
+# ---------------------------------------------------------------------------
+# Fused Pallas backend — MLA (absorbed latent form)
+
+
+def _mla_kernel(tbl_ref, t_ref, qa_ref, qr_ref, c_ref, kr_ref, pos_ref,
+                o_ref, m_ref, l_ref, acc_ref, *, scale: float, nT: int):
+    b, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(tbl_ref[b, j] >= 0)
+    def _body():
+        # compute dtypes mirror mla_reference: latent/rope dots take the
+        # cache dtype with fp32 accumulation; softmax stats fp32
+        cdt = c_ref.dtype
+        qa = qa_ref[0].astype(cdt)                     # (H, kvr)
+        qr = qr_ref[0].astype(kr_ref.dtype)            # (H, rope_d)
+        c = c_ref[0]                                   # (bl, kvr)
+        kr = kr_ref[0]                                 # (bl, rope_d)
+        s = jax.lax.dot_general(qa, c, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s + jax.lax.dot_general(qr, kr, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+        s = s * scale
+        pos = pos_ref[0]
+        valid = (pos >= 0) & (pos <= t_ref[b])
+        s = jnp.where(valid[None, :], s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p.astype(cdt), c, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nT - 1)
+    def _done():
+        o_ref[0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+def mla_paged_p(q_abs: jax.Array, q_rope: jax.Array, c: jax.Array,
+                kr: jax.Array, pos: jax.Array, t: jax.Array,
+                table: jax.Array, *, scale: float,
+                interpret: bool | None = None) -> jax.Array:
+    """Fused paged absorbed-MLA decode. q_abs: (B, H, kvr); q_rope:
+    (B, H, rope_d); c/kr: latent arenas (n_blocks, block_len, kvr|
+    rope_d); pos: (B, T*block_len); t: (B,); table: (B, T). Returns
+    o_lat (B, H, kvr) fp32 — probability-weighted latent rows; the
+    caller applies the absorbed value projection."""
+    B, H, kvr = q_abs.shape
+    rope_d = q_rope.shape[-1]
+    bl = c.shape[1]
+    T = table.shape[1]
+    kern = functools.partial(_mla_kernel, scale=scale, nT=T)
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, T),
+        in_specs=[
+            pl.BlockSpec((1, H, kvr), lambda b, j, tbl, t: (b, 0, 0)),
+            pl.BlockSpec((1, H, rope_d), lambda b, j, tbl, t: (b, 0, 0)),
+            pl.BlockSpec((1, bl, kvr),
+                         lambda b, j, tbl, t: (jnp.maximum(tbl[b, j], 0),
+                                               0, 0)),
+            pl.BlockSpec((1, bl, rope_d),
+                         lambda b, j, tbl, t: (jnp.maximum(tbl[b, j], 0),
+                                               0, 0)),
+            pl.BlockSpec((1, bl), lambda b, j, tbl, t: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, H, kvr), lambda b, j, tbl, t: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, kvr), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern, grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, kvr), jnp.float32),
+        interpret=_interpret(interpret),
+    )(table.astype(jnp.int32), t.astype(jnp.int32), q_abs, q_rope, c, kr,
+      pos)

@@ -18,9 +18,6 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-INTERPRET = jax.default_backend() == "cpu"
-
-
 def _qconv_kernel(x_ref, dw_ref, pw_ref, dws_ref, pws_ref, g_ref, b_ref,
                   o_ref, *, k: int, relu: bool):
     xp = x_ref[0].astype(jnp.float32)                # (T + k - 1, C)
@@ -49,7 +46,9 @@ def qconv1d_block_p(x: jax.Array, dw_q: jax.Array, pw_q: jax.Array,
     B, Tp, C = x.shape
     k = dw_q.shape[0]
     T = Tp - (k - 1)
-    interpret = INTERPRET if interpret is None else interpret
+    if interpret is None:       # resolved at call time (ops.py owns this)
+        from repro.kernels.ops import interpret_default
+        interpret = interpret_default()
     kern = functools.partial(_qconv_kernel, k=k, relu=relu)
     return pl.pallas_call(
         kern,

@@ -20,9 +20,6 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-INTERPRET = jax.default_backend() == "cpu"
-
-
 def _qmm_kernel(x_ref, wq_ref, scale_ref, o_ref, acc_ref, *, nsteps: int):
     @pl.when(pl.program_id(2) == 0)
     def _init():
@@ -67,7 +64,9 @@ def qmatmul_p(x: jax.Array, w_q: jax.Array, scale: jax.Array, *,
     bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
     assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
     nsteps = K // bk
-    interpret = INTERPRET if interpret is None else interpret
+    if interpret is None:       # resolved at call time (ops.py owns this)
+        from repro.kernels.ops import interpret_default
+        interpret = interpret_default()
 
     if bits == 8:
         kern = functools.partial(_qmm_kernel, nsteps=nsteps)

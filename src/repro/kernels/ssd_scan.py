@@ -16,9 +16,6 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-INTERPRET = jax.default_backend() == "cpu"
-
-
 def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, o_ref, h_ref, *,
                 nchunks: int):
     @pl.when(pl.program_id(1) == 0)
@@ -72,7 +69,9 @@ def ssd_scan_p(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
     Q = min(chunk, S)
     assert S % Q == 0
     T = S // Q
-    interpret = INTERPRET if interpret is None else interpret
+    if interpret is None:       # resolved at call time (ops.py owns this)
+        from repro.kernels.ops import interpret_default
+        interpret = interpret_default()
     kern = functools.partial(_ssd_kernel, nchunks=T)
     return pl.pallas_call(
         kern,

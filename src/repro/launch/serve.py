@@ -42,7 +42,11 @@ group — leave it 0 for full backing, or set it below
 ``slots * ceil(cache_len/block_len)`` to oversubscribe decode slots
 against KV bytes (short requests only pay for blocks they touch; the
 engine preempts the youngest request if the pool runs dry). The run
-summary reports pool utilization and preemptions. ``--history-limit``
+summary reports pool utilization and preemptions. ``--attn-backend``
+picks the decode-attention read path over that pool: ``pallas`` fuses
+decode ticks directly against the block arena (no per-layer logical-view
+gather), ``xla`` is the reference, ``auto`` resolves per hardware; the
+resolved backend is reported in the run summary. ``--history-limit``
 bounds host-side per-request bookkeeping so the process can serve
 indefinitely at flat memory.
 
@@ -137,8 +141,20 @@ def build_request_stream(cfg, args, seed: int = 0):
     return reqs
 
 
+def resolved_backend_label(engine) -> str:
+    """Human-readable resolved decode-attention backend for the run
+    summary, e.g. ``pallas (interpret)`` on a CPU forced-pallas run."""
+    from repro.kernels.ops import interpret_default
+    backend = getattr(engine.runner, "attn_backend", None)
+    if backend is None:
+        return "n/a (no KV decode path)"      # basecaller runner
+    if backend == "pallas" and interpret_default():
+        return "pallas (interpret)"
+    return backend
+
+
 def run_engine(params, cfg, args) -> None:
-    runner_kw = {}
+    runner_kw = {"attn_backend": args.attn_backend}
     if cfg.family == "basecaller":
         runner_kw = dict(chunk_samples=args.chunk_samples, beam=args.beam)
     engine = api.make_serving_engine(
@@ -173,6 +189,9 @@ def run_engine(params, cfg, args) -> None:
               f"({pool.nbytes()/2**20:.1f} MiB cache)"
               + (f", history_limit {args.history_limit}"
                  if args.history_limit else ""))
+        print(f"[serve] attn backend: {resolved_backend_label(engine)} "
+              f"(requested {args.attn_backend!r}; decode ticks "
+              f"{'read the arena fused' if engine.runner.attn_backend == 'pallas' else 'gather the logical view'})")
     t0 = time.perf_counter()
     i = 0
     while i < len(pending) or engine.busy:
@@ -202,7 +221,8 @@ def run_engine(params, cfg, args) -> None:
     if not basecall:
         print(f"[serve] pool util mean {s['pool_util_mean']:.2f} "
               f"max {s['pool_util_max']:.2f} | "
-              f"preemptions {s['preemptions']:.0f}")
+              f"preemptions {s['preemptions']:.0f} | "
+              f"attn backend {resolved_backend_label(engine)}")
     done = engine.drain_completed()
     if done:
         sample = done[min(done)].out_tokens[:16]
@@ -303,6 +323,17 @@ def main():
                     help="bound host-side per-request history to the "
                          "most recent N (0 = unbounded) so long serves "
                          "run at flat memory")
+    ap.add_argument("--attn-backend", default="auto",
+                    choices=["auto", "xla", "pallas"],
+                    help="decode-attention read path: 'pallas' fuses "
+                         "decode ticks over the paged KV arena (block "
+                         "table scalar-prefetched, no logical-view "
+                         "gather), 'xla' is the gather reference; "
+                         "'auto' = pallas on a single-chip TPU, xla "
+                         "everywhere else (the fused path is not "
+                         "shard_map'd; forcing pallas on CPU runs the "
+                         "kernel in interpret mode). The resolved "
+                         "backend is reported in the run summary")
     ap.add_argument("--wbits", type=int, default=0, choices=[0, 4, 8])
     args = ap.parse_args()
     if not args.cache_len:

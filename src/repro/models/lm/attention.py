@@ -24,11 +24,16 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.config import ModelConfig
+# decode-attention backend interface: the paged/contiguous KV read paths
+# (XLA gather reference + fused Pallas kernel) live in repro.kernels —
+# EMPTY_POS/NEG_INF/paged_indices are re-exported here for callers that
+# predate the refactor (repro.models.lm.mla, serving/cache, tests).
+from repro.kernels.ops import decode_gqa
+from repro.kernels.paged_attention import (EMPTY_POS, NEG_INF,  # noqa: F401
+                                           paged_indices)
 from repro.models.lm.common import (BATCH_AXES, Params, constrain, dense,
                                     make_dense_params)
 from repro.models.lm.rope import apply_rope
-
-NEG_INF = -1e30
 
 
 def _score_dtype():
@@ -328,12 +333,6 @@ def fill_cache_from_prefill(cache: Dict, kv: Dict, t0: int = 0) -> Dict:
     return {"k": k, "v": v, "pos": parr, "window": cache["window"]}
 
 
-# Sentinel for "no token cached in this slot" — also what pads per-row
-# position vectors for inactive serving slots (any negative works: the
-# validity mask is pos >= 0).
-EMPTY_POS = -(10 ** 9)
-
-
 def init_attn_cache_slots(cfg: ModelConfig, batch: int, cache_len: int,
                           *, window: int = 0, dtype=jnp.bfloat16) -> Dict:
     """Slot-pool cache: like :func:`init_attn_cache` but positions are
@@ -385,34 +384,10 @@ def attn_cache_slot_axes() -> Dict:
     return {"k": False, "v": False, "pos": True, "window": False}
 
 
-def paged_indices(table: jax.Array, t: jax.Array, n_blocks: int,
-                  block_len: int):
-    """Block-indirect scatter/gather indices shared by the paged
-    attention and MLA decode paths.
-
-    table: (B, T) int32 arena-block table (-1 = unassigned); t: (B, C)
-    positions (< 0 = pad). Returns ``(wblk, off, lw, gidx, Leff)``:
-    arena block + in-block offset for the KV scatter ((B, C), pushed out
-    of bounds — dropped — for pad tokens and unassigned blocks), the pos
-    scatter index ``lw`` (kept in LOCKSTEP with the KV write: if the
-    mapped block is unassigned the pos write drops too, or a valid pos
-    entry would admit another block's garbage through the clamped
-    gather), the clamped (B, T) arena gather indices, and the padded
-    ring length ``Leff = T * block_len``.
-    """
-    B, T = table.shape
-    Leff = T * block_len
-    bidx = jnp.arange(B)[:, None]
-    l = jnp.where(t >= 0, t % Leff, Leff)         # Leff is OOB -> drop
-    blk = table[bidx, jnp.minimum(l // block_len, T - 1)]
-    wblk = jnp.where((t >= 0) & (blk >= 0), blk, n_blocks)
-    lw = jnp.where(wblk < n_blocks, l, Leff)
-    return wblk, l % block_len, lw, jnp.maximum(table, 0), Leff
-
-
 def attn_decode_slots(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
                       cfg: ModelConfig, *, window: int = 0,
-                      table: Optional[jax.Array] = None
+                      table: Optional[jax.Array] = None,
+                      attn_backend: Optional[str] = None
                       ) -> Tuple[jax.Array, Dict]:
     """Slot-batched decode: every batch row advances at its OWN position.
 
@@ -430,15 +405,19 @@ def attn_decode_slots(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
     ``table: (B, T)`` int32 maps each row's logical block to an arena
     block (-1 = unassigned). Token position t lands in arena block
     ``table[b, (t % (T*block_len)) // block_len]`` at offset
-    ``t % block_len``; reads gather each row's T blocks back into a
-    ``(B, T*block_len)`` logical view. Unassigned entries gather arena
-    block 0, but ``pos`` is per slot, so those logical positions still
-    carry the empty sentinel and mask out — which is also why a recycled
-    arena block cannot leak its previous owner's KV.
+    ``t % block_len``; the reference backend gathers each row's T
+    blocks back into a ``(B, T*block_len)`` logical view (the fused
+    backend reads arena blocks in place). Unassigned entries gather
+    arena block 0, but ``pos`` is per slot, so those logical positions
+    still carry the empty sentinel and mask out — which is also why a
+    recycled arena block cannot leak its previous owner's KV.
+
+    ``attn_backend`` selects the decode-attention read path
+    (``repro.kernels.ops.decode_gqa``): None/"xla" is the gather
+    reference; "pallas" computes single-token steps directly from the
+    arena (no logical-view materialisation).
     """
     B, C, _ = x.shape
-    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
-    group = H // Hkv
     q, k_new, v_new = _project_qkv(p, x, jnp.maximum(t, 0), cfg)
 
     bidx = jnp.arange(B)[:, None]
@@ -455,32 +434,21 @@ def attn_decode_slots(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
         seq_spec = P(BATCH_AXES, "model", None, None)
         k = constrain(k, seq_spec)
         v = constrain(v, seq_spec)
-        k_read, v_read = k, v
+        o = decode_gqa(q, k, v, pos, t, window=window,
+                       backend=attn_backend)
     else:
         Nb, bl = cache["k"].shape[0], cache["k"].shape[1]
-        wblk, off, lw, gidx, Leff = paged_indices(table, t, Nb, bl)
+        wblk, off, lw, _, _ = paged_indices(table, t, Nb, bl)
         k = cache["k"].at[wblk, off].set(k_new.astype(cache["k"].dtype),
                                          mode="drop")
         v = cache["v"].at[wblk, off].set(v_new.astype(cache["v"].dtype),
                                          mode="drop")
         pos = cache["pos"].at[bidx, lw].set(t, mode="drop")
-        k_read = k[gidx].reshape(B, Leff, Hkv, hd)
-        v_read = v[gidx].reshape(B, Leff, Hkv, hd)
-        k_read = constrain(k_read, P(BATCH_AXES, "model", None, None))
-        v_read = constrain(v_read, P(BATCH_AXES, "model", None, None))
-
-    cdt = jnp.bfloat16 if jnp.dtype(k.dtype).itemsize == 1 else k.dtype
-    qg = q.reshape(B, C, Hkv, group, hd).astype(cdt)
-    s = jnp.einsum("bckgd,blkd->bckgl", qg, k_read.astype(cdt),
-                   preferred_element_type=jnp.float32) * (hd ** -0.5)
-    valid = (pos >= 0)[:, None, :] & (pos[:, None, :] <= t[:, :, None])
-    if window > 0:
-        valid &= pos[:, None, :] > (t[:, :, None] - window)
-    s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
-    prob = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bckgl,blkd->bckgd", prob.astype(cdt), v_read.astype(cdt),
-                   preferred_element_type=jnp.float32).astype(x.dtype)
-    o = o.reshape(B, C, H * hd)
+        o = decode_gqa(
+            q, k, v, pos, t, window=window, table=table,
+            backend=attn_backend,
+            shard_kv=lambda a: constrain(
+                a, P(BATCH_AXES, "model", None, None)))
     out = dense(p["wo"], o, cfg=cfg, tag="attn/wo")
     return out, {"k": k, "v": v, "pos": pos, "window": cache["window"]}
 

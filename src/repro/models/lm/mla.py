@@ -15,8 +15,9 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.config import ModelConfig
-from repro.models.lm.attention import (EMPTY_POS, NEG_INF, blockwise_attn,
-                                       paged_indices)
+from repro.kernels.ops import decode_mla
+from repro.kernels.paged_attention import EMPTY_POS, paged_indices
+from repro.models.lm.attention import blockwise_attn
 from repro.models.lm.common import (BATCH_AXES, Params, constrain, dense,
                                     make_dense_params, make_rmsnorm_params,
                                     rmsnorm)
@@ -160,8 +161,8 @@ def mla_decode(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
 
 
 def mla_decode_slots(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
-                     cfg: ModelConfig, table: "jax.Array" = None
-                     ) -> Tuple[jax.Array, Dict]:
+                     cfg: ModelConfig, table: "jax.Array" = None,
+                     attn_backend: str = None) -> Tuple[jax.Array, Dict]:
     """Slot-batched absorbed-form decode: every row at its OWN position.
 
     x: (B, C, d); t: (B, C) int32 per-token positions, ``t < 0`` marking
@@ -178,6 +179,12 @@ def mla_decode_slots(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
     reads gather the row's blocks into a ``(B, T*block_len)`` logical
     view and ``pos`` (still per slot) masks stale / unassigned entries
     (see ``attention.attn_decode_slots``).
+
+    ``attn_backend`` selects the latent read path
+    (``repro.kernels.ops.decode_mla``): None/"xla" is the gather
+    reference; "pallas" computes single-token steps directly from the
+    arena (absorbed-gather read through the table — no logical-view
+    materialisation).
     """
     B, C, _ = x.shape
     H, qr, kvr, nope, rope_d, vd = _dims(cfg)
@@ -188,6 +195,7 @@ def mla_decode_slots(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
     bidx = jnp.arange(B)[:, None]
     c_new = constrain(c_new, P(BATCH_AXES, None, None))
     kr_new = constrain(kr_new, P(BATCH_AXES, None, None))
+    shard_kv = None
     if table is None:
         L = cache["c"].shape[1]
         slot = jnp.where(t >= 0, t % L, L)    # L is OOB -> mode="drop"
@@ -198,19 +206,15 @@ def mla_decode_slots(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
         pos = cache["pos"].at[bidx, slot].set(t, mode="drop")
         c = constrain(c, P(BATCH_AXES, "model", None))
         k_rope = constrain(k_rope, P(BATCH_AXES, "model", None))
-        c_read, kr_read = c, k_rope
     else:
         Nb, bl = cache["c"].shape[0], cache["c"].shape[1]
-        wblk, off, lw, gidx, Leff = paged_indices(table, t, Nb, bl)
+        wblk, off, lw, _, _ = paged_indices(table, t, Nb, bl)
         c = cache["c"].at[wblk, off].set(c_new.astype(cache["c"].dtype),
                                          mode="drop")
         k_rope = cache["k_rope"].at[wblk, off].set(
             kr_new.astype(cache["k_rope"].dtype), mode="drop")
         pos = cache["pos"].at[bidx, lw].set(t, mode="drop")
-        c_read = constrain(c[gidx].reshape(B, Leff, kvr),
-                           P(BATCH_AXES, "model", None))
-        kr_read = constrain(k_rope[gidx].reshape(B, Leff, rope_d),
-                            P(BATCH_AXES, "model", None))
+        shard_kv = lambda a: constrain(a, P(BATCH_AXES, "model", None))
 
     # weight absorption: score in latent space. q replicated over 'model',
     # latent cache sequence-sharded (flash-decoding pattern).
@@ -220,18 +224,11 @@ def mla_decode_slots(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
     w_uv = wukv[..., nope:]                               # (kvr, H, vd)
     qf = constrain(q_nope, P(BATCH_AXES, None, None, None)).astype(c.dtype)
     q_abs = jnp.einsum("bchn,rhn->bchr", qf, w_uk.astype(c.dtype))
-    # latent cache read once in storage dtype, fp32 accumulation
-    s = jnp.einsum("bchr,blr->bchl", q_abs, c_read,
-                   preferred_element_type=jnp.float32)
-    s = s + jnp.einsum("bchp,blp->bchl", q_rope.astype(kr_read.dtype),
-                       kr_read, preferred_element_type=jnp.float32)
-    s = constrain(s, P(BATCH_AXES, None, None, "model"))
-    s = s * ((nope + rope_d) ** -0.5)
-    valid = (pos >= 0)[:, None, :] & (pos[:, None, :] <= t[:, :, None])
-    s = jnp.where(valid[:, :, None, :], s, NEG_INF)
-    prob = jax.nn.softmax(s, axis=-1)
-    o_lat = jnp.einsum("bchl,blr->bchr", prob.astype(c.dtype), c_read,
-                       preferred_element_type=jnp.float32)
+    o_lat = decode_mla(
+        q_abs, q_rope, c, k_rope, pos, t,
+        scale=(nope + rope_d) ** -0.5, table=table, backend=attn_backend,
+        shard_kv=shard_kv,
+        shard_s=lambda s: constrain(s, P(BATCH_AXES, None, None, "model")))
     o = jnp.einsum("bchr,rhv->bchv", o_lat.astype(c.dtype),
                    w_uv.astype(c.dtype))
     o = o.reshape(B, C, H * vd).astype(x.dtype)

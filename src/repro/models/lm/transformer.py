@@ -149,12 +149,29 @@ def block_forward(p: Params, x: jax.Array, positions: jax.Array,
     return x, aux, kv
 
 
-def _cross_attn(p, x, enc_kv, cfg):
-    """Cross-attention against precomputed encoder K/V (whisper decode)."""
+def _cross_attn(p, x, enc_kv, cfg, attn_backend=None):
+    """Cross-attention against precomputed encoder K/V (whisper decode).
+
+    ``attn_backend == "pallas"`` routes single-token decode steps
+    through the fused decode-attention kernel (the encoder buffer is a
+    degenerate contiguous "arena": every position valid, no window);
+    prefill/training and the default XLA path keep the dense einsum.
+    """
     B, S, _ = x.shape
     H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     dt = x.dtype
     q = dense(p["wq"], x, cfg=cfg, tag="xattn/wq").reshape(B, S, H, hd)
+    if attn_backend == "pallas" and S == 1:
+        from repro.kernels.ops import decode_gqa
+        Se = enc_kv["k"].shape[1]
+        pos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (B, Se))
+        t = jnp.full((B, S), Se, jnp.int32)    # non-causal: all visible
+        # fp32 K/V to match the dense-einsum branch below (which
+        # upcasts), so tokens agree across backends for bf16 buffers too
+        o = decode_gqa(q, enc_kv["k"].astype(jnp.float32),
+                       enc_kv["v"].astype(jnp.float32), pos, t,
+                       backend=attn_backend).astype(dt)
+        return dense(p["wo"], o, cfg=cfg, tag="xattn/wo")
     k = jnp.repeat(enc_kv["k"], H // Hkv, axis=2)      # (B, Se, H, hd)
     v = jnp.repeat(enc_kv["v"], H // Hkv, axis=2)
     s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
@@ -238,7 +255,8 @@ def supports_slot_serving(cfg: ModelConfig) -> bool:
 def block_decode_slots(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
                        cfg: ModelConfig, kind: str,
                        table: Optional[jax.Array] = None,
-                       enc_kv: Optional[Dict] = None
+                       enc_kv: Optional[Dict] = None,
+                       attn_backend: Optional[str] = None
                        ) -> Tuple[jax.Array, Dict]:
     """Per-slot-position variant of :func:`block_decode`. t: (B, C).
 
@@ -246,7 +264,9 @@ def block_decode_slots(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
     this layer group's KV arena; SSM state is per-slot either way.
     ``enc_kv`` (xdec only): per-slot encoder K/V ``(B, Se, Hkv, hd)``
     leaves — cross-attention state, written once per request at
-    admission, never by the decode step itself."""
+    admission, never by the decode step itself.
+    ``attn_backend`` (None/"xla"/"pallas"): the decode-attention read
+    path for self- and cross-attention (``repro.kernels.ops``)."""
     if kind not in SLOT_KINDS:
         raise NotImplementedError(
             f"slot-batched decode not implemented for block kind {kind!r}")
@@ -254,25 +274,29 @@ def block_decode_slots(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
     h = rmsnorm(p["ln1"], x, cfg.norm_eps)
     if kind in ("mla_dense", "mla_moe"):
         mix, nc = mla_mod.mla_decode_slots(p["attn"], h, cache, t, cfg,
-                                           table=table)
+                                           table=table,
+                                           attn_backend=attn_backend)
     elif kind == "ssm":
         mix, nc = ssm_mod.ssm_decode_slots(p["ssm"], h, cache, t, cfg)
         return constrain(x + mix, DECODE_RESID), nc
     elif kind.startswith("hybrid"):
         w = _block_window(cfg, kind)
         ya, nkv = attn_mod.attn_decode_slots(p["attn"], h, cache["kv"], t,
-                                             cfg, window=w, table=table)
+                                             cfg, window=w, table=table,
+                                             attn_backend=attn_backend)
         ys, nst = ssm_mod.ssm_decode_slots(p["ssm"], h, cache["ssm"], t, cfg)
         mix, nc = 0.5 * (ya + ys), {"kv": nkv, "ssm": nst}
     else:
         mix, nc = attn_mod.attn_decode_slots(p["attn"], h, cache, t, cfg,
-                                             table=table)
+                                             table=table,
+                                             attn_backend=attn_backend)
     x = constrain(x + mix, DECODE_RESID)
     if kind == "xdec" and enc_kv is not None:
         # pad rows (t < 0) produce garbage the scheduler ignores; cross-
         # attention writes no state so they cannot corrupt anything
         hx = rmsnorm(p["ln_x"], x, cfg.norm_eps)
-        x = constrain(x + _cross_attn(p["xattn"], hx, enc_kv, cfg),
+        x = constrain(x + _cross_attn(p["xattn"], hx, enc_kv, cfg,
+                                      attn_backend=attn_backend),
                       DECODE_RESID)
     h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
     if kind in ("moe", "mla_moe"):
@@ -600,7 +624,8 @@ def decode_step_slots(params: Params, caches: Dict, tokens: jax.Array,
                       t: jax.Array, cfg: ModelConfig,
                       logits_at: Optional[jax.Array] = None,
                       tables: Optional[Dict[str, jax.Array]] = None,
-                      enc_kv: Optional[Dict[str, Dict]] = None
+                      enc_kv: Optional[Dict[str, Dict]] = None,
+                      attn_backend: Optional[str] = None
                       ) -> Tuple[jax.Array, Dict]:
     """Slot-batched decode/chunk step for the continuous-batching engine.
 
@@ -622,6 +647,11 @@ def decode_step_slots(params: Params, caches: Dict, tokens: jax.Array,
     ``enc_kv`` (audio serving): {xdec group name: per-layer-stacked
     cross-attention K/V ``(n_layers, B, Se, Hkv, hd)``} — the per-slot
     encoder buffers the EncoderPrefixRunner stages at admission.
+
+    ``attn_backend`` (static: None/"xla"/"pallas"): which decode-
+    attention read path every attention/MLA layer uses — "pallas" fuses
+    single-token steps over the paged arena, "xla"/None is the gather
+    reference (see ``repro.kernels.paged_attention``).
     """
     x = embed_tokens(params, jnp.maximum(tokens, 0), cfg)
     new_caches: Dict[str, Any] = {}
@@ -637,7 +667,8 @@ def decode_step_slots(params: Params, caches: Dict, tokens: jax.Array,
             else:
                 (pl, cl), ekv = xs, None
             xo, nc = block_decode_slots(pl, xc, cl, t, cfg, kind,
-                                        table=table, enc_kv=ekv)
+                                        table=table, enc_kv=ekv,
+                                        attn_backend=attn_backend)
             return xo, nc
 
         xs_in = ((pstack, cstack, ekv_stack) if ekv_stack is not None

@@ -63,6 +63,42 @@ can never attend back in. SSM recurrent state is O(1) per row and stays
 slot-indexed. ``block_len=cache_len, n_blocks=n_slots`` recovers the
 contiguous layout exactly (the benchmark baseline).
 
+Decode-attention backends (fused arena reads)
+---------------------------------------------
+
+How the jitted programs READ that pool is a backend choice, dispatched
+by ``repro.kernels.ops.decode_gqa`` / ``decode_mla`` and threaded
+``CachePool(attn_backend=…)`` -> ``TokenRunner`` ->
+``transformer.decode_step_slots`` (the pool resolves ``auto``/``xla``/
+``pallas`` once and is the single source of truth):
+
+``xla``      the gather reference: each layer gathers its slots' blocks
+             into a ``(B, T*block_len)`` logical view and runs
+             masked-dense attention — the parity oracle and the
+             multi-chip (GSPMD flash-decoding) default.
+``pallas``   the fused kernel (``repro.kernels.paged_attention``):
+             the block table is a scalar-prefetch operand, each grid
+             step DMAs exactly one arena block, and online softmax
+             fuses validity/ring-window/stale-KV masking — the logical
+             view is never materialised. ``auto`` = pallas on a
+             single-chip TPU, xla everywhere else (the fused path is
+             not shard_map'd yet, so multi-chip meshes keep the GSPMD
+             reference; forcing pallas on CPU runs interpret mode,
+             which CI uses to exercise the kernel body).
+
+WHICH PATHS FUSE: single-token decode ticks (``C == 1``) for GQA self-
+attention (dense/moe/hybrid incl. sliding-window rings), absorbed-MLA
+latent reads, and the audio runner's cross-attention. Multi-token
+chunk-prefill steps always run the reference (literally the same
+program under either backend). Fused decode ticks share the reference's
+masking contract and compute dtypes; greedy token parity across the
+paged configs (incl. recycle/preemption and bf16 caches) is enforced by
+tests/test_paged_attention.py and the bench_serving ``--smoke`` backend
+section — the only residual difference is online- vs plain-softmax
+rounding. A new arch opts in by expressing its decode read through
+``decode_gqa`` / ``decode_mla`` instead of gathering KV itself;
+anything else simply keeps the reference path.
+
 Admission policy: ``submit`` rejects only what can never run (runner
 ``validate``: ``prompt + max_new - 1 > cache_len`` — the final token is
 never written — more blocks than the arena holds, or a malformed
@@ -110,6 +146,21 @@ work (mapped to a default-greedy SamplingParams + DeprecationWarning),
 and ``req.max_new_tokens`` / ``req.eos_id`` remain readable. New payload
 kwargs: ``frames=`` (audio encoder input) and ``signal=`` (squiggle) —
 exactly one of ``prompt``/``signal`` per request.
+
+Migration note (PR 5, decode-attention backends)
+------------------------------------------------
+
+Direct callers of ``attn_decode_slots`` / ``mla_decode_slots`` are
+unaffected by default (the new ``attn_backend=None`` keyword means the
+XLA reference, bit-identical to before), but the paged READ plumbing
+moved: ``paged_indices``/``EMPTY_POS``/``NEG_INF`` now live in
+``repro.kernels.paged_attention`` (re-exported from
+``models.lm.attention`` for compatibility), and code that previously
+copied the gather-and-mask pattern should call
+``repro.kernels.ops.decode_gqa`` / ``decode_mla`` so it picks up fused
+backends for free. Pallas kernels no longer pin interpret mode at
+import — ``repro.kernels.ops.interpret_default()`` resolves it per
+call (``REPRO_PALLAS_INTERPRET=1|0`` overrides).
 """
 from repro.serving.cache import CachePool
 from repro.serving.engine import Request, ServingEngine

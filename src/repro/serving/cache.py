@@ -54,7 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig
-from repro.models.lm.attention import EMPTY_POS
+from repro.kernels.paged_attention import EMPTY_POS
 from repro.models.lm import transformer as tfm
 
 DEFAULT_BLOCK_LEN = 16
@@ -135,12 +135,21 @@ class CachePool:
         ``n_slots * T_g`` (every slot fully backed — more can never be
         used). 0/None = full backing, i.e. the contiguous pool's
         capacity at block granularity.
+    attn_backend : decode-attention read path over this pool —
+        ``auto``/``xla``/``pallas``, resolved once here
+        (``repro.kernels.ops.resolve_attn_backend``) so the pool is the
+        single source of truth the runner's jitted programs trace
+        against. ``pallas`` computes decode ticks directly from the
+        arena (the block table becomes a scalar-prefetch operand);
+        ``xla`` is the gather reference.
     """
 
     def __init__(self, cfg: ModelConfig, n_slots: int, cache_len: int,
                  cache_dtype=jnp.bfloat16, block_len: int = 0,
-                 n_blocks: int = 0):
+                 n_blocks: int = 0, attn_backend: str = "auto"):
+        from repro.kernels.ops import resolve_attn_backend
         self.cfg = cfg
+        self.attn_backend = resolve_attn_backend(attn_backend)
         self.n_slots = int(n_slots)
         self.cache_len = int(cache_len)
         self.block_len = int(block_len) or min(DEFAULT_BLOCK_LEN, cache_len)

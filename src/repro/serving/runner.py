@@ -117,13 +117,22 @@ class TokenRunner(ModelRunner):
     regression gate), and the sampling one adds the per-row top-k/top-p/
     Gumbel work. A tick uses the sampling program only when a live row
     actually samples; greedy rows inside it still take exact argmax.
+
+    ``attn_backend`` (``auto``/``xla``/``pallas``) picks the decode-
+    attention read path (``repro.kernels.ops``): ``pallas`` computes
+    decode ticks directly from the paged block arena (fused kernel, no
+    per-layer logical-view gather), ``xla`` keeps the gather reference;
+    ``auto`` resolves to pallas on TPU. Chunked-prefill steps always
+    run the reference (multi-token), which applies the identical
+    masking — emitted tokens do not depend on the backend.
     """
 
     autoregressive = True
 
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int,
                  cache_len: int, prefill_chunk: int, cache_dtype,
-                 block_len: int = 0, n_blocks: int = 0, _check: bool = True,
+                 block_len: int = 0, n_blocks: int = 0,
+                 attn_backend: str = "auto", _check: bool = True,
                  **_):
         from repro.models.lm import transformer as tfm
         if _check and not tfm.supports_slot_serving(cfg):
@@ -140,7 +149,9 @@ class TokenRunner(ModelRunner):
         self.cache_len = int(cache_len)
         self.chunk_tokens = int(prefill_chunk)
         self.pool = CachePool(cfg, n_slots, cache_len, cache_dtype,
-                              block_len=block_len, n_blocks=n_blocks)
+                              block_len=block_len, n_blocks=n_blocks,
+                              attn_backend=attn_backend)
+        self.attn_backend = self.pool.attn_backend       # resolved
         self.enc_kv: Optional[Dict[str, Dict]] = None    # audio subclass
         self._build_programs()
 
@@ -157,15 +168,19 @@ class TokenRunner(ModelRunner):
         # tables and sampling rows arrive as tiny (non-donated) int32/
         # f32 pytrees each call; ``ekv`` is None for token-only archs
         # and the per-slot encoder K/V buffers for the audio runner.
+        backend = self.attn_backend
+
         def decode_greedy(p, pool, tok, t, tables, ekv):
             logits, npool = tfm.decode_step_slots(p, pool, tok, t, cfg,
-                                                  tables=tables, enc_kv=ekv)
+                                                  tables=tables, enc_kv=ekv,
+                                                  attn_backend=backend)
             return jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32), \
                 npool
 
         def decode_sampled(p, pool, tok, t, tables, sp, ekv):
             logits, npool = tfm.decode_step_slots(p, pool, tok, t, cfg,
-                                                  tables=tables, enc_kv=ekv)
+                                                  tables=tables, enc_kv=ekv,
+                                                  attn_backend=backend)
             return sample_tokens(logits[:, 0, :], sp), npool
 
         def chunk_row(pool, tok, t, slot, fresh, last, tables, ekv, p):
@@ -178,10 +193,14 @@ class TokenRunner(ModelRunner):
             ekv_row = None if ekv is None else jax.tree.map(
                 lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1),
                 ekv)
+            # chunk steps are multi-token: the backend dispatch falls
+            # back to the gather reference for C > 1 (same masking, same
+            # tokens) and fuses only when prefill_chunk == 1
             logits, nrow = tfm.decode_step_slots(p, row, tok, t, cfg,
                                                  logits_at=last,
                                                  tables=tables,
-                                                 enc_kv=ekv_row)
+                                                 enc_kv=ekv_row,
+                                                 attn_backend=backend)
             return logits, CachePool.scatter_row(pool, nrow, slot, slot_axes)
 
         def chunk_greedy(p, pool, tok, t, slot, fresh, last, tables, ekv):

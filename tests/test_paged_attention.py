@@ -1,0 +1,378 @@
+"""Decode-attention backend subsystem (repro.kernels.paged_attention +
+the dispatch in repro.kernels.ops).
+
+Gates:
+- ``paged_indices`` sweep: block_len x n_blocks x window including ring
+  wrap-around, unassigned (-1) blocks, recycled-block stale-KV masking
+  via the pos/KV write lockstep, and the exact-fit
+  ``prompt + max_new - 1 == cache_len`` boundary.
+- fused-vs-reference numeric parity for the GQA and MLA kernels across
+  paged configs (small blocks, block_len == cache_len, sliding-window
+  ring, GQA grouping, pad rows, poisoned recycled blocks).
+- the fused path contains NO logical-view gather (jaxpr inspection) —
+  the ``(B, T*block_len)`` per-layer materialisation the kernel exists
+  to remove; the reference path must still contain it (oracle check).
+- end-to-end engine token parity, xla vs pallas(interpret), per cache
+  family — dense/GQA, MLA, hybrid ring, audio cross-attn — including
+  block recycling and preemption/resume.
+- runtime interpret resolution (the import-time INTERPRET pin fix).
+
+On CPU the fused kernel runs in Pallas interpret mode, so the kernel
+body itself is exercised by every tier-1 run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_config
+from repro.kernels import ops
+from repro.kernels.paged_attention import (EMPTY_POS, paged_indices,
+                                           valid_mask)
+from repro.models import api
+from repro.serving import Request, ServingEngine
+from repro.serving.sampling import SamplingParams
+
+
+# ------------------------------------------------------------ paged_indices
+
+
+@pytest.mark.parametrize("block_len,n_blocks,T", [(4, 7, 3), (8, 4, 2),
+                                                  (16, 2, 1), (2, 9, 5)])
+@pytest.mark.parametrize("window", [0, 6])
+def test_paged_indices_sweep(block_len, n_blocks, T, window):
+    """Index math vs a literal numpy re-derivation, over positions that
+    cover in-block, block-crossing, ring wrap-around (t >= Leff — what a
+    sliding-window group does), pad (-1) and the exact last position."""
+    rs = np.random.RandomState(block_len * 31 + T)
+    B = 4
+    Leff = T * block_len
+    table = rs.randint(-1, n_blocks, size=(B, T)).astype(np.int32)
+    table[0] = -1                                 # fully unassigned row
+    # positions: pad, 0, boundary, mid, exact fit (Leff-1), ring wrap
+    t = np.array([[-1], [0], [block_len], [Leff - 1]], np.int32)
+    t_wrap = np.array([[Leff], [Leff + block_len - 1], [3 * Leff + 1],
+                       [2 * Leff - 1]], np.int32)
+    for tt in (t, t_wrap):
+        wblk, off, lw, gidx, leff = paged_indices(
+            jnp.asarray(table), jnp.asarray(tt), n_blocks, block_len)
+        assert leff == Leff
+        wblk, off, lw, gidx = map(np.asarray, (wblk, off, lw, gidx))
+        for b in range(B):
+            for c in range(tt.shape[1]):
+                tv = int(tt[b, c])
+                if tv < 0:                        # pad: all writes drop
+                    assert wblk[b, c] == n_blocks
+                    assert lw[b, c] == Leff
+                    continue
+                l = tv % Leff                     # ring wrap
+                blk = table[b, l // block_len]
+                if blk < 0:                       # unassigned: KV *and*
+                    assert wblk[b, c] == n_blocks  # pos writes drop in
+                    assert lw[b, c] == Leff        # lockstep
+                else:
+                    assert wblk[b, c] == blk
+                    assert off[b, c] == l % block_len
+                    assert lw[b, c] == l
+        np.testing.assert_array_equal(gidx, np.maximum(table, 0))
+    # the window never changes the indices — it's a read-side mask only
+    pos = np.arange(Leff, dtype=np.int32)[None].repeat(B, 0)
+    vm = np.asarray(valid_mask(jnp.asarray(pos), jnp.asarray(t), window))
+    for b in range(B):
+        tv = int(t[b, 0])
+        want = (pos[b] >= 0) & (pos[b] <= tv)
+        if window > 0:
+            want &= pos[b] > tv - window
+        np.testing.assert_array_equal(vm[b, 0], want)
+
+
+def test_paged_indices_recycled_block_lockstep():
+    """A recycled arena block (present in the table, but the slot has
+    not written it yet) is masked purely by the pos row: the gather
+    index DOES address it, so the pos/KV lockstep is the only guard —
+    unassigned entries must drop both writes."""
+    table = jnp.asarray([[3, -1]], jnp.int32)
+    t = jnp.asarray([[5]], jnp.int32)             # lands in block 1: hole
+    wblk, off, lw, gidx, Leff = paged_indices(table, t, 6, 4)
+    assert int(wblk[0, 0]) == 6 and int(lw[0, 0]) == Leff   # both drop
+    assert int(gidx[0, 1]) == 0                   # clamped gather: block 0
+    # ... which is why a pos row left valid here would leak block 0's KV
+
+
+# ------------------------------------------------- kernel numeric parity
+
+
+def _mk_paged(rs, B, Hkv, hd, bl, T, n_blocks, poison=99.0):
+    """Random arena with poisoned bytes everywhere (every block is
+    'recycled'), a random table and per-row fill levels."""
+    Leff = T * bl
+    k = np.full((n_blocks, bl, Hkv, hd), poison, np.float32)
+    v = np.full((n_blocks, bl, Hkv, hd), poison, np.float32)
+    table = np.full((B, T), -1, np.int32)
+    pos = np.full((B, Leff), EMPTY_POS, np.int32)
+    free = list(range(n_blocks))
+    fills = [Leff - 1, Leff // 2, 1] + [rs.randint(1, Leff)
+                                        for _ in range(B - 3)]
+    t = np.zeros((B, 1), np.int32)
+    for b in range(B):
+        n = fills[b % len(fills)]
+        t[b, 0] = n                   # decoding position n; n pos written
+        for j in range(-(-(n + 1) // bl)):
+            if j * bl <= n:           # blocks covering [0, n]
+                table[b, j] = free.pop(rs.randint(len(free)))
+        for p in range(n):            # position n itself not yet written
+            blk, off = table[b, p // bl], p % bl
+            k[blk, off] = rs.randn(Hkv, hd)
+            v[blk, off] = rs.randn(Hkv, hd)
+            pos[b, p] = p
+    return (jnp.asarray(k), jnp.asarray(v), jnp.asarray(pos),
+            jnp.asarray(t), jnp.asarray(table))
+
+
+@pytest.mark.parametrize("group,window,bl,T",
+                         [(1, 0, 4, 4), (2, 0, 4, 4), (4, 0, 16, 1),
+                          (2, 7, 4, 4), (2, 0, 2, 8), (2, 5, 16, 1)])
+def test_gqa_fused_matches_reference(group, window, bl, T):
+    """Fused kernel == gather reference over dense/GQA/sliding-window
+    configs, small blocks and block_len == cache_len (T == 1, the
+    contiguous-degenerate layout), on a poisoned arena (every unwritten
+    byte is a stale-KV trap)."""
+    rs = np.random.RandomState(group * 100 + window * 10 + bl)
+    B, Hkv, hd = 4, 2, 16
+    H = Hkv * group
+    n_blocks = B * T + 2
+    k, v, pos, t, table = _mk_paged(rs, B, Hkv, hd, bl, T, n_blocks)
+    q = jnp.asarray(rs.randn(B, 1, H, hd), jnp.float32)
+    ref = ops.decode_gqa(q, k, v, pos, t, window=window, table=table,
+                         backend="xla")
+    fused = ops.decode_gqa(q, k, v, pos, t, window=window, table=table,
+                           backend="pallas")
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_gqa_fused_pad_rows_and_holes():
+    """Pad rows (t < 0) and unassigned mid-table holes: live rows match
+    the reference; pad rows are garbage in BOTH backends and simply must
+    not poison the live ones (finite output)."""
+    rs = np.random.RandomState(7)
+    B, Hkv, hd, bl, T = 4, 2, 16, 4, 3
+    k, v, pos, t, table = _mk_paged(rs, B, Hkv, hd, bl, T, B * T + 2)
+    t = t.at[1, 0].set(-1)                        # row 1 becomes a pad row
+    table = table.at[2, T - 1].set(-1)            # row 2: trailing hole
+    q = jnp.asarray(rs.randn(B, 1, Hkv * 2, hd), jnp.float32)
+    ref = ops.decode_gqa(q, k, v, pos, t, table=table, backend="xla")
+    fused = ops.decode_gqa(q, k, v, pos, t, table=table, backend="pallas")
+    live = [0, 2, 3]
+    np.testing.assert_allclose(np.asarray(fused)[live],
+                               np.asarray(ref)[live], rtol=1e-5, atol=1e-5)
+    assert np.isfinite(np.asarray(fused)).all()
+
+
+def test_gqa_fused_contiguous_layout():
+    """table=None (contiguous slot rows) runs fused as a B-block arena
+    with an identity table."""
+    rs = np.random.RandomState(11)
+    B, L, Hkv, hd = 3, 12, 2, 16
+    k = jnp.asarray(rs.randn(B, L, Hkv, hd), jnp.float32)
+    v = jnp.asarray(rs.randn(B, L, Hkv, hd), jnp.float32)
+    pos = np.full((B, L), EMPTY_POS, np.int32)
+    for b, n in enumerate((11, 5, 1)):
+        pos[b, :n] = np.arange(n)
+    t = jnp.asarray([[11], [5], [1]], jnp.int32)
+    q = jnp.asarray(rs.randn(B, 1, 4, hd), jnp.float32)
+    ref = ops.decode_gqa(q, k, v, jnp.asarray(pos), t, backend="xla")
+    fused = ops.decode_gqa(q, k, v, jnp.asarray(pos), t, backend="pallas")
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_gqa_fused_bf16_cache_dtype_alignment():
+    """bf16 caches (the serving default dtype off-CPU): the fused
+    kernel computes QK/PV in the cache dtype like the reference, so the
+    two backends agree to bf16 rounding — not just on the fp32
+    parity-suite configs."""
+    rs = np.random.RandomState(21)
+    B, Hkv, hd, bl, T = 4, 2, 16, 4, 3
+    k, v, pos, t, table = _mk_paged(rs, B, Hkv, hd, bl, T, B * T + 2)
+    k, v = k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+    q = jnp.asarray(rs.randn(B, 1, 4, hd), jnp.float32)
+    ref = ops.decode_gqa(q, k, v, pos, t, table=table, backend="xla")
+    fused = ops.decode_gqa(q, k, v, pos, t, table=table, backend="pallas")
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(ref),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("bl,T", [(4, 4), (16, 1)])
+def test_mla_fused_matches_reference(bl, T):
+    """Absorbed-MLA fused kernel == gather reference (latent + rope
+    score halves, probability-weighted latent accumulation)."""
+    rs = np.random.RandomState(bl + T)
+    B, H, kvr, rope_d = 4, 4, 16, 8
+    n_blocks = B * T + 2
+    c, kr, pos, t, table = _mk_paged(rs, B, 1, kvr, bl, T, n_blocks)
+    c, kr = c[:, :, 0], jnp.asarray(
+        np.asarray(kr)[:, :, 0, :rope_d].copy())
+    qa = jnp.asarray(rs.randn(B, 1, H, kvr), jnp.float32)
+    qr = jnp.asarray(rs.randn(B, 1, H, rope_d), jnp.float32)
+    ref = ops.decode_mla(qa, qr, c, kr, pos, t, scale=0.17, table=table,
+                         backend="xla")
+    fused = ops.decode_mla(qa, qr, c, kr, pos, t, scale=0.17, table=table,
+                           backend="pallas")
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_chunk_steps_fall_back_to_reference():
+    """C > 1 (chunked prefill) always takes the reference path — the
+    fused kernel is a decode-tick (C == 1) specialisation."""
+    rs = np.random.RandomState(3)
+    B, Hkv, hd, bl, T = 1, 2, 16, 4, 3
+    k, v, pos, t, table = _mk_paged(rs, 3, Hkv, hd, bl, T, 3 * T + 2)
+    k, v = k, v
+    q = jnp.asarray(rs.randn(B, 4, 4, hd), jnp.float32)
+    tc = jnp.asarray([[2, 3, 4, 5]], jnp.int32)
+    a = ops.decode_gqa(q, k, v, pos[:1], tc, table=table[:1], backend="xla")
+    b = ops.decode_gqa(q, k, v, pos[:1], tc, table=table[:1],
+                       backend="pallas")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------- no logical-view materialisation
+
+
+def _gathers(jaxpr, found):
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "gather":
+            found.extend(v.aval.size for v in eqn.outvars)
+        for val in eqn.params.values():
+            for j in (val if isinstance(val, (list, tuple)) else [val]):
+                if hasattr(j, "jaxpr"):
+                    _gathers(j.jaxpr, found)
+                elif hasattr(j, "eqns"):
+                    _gathers(j, found)
+    return found
+
+
+@pytest.mark.parametrize("backend,expect_gather", [("xla", True),
+                                                   ("pallas", False)])
+def test_fused_path_has_no_logical_gather(backend, expect_gather):
+    """The acceptance gate: the fused decode step contains NO gather as
+    large as the (B, T*block_len) logical KV view (the reference must —
+    that is exactly the copy being eliminated)."""
+    from repro.models.lm import attention as A
+    cfg = get_config("qwen1.5-4b-smoke")
+    p = A.make_attn_params(jax.random.key(0), cfg)
+    B, bl, T, Nb = 2, 4, 4, 10
+    Hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    cache = A.init_attn_cache_paged(cfg, B, bl * T, Nb, bl,
+                                    dtype=jnp.float32)
+    x = jnp.zeros((B, 1, cfg.d_model), jnp.float32)
+    t = jnp.asarray([[3], [5]], jnp.int32)
+    table = jnp.zeros((B, T), jnp.int32)
+    jaxpr = jax.make_jaxpr(
+        lambda *a: A.attn_decode_slots(*a, cfg, table=table,
+                                       attn_backend=backend)
+    )(p, x, cache, t)
+    view_size = B * T * bl * Hkv * hd             # the logical view
+    big = [s for s in _gathers(jaxpr.jaxpr, []) if s >= view_size]
+    assert bool(big) == expect_gather, (backend, big)
+
+
+# --------------------------------------------------- engine token parity
+
+
+def _drain(arch, backend, spec, seed=0, **kw):
+    cfg = get_config(arch)
+    params = api.init_params(jax.random.key(0), cfg)
+    rs = np.random.RandomState(seed)
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("cache_len", 32)
+    kw.setdefault("prefill_chunk", 4)
+    kw.setdefault("block_len", 4)
+    eng = ServingEngine(params, cfg, cache_dtype=jnp.float32,
+                        attn_backend=backend, **kw)
+    assert eng.runner.attn_backend == backend     # resolved + threaded
+    for i, (pl, mn) in enumerate(spec):
+        frames = (rs.randn(cfg.frontend_tokens, cfg.d_model)
+                  .astype(np.float32) if cfg.family == "audio" else None)
+        eng.submit(Request(
+            rid=i, prompt=rs.randint(1, cfg.vocab_size, size=pl).tolist(),
+            sampling=SamplingParams(max_new_tokens=mn), frames=frames))
+    done = eng.run()
+    return {i: done[i].out_tokens for i in done}, eng
+
+
+def test_engine_backend_parity_dense_gqa():
+    """qwen (GQA) through the paged pool: greedy tokens are identical
+    between the fused and reference backends, across block crossings."""
+    spec = [(6, 10), (10, 7), (3, 5)]
+    ref, _ = _drain("qwen1.5-4b-smoke", "xla", spec)
+    fused, eng = _drain("qwen1.5-4b-smoke", "pallas", spec)
+    assert fused == ref
+    assert eng.pool.attn_backend == "pallas"
+
+
+def test_engine_backend_parity_recycle_and_preempt():
+    """Tight arena: blocks recycle across requests and the youngest
+    request is preempted and resumed — fused tokens still match the
+    reference exactly (stale-KV masking and re-prefill both fused)."""
+    spec = [(6, 8), (6, 8), (5, 4)]
+    ref, re = _drain("qwen1.5-4b-smoke", "xla", spec, cache_len=16,
+                     n_blocks=5)
+    fused, fe = _drain("qwen1.5-4b-smoke", "pallas", spec, cache_len=16,
+                       n_blocks=5)
+    assert fused == ref
+    assert fe.pool.alloc_count > 5                # blocks really recycled
+    assert fe.metrics.preempts == re.metrics.preempts
+
+
+@pytest.mark.parametrize("arch", ["deepseek-v3-671b-smoke",
+                                  "hymba-1.5b-smoke",
+                                  "whisper-tiny-smoke"])
+def test_engine_backend_parity_families(arch):
+    """MLA (absorbed latent decode), hybrid sliding-window ring, and
+    audio enc-dec (fused self- AND cross-attention) — token parity
+    through the full engine. hymba's SWA groups ring at min(window,
+    cache_len), so this also covers ring wrap through the table."""
+    spec = [(6, 8), (10, 5)]
+    ref, _ = _drain(arch, "xla", spec, cache_len=48)
+    fused, _ = _drain(arch, "pallas", spec, cache_len=48)
+    assert fused == ref
+
+
+# ------------------------------------------------- runtime interpret pin
+
+
+def test_interpret_resolved_at_call_time(monkeypatch):
+    """The import-time INTERPRET pin is gone: interpret defaults are a
+    function of the CURRENT backend/env, and REPRO_PALLAS_INTERPRET
+    force-overrides for tests."""
+    import repro.kernels.flash_attention as fa
+    import repro.kernels.qmatmul as qm
+    import repro.kernels.ssd_scan as ss
+    import repro.kernels.qconv1d as qc
+    for mod in (fa, qm, ss, qc):
+        assert not hasattr(mod, "INTERPRET"), mod.__name__
+    assert ops.interpret_default() is True        # CPU container
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    assert ops.interpret_default() is False
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    assert ops.interpret_default() is True
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET")
+    assert ops.resolve_attn_backend(None) == "xla"      # auto on CPU
+    assert ops.resolve_attn_backend("pallas") == "pallas"
+    with pytest.raises(ValueError):
+        ops.resolve_attn_backend("triton")
+    # the public kernel wrappers must resolve interpret OUTSIDE the jit
+    # boundary (plain functions dispatching to _*_jit) — resolving
+    # inside a jitted body freezes the first answer under the `None`
+    # static-arg cache key, resurrecting the import-pin bug at trace
+    # time
+    jitted = type(jax.jit(lambda: 0))
+    for fn in (ops.qmatmul, ops.flash_attention, ops.qconv1d_block,
+               ops.ssd_chunk_scan):
+        assert not isinstance(fn, jitted), fn.__name__
+    for fn in (ops._qmatmul_jit, ops._flash_attention_jit,
+               ops._qconv1d_block_jit, ops._ssd_chunk_scan_jit):
+        assert isinstance(fn, jitted)
