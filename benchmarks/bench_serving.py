@@ -33,6 +33,11 @@ drains the same workload through the fused Pallas paged-attention
 kernel and the XLA gather reference, asserts token parity, and records
 decode tok/s plus per-tick read-position accounting for both.
 
+Mixed-traffic section (PR 6): ``bench_mixed_ticks`` replays bursty
+Poisson arrivals through the unified co-batched scheduler and the
+legacy split-tick one, asserts token parity between the modes, and
+reports TTFT p50/p99 + decode-interval jitter p50/p99 for both.
+
 Smoke mode (``run(emit)`` registry / CLI default) runs all four arch
 families' smoke configs on CPU (quant variants on qwen only);
 ``--arch``/``--slots``/... scale it up on real hardware.
@@ -501,6 +506,97 @@ def bench_paged_attention(emit, arch: str = "qwen1.5-4b-smoke",
             "fused (pallas) vs reference (xla) decode token mismatch")
 
 
+def bench_mixed_ticks(emit, arch: str = "qwen1.5-4b-smoke", slots: int = 4,
+                      prompt_len: int = 24, max_tokens: int = 20,
+                      prefill_chunk: int = 4, max_prefill_tokens: int = 8,
+                      mean_gap: float = 2.0, seed: int = 0) -> None:
+    """Mixed-traffic scheduling (PR 6): the unified co-batched tick vs
+    the legacy split-tick schedule on IDENTICAL bursty Poisson traffic.
+
+    Arrival gaps (in scheduler ticks) are Poisson-drawn, so admissions
+    land mid-decode and every new request's chunked prefill competes
+    with running decodes — exactly the case split-tick scheduling
+    handles badly (each prefill chunk is its own runner dispatch, so an
+    admission stalls every running decode for the whole chunk walk,
+    spiking decode-interval jitter and queue-time TTFT). The co-batched
+    engine folds the same chunks into the decode program under a
+    ``max_prefill_tokens`` budget. Asserts TOKEN PARITY between the two
+    modes (mixed ticks are a scheduling change only — the acceptance
+    gate) and reports TTFT p50/p99 + decode-interval jitter p50/p99 for
+    both; regressions emit a ``__NO_GAIN`` marker rather than aborting
+    (wall-clock at smoke scale is scheduler-jitter-prone on CPU)."""
+    cfg = get_config(arch)
+    cache_len = prompt_len + max_tokens
+    params = api.init_params(jax.random.key(0), cfg)
+    rs = np.random.RandomState(seed)
+    n = slots * 3
+    reqs = [(rs.randint(1, cfg.vocab_size, size=prompt_len).tolist(),
+             int(rs.randint(max(max_tokens // 2, 1), max_tokens + 1)))
+            for _ in range(n)]
+    arrive = np.cumsum(rs.poisson(mean_gap, size=n))
+    arrive -= arrive[0]                     # the first request opens play
+
+    def drain(co_batch: bool):
+        engine = ServingEngine(params, cfg, n_slots=slots,
+                               cache_len=cache_len,
+                               prefill_chunk=prefill_chunk,
+                               cache_dtype=jnp.dtype(cfg.dtype),
+                               co_batch=co_batch,
+                               max_prefill_tokens=(max_prefill_tokens
+                                                   if co_batch else 0))
+
+        def one_pass():
+            engine.reset_stats()
+            i, tick = 0, 0
+            t0 = time.perf_counter()
+            while i < n or engine.busy:
+                while i < n and arrive[i] <= tick:
+                    p, m = reqs[i]
+                    engine.submit(Request(
+                        rid=i, prompt=list(p),
+                        sampling=SamplingParams(max_new_tokens=m)))
+                    i += 1
+                engine.step()
+                tick += 1
+            return (time.perf_counter() - t0,
+                    {r: engine.completed[r].out_tokens
+                     for r in engine.completed})
+
+        one_pass()                          # warm/compile
+        dt, out = one_pass()
+        return dt, out, engine.metrics.summary()
+
+    dt_c, out_c, mc = drain(True)
+    dt_s, out_s, ms = drain(False)
+    parity = out_c == out_s
+    for name, m, dt in (("cobatch", mc, dt_c), ("split", ms, dt_s)):
+        emit(f"serving_mixed_{name}", m["ttft_p99_s"] * 1e6,
+             f"ttft_p50={m['ttft_p50_s']*1e3:.1f}ms;"
+             f"ttft_p99={m['ttft_p99_s']*1e3:.1f}ms;"
+             f"decode_jitter_p50={m['decode_interval_p50_s']*1e3:.2f}ms;"
+             f"decode_jitter_p99={m['decode_interval_p99_s']*1e3:.2f}ms;"
+             f"decode={m['decode_tokens_per_s']:.1f}tok/s;"
+             f"wall={dt:.2f}s")
+    emit("serving_mixed_vs_split", 0.0,
+         f"parity={'ok' if parity else 'MISMATCH'};"
+         f"ttft_p99_ratio="
+         f"{ms['ttft_p99_s'] / max(mc['ttft_p99_s'], 1e-9):.2f}x;"
+         f"jitter_p99_ratio="
+         f"{ms['decode_interval_p99_s'] / max(mc['decode_interval_p99_s'], 1e-9):.2f}x;"
+         f"prefill_budget={max_prefill_tokens}tok")
+    if not parity:
+        raise AssertionError(
+            "co-batched vs split-tick token mismatch — unified mixed "
+            "ticks must be a scheduling change only")
+    if mc["ttft_p99_s"] >= ms["ttft_p99_s"]:
+        emit("serving_mixed_vs_split__NO_TTFT_GAIN", 0.0,
+             f"{mc['ttft_p99_s']*1e3:.1f}>={ms['ttft_p99_s']*1e3:.1f}ms")
+    if mc["decode_interval_p99_s"] >= ms["decode_interval_p99_s"]:
+        emit("serving_mixed_vs_split__NO_JITTER_GAIN", 0.0,
+             f"{mc['decode_interval_p99_s']*1e3:.2f}>="
+             f"{ms['decode_interval_p99_s']*1e3:.2f}ms")
+
+
 # One smoke config per slot-servable cache family. Quant variants run on
 # qwen only — wbits isolates scheduling, not the arch's cache layout.
 FAMILY_ARCHS = ("qwen1.5-4b-smoke", "mamba2-130m-smoke",
@@ -514,6 +610,8 @@ def run(emit) -> None:
         bench(emit, arch=arch, wbits_list=wbits, tag_arch=True)
     bench_paged(emit)
     bench_paged_attention(emit)
+    bench_mixed_ticks(emit, slots=4, prompt_len=32, max_tokens=24,
+                      prefill_chunk=4, max_prefill_tokens=8)
     bench_sampling(emit, slots=4, oversub=2, prompt_len=16, max_tokens=24,
                    prefill_chunk=8)
     bench_basecaller(emit, reads=8, read_bases=120)
@@ -524,7 +622,9 @@ def run_smoke(emit) -> None:
     pool on the dense smoke arch, the paged-vs-contiguous admission
     comparison, a fused-vs-reference decode-attention backend section
     (token parity + decode tok/s for both backends, the Pallas kernel
-    in interpret mode on CPU), a mixed greedy+sampled decode section
+    in interpret mode on CPU), a mixed-traffic scheduling section
+    (co-batched vs split-tick token parity + TTFT/decode-jitter
+    percentiles under Poisson arrivals), a mixed greedy+sampled decode section
     (determinism + greedy isolation), and a basecaller-runner section
     (reads/s + CTC-merge parity vs the offline whole-read basecall).
     Minutes, not tens of minutes — the full four-family / quant sweep
@@ -533,6 +633,8 @@ def run_smoke(emit) -> None:
           prompt_len=8, max_tokens=12, prefill_chunk=4, wbits_list=(0,))
     bench_paged(emit, base_slots=2, cache_len=24, block_len=8)
     bench_paged_attention(emit)
+    bench_mixed_ticks(emit, slots=2, prompt_len=16, max_tokens=12,
+                      prefill_chunk=4, max_prefill_tokens=4)
     bench_sampling(emit)
     bench_basecaller(emit)
 

@@ -4,8 +4,9 @@ The wrappers own layout glue (GQA head folding, halo padding,
 PackedTensor unwrapping) so models call a clean API, plus the
 decode-attention BACKEND DISPATCH (:func:`decode_gqa` /
 :func:`decode_mla`): ``xla`` is the masked-dense gather reference,
-``pallas`` the fused paged kernel reading straight from the block
-arena (falling back to the reference for multi-token chunk steps).
+``pallas`` the fused paged kernels reading straight from the block
+arena — the single-token variant for decode ticks (C == 1) and the
+multi-token chunk variant (per-query causal mask) for chunk prefill.
 
 ``interpret`` defaults are resolved at CALL time by
 :func:`interpret_default` — NOT frozen at import, so a backend change
@@ -85,27 +86,31 @@ def decode_gqa(q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array,
 
     ``backend`` ``xla``/None: the gather reference — materialises the
     (B, T*block_len) logical view per call. ``pallas``: the fused
-    kernel for single-token steps (C == 1; the decode tick); C > 1
-    chunk steps fall back to the reference, which applies the identical
-    mask so emitted tokens do not depend on the backend. The contiguous
-    layout runs fused too, viewed as a B-block arena with an identity
-    table. ``shard_kv`` optionally constrains the gathered reads
-    (flash-decoding sharding annotation; reference path only).
+    kernels — single-token steps (C == 1; the decode tick) run
+    ``gqa_paged_p``, multi-token chunk steps (C > 1) run
+    ``gqa_paged_chunk_p`` with a per-query causal mask; both apply the
+    identical masking contract, so emitted tokens do not depend on the
+    backend. The contiguous layout runs fused too, viewed as a B-block
+    arena with an identity table. ``shard_kv`` optionally constrains
+    the gathered reads (flash-decoding sharding annotation; reference
+    path only).
     """
     B, C, H, hd = q.shape
-    if backend == "pallas" and C == 1:
+    if backend == "pallas":
         if table is None:
-            Hkv = k.shape[2]
             karena, varena = k, v          # (B, L, Hkv, hd) == B blocks of L
             tbl = jnp.arange(B, dtype=jnp.int32)[:, None]
         else:
-            Hkv = k.shape[2]
             karena, varena, tbl = k, v, table
-        group = H // Hkv
-        qh = q.reshape(B, Hkv, group, hd)
-        o = pa.gqa_paged_p(qh, karena, varena, pos, t[:, 0], tbl,
-                           window=window, interpret=interpret)
-        return o.reshape(B, 1, H * hd)
+        Hkv = k.shape[2]
+        if C == 1:
+            group = H // Hkv
+            qh = q.reshape(B, Hkv, group, hd)
+            o = pa.gqa_paged_p(qh, karena, varena, pos, t[:, 0], tbl,
+                               window=window, interpret=interpret)
+            return o.reshape(B, 1, H * hd)
+        return pa.gqa_paged_chunk_p(q, karena, varena, pos, t, tbl,
+                                    window=window, interpret=interpret)
     if table is not None:
         Hkv = k.shape[2]
         bl = k.shape[1]
@@ -136,16 +141,20 @@ def decode_mla(q_abs: jax.Array, q_rope: jax.Array, c: jax.Array,
     (n_blocks, block_len, ...). Returns o_lat (B, C, H, kvr) fp32 —
     the caller applies the absorbed value projection."""
     B, C, H, kvr = q_abs.shape
-    if backend == "pallas" and C == 1:
+    if backend == "pallas":
         if table is None:
             carena, krarena = c, k_rope
             tbl = jnp.arange(B, dtype=jnp.int32)[:, None]
         else:
             carena, krarena, tbl = c, k_rope, table
-        o = pa.mla_paged_p(q_abs[:, 0], q_rope[:, 0], carena, krarena,
-                           pos, t[:, 0], tbl, scale=scale,
-                           interpret=interpret)
-        return o[:, None]
+        if C == 1:
+            o = pa.mla_paged_p(q_abs[:, 0], q_rope[:, 0], carena, krarena,
+                               pos, t[:, 0], tbl, scale=scale,
+                               interpret=interpret)
+            return o[:, None]
+        return pa.mla_paged_chunk_p(q_abs, q_rope, carena, krarena, pos,
+                                    t, tbl, scale=scale,
+                                    interpret=interpret)
     if table is not None:
         bl = c.shape[1]
         gidx = jnp.maximum(table, 0)

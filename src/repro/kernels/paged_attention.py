@@ -33,10 +33,14 @@ written — exactly the stale-KV story of the XLA path.
 Backend selection is dispatched by ``repro.kernels.ops.decode_gqa`` /
 ``decode_mla`` (layout glue + fallback rules); the model layers
 (``models/lm/attention.py`` / ``mla.py``) call those and never touch a
-gather themselves. The fused path covers the lockstep decode tick
-(``C == 1`` queries); multi-token chunk steps fall back to the
-reference (prefill reads the same masked math, so tokens are identical
-either way).
+gather themselves. Two fused variants cover both serving shapes: the
+lockstep decode tick (``C == 1`` queries — ``gqa_paged_p`` /
+``mla_paged_p``) and multi-token chunk prefill (``C > 1`` —
+``gqa_paged_chunk_p`` / ``mla_paged_chunk_p``, which fold the chunk
+into the query-row axis and carry a PER-QUERY position vector so each
+chunk token applies its own causal/ring mask against the same arena
+blocks; causal-within-chunk falls out of the position mask because the
+chunk's K/V is scattered into the arena before the kernel runs).
 
 Rows with no valid position (pad slots, ``t < 0``) produce garbage in
 both backends — the scheduler never reads them. On TPU, block_len and
@@ -345,3 +349,210 @@ def mla_paged_p(q_abs: jax.Array, q_rope: jax.Array, c: jax.Array,
         interpret=_interpret(interpret),
     )(table.astype(jnp.int32), t.astype(jnp.int32), q_abs, q_rope, c, kr,
       pos)
+
+
+# ---------------------------------------------------------------------------
+# Fused Pallas backend — multi-token chunk variants (C > 1)
+#
+# Chunk prefill runs C query tokens per slot per tick. The C == 1
+# kernels key their mask off a scalar per-row position ``t``; here every
+# query token has its OWN position, so the chunk folds into the query-
+# row axis (C*group rows for GQA, C*H for MLA) and a per-query position
+# vector ``tq`` rides in as a VMEM operand. The mask
+# ``(pos >= 0) & (pos <= tq[:, None])`` then gives each chunk token its
+# own causal frontier — causal-within-chunk for free, since the chunk's
+# K/V is already scattered into the arena when the kernel reads it.
+# Pad tokens (t < 0) mask every position and emit garbage rows the
+# scheduler never reads (their l stays 0; the output is acc/max(l,eps)).
+
+
+def _gqa_chunk_kernel(tbl_ref, q_ref, k_ref, v_ref, tq_ref, pos_ref,
+                      o_ref, m_ref, l_ref, acc_ref, *, scale: float,
+                      window: int, nT: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(tbl_ref[pl.program_id(0), j] >= 0)
+    def _body():
+        cdt = jnp.bfloat16 if jnp.dtype(k_ref.dtype).itemsize == 1 \
+            else k_ref.dtype
+        q = q_ref[0, 0].astype(cdt)                    # (C*group, hd)
+        k = k_ref[0, :, 0].astype(cdt)                 # (bl, hd)
+        v = v_ref[0, :, 0].astype(cdt)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        pos = pos_ref[0]                               # (bl,) int32
+        tq = tq_ref[0]                                 # (C*group,) int32
+        valid = (pos[None, :] >= 0) & (pos[None, :] <= tq[:, None])
+        if window > 0:
+            valid &= pos[None, :] > tq[:, None] - window
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p.astype(cdt), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nT - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def gqa_paged_chunk_p(q: jax.Array, k: jax.Array, v: jax.Array,
+                      pos: jax.Array, t: jax.Array, table: jax.Array, *,
+                      window: int = 0,
+                      interpret: bool | None = None) -> jax.Array:
+    """Fused paged GQA chunk prefill (C > 1 query tokens per row).
+
+    q: (B, C, H, hd); k/v: arenas (n_blocks, block_len, Hkv, hd); pos:
+    (B, T*block_len); t: (B, C) per-query positions (< 0 = pad); table:
+    (B, T). Returns (B, C, H*hd) in q's dtype.
+
+    Same grid/DMA story as :func:`gqa_paged_p` — the chunk folds into
+    the query-row axis (query token c, group member g -> row c*group+g)
+    and ``t`` expands to a per-row position vector, so each chunk token
+    masks against its own causal frontier inside one online-softmax
+    pass over the row's arena blocks."""
+    B, C, H, hd = q.shape
+    Hkv = k.shape[2]
+    group = H // Hkv
+    bl = k.shape[1]
+    T = table.shape[1]
+    CG = C * group
+    qf = (q.reshape(B, C, Hkv, group, hd).transpose(0, 2, 1, 3, 4)
+          .reshape(B, Hkv, CG, hd))
+    tq = jnp.repeat(t.astype(jnp.int32), group, axis=1)      # (B, CG)
+    kern = functools.partial(_gqa_chunk_kernel, scale=hd ** -0.5,
+                             window=window, nT=T)
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                      # table
+        grid=(B, Hkv, T),
+        in_specs=[
+            pl.BlockSpec((1, 1, CG, hd), lambda b, h, j, tbl: (b, h, 0, 0)),
+            pl.BlockSpec((1, bl, 1, hd),
+                         lambda b, h, j, tbl: (jnp.maximum(tbl[b, j], 0),
+                                               0, h, 0)),
+            pl.BlockSpec((1, bl, 1, hd),
+                         lambda b, h, j, tbl: (jnp.maximum(tbl[b, j], 0),
+                                               0, h, 0)),
+            pl.BlockSpec((1, CG), lambda b, h, j, tbl: (b, 0)),
+            pl.BlockSpec((1, bl), lambda b, h, j, tbl: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, CG, hd),
+                               lambda b, h, j, tbl: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((CG, 1), jnp.float32),
+            pltpu.VMEM((CG, 1), jnp.float32),
+            pltpu.VMEM((CG, hd), jnp.float32),
+        ],
+    )
+    o = pl.pallas_call(
+        kern, grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, CG, hd), q.dtype),
+        interpret=_interpret(interpret),
+    )(table.astype(jnp.int32), qf, k, v, tq, pos)
+    return (o.reshape(B, Hkv, C, group, hd).transpose(0, 2, 1, 3, 4)
+            .reshape(B, C, H * hd))
+
+
+def _mla_chunk_kernel(tbl_ref, qa_ref, qr_ref, c_ref, kr_ref, tq_ref,
+                      pos_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                      scale: float, nT: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(tbl_ref[pl.program_id(0), j] >= 0)
+    def _body():
+        cdt = c_ref.dtype
+        qa = qa_ref[0].astype(cdt)                     # (C*H, kvr)
+        qr = qr_ref[0].astype(kr_ref.dtype)            # (C*H, rope_d)
+        c = c_ref[0]                                   # (bl, kvr)
+        kr = kr_ref[0]                                 # (bl, rope_d)
+        s = jax.lax.dot_general(qa, c, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s + jax.lax.dot_general(qr, kr, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+        s = s * scale
+        pos = pos_ref[0]
+        tq = tq_ref[0]                                 # (C*H,)
+        valid = (pos[None, :] >= 0) & (pos[None, :] <= tq[:, None])
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p.astype(cdt), c, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nT - 1)
+    def _done():
+        o_ref[0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+def mla_paged_chunk_p(q_abs: jax.Array, q_rope: jax.Array, c: jax.Array,
+                      kr: jax.Array, pos: jax.Array, t: jax.Array,
+                      table: jax.Array, *, scale: float,
+                      interpret: bool | None = None) -> jax.Array:
+    """Fused paged absorbed-MLA chunk prefill (C > 1).
+
+    q_abs: (B, C, H, kvr); q_rope: (B, C, H, rope_d); c/kr: latent
+    arenas (n_blocks, block_len, kvr|rope_d); pos: (B, T*block_len);
+    t: (B, C) per-query positions; table: (B, T). Returns o_lat
+    (B, C, H, kvr) fp32 — chunk folded into the query-row axis (row
+    c*H + h), per-query causal mask, same arena DMA as
+    :func:`mla_paged_p`."""
+    B, C, H, kvr = q_abs.shape
+    rope_d = q_rope.shape[-1]
+    bl = c.shape[1]
+    T = table.shape[1]
+    CH = C * H
+    qaf = q_abs.reshape(B, CH, kvr)
+    qrf = q_rope.reshape(B, CH, rope_d)
+    tq = jnp.repeat(t.astype(jnp.int32), H, axis=1)          # (B, CH)
+    kern = functools.partial(_mla_chunk_kernel, scale=scale, nT=T)
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, T),
+        in_specs=[
+            pl.BlockSpec((1, CH, kvr), lambda b, j, tbl: (b, 0, 0)),
+            pl.BlockSpec((1, CH, rope_d), lambda b, j, tbl: (b, 0, 0)),
+            pl.BlockSpec((1, bl, kvr),
+                         lambda b, j, tbl: (jnp.maximum(tbl[b, j], 0),
+                                            0, 0)),
+            pl.BlockSpec((1, bl, rope_d),
+                         lambda b, j, tbl: (jnp.maximum(tbl[b, j], 0),
+                                            0, 0)),
+            pl.BlockSpec((1, CH), lambda b, j, tbl: (b, 0)),
+            pl.BlockSpec((1, bl), lambda b, j, tbl: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, CH, kvr), lambda b, j, tbl: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((CH, 1), jnp.float32),
+            pltpu.VMEM((CH, 1), jnp.float32),
+            pltpu.VMEM((CH, kvr), jnp.float32),
+        ],
+    )
+    o = pl.pallas_call(
+        kern, grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((B, CH, kvr), jnp.float32),
+        interpret=_interpret(interpret),
+    )(table.astype(jnp.int32), qaf, qrf, c, kr, tq, pos)
+    return o.reshape(B, C, H, kvr)

@@ -8,9 +8,15 @@ Engine path (default)
 replays a synthetic Poisson request stream (``--rate`` requests/s,
 variable prompt/output lengths) into :class:`repro.serving.ServingEngine`:
 requests queue on the host, a fixed pool of ``--slots`` decode slots
-admits them as capacity frees up, prompts prefill in ``--prefill-chunk``
-token chunks interleaved with decode steps, and JIT shapes never change.
-The run ends with a metrics summary (tokens/s, TTFT, queue depth).
+admits them as capacity frees up, and every tick runs ONE co-batched
+jitted step in which prompts prefill in ``--prefill-chunk`` token
+chunks ALONGSIDE the running slots' decode tokens (mixed ticks; JIT
+shapes never change). ``--max-prefill-tokens`` bounds the prefill
+payload a single tick may carry, so admission bursts cannot inflate
+decode latency; ``--split-tick`` restores the legacy scheduler
+(prefill steps stall decode) as the measured baseline. The run ends
+with a metrics summary (tokens/s, TTFT p50/p95/p99, decode-interval
+jitter, queue depth).
 
 The engine dispatches through the serving RUNNER REGISTRY
 (``repro.serving.runner``), so three workload families share one
@@ -160,6 +166,8 @@ def run_engine(params, cfg, args) -> None:
     engine = api.make_serving_engine(
         params, cfg, n_slots=args.slots, cache_len=args.cache_len,
         prefill_chunk=args.prefill_chunk,
+        max_prefill_tokens=args.max_prefill_tokens,
+        co_batch=not args.split_tick,
         cache_dtype=jnp.dtype(cfg.dtype),
         block_len=args.block_len, n_blocks=args.n_blocks,
         history_limit=args.history_limit or None, **runner_kw)
@@ -215,9 +223,18 @@ def run_engine(params, cfg, args) -> None:
               f"({s['tokens_per_s']:.1f} tok/s end-to-end, "
               f"{s['decode_tokens_per_s']:.1f} tok/s decode)")
     print(f"[serve] ttft mean {s['ttft_mean_s']*1e3:.0f}ms "
-          f"p95 {s['ttft_p95_s']*1e3:.0f}ms | queue depth "
+          f"p50 {s['ttft_p50_s']*1e3:.0f}ms "
+          f"p95 {s['ttft_p95_s']*1e3:.0f}ms "
+          f"p99 {s['ttft_p99_s']*1e3:.0f}ms | queue depth "
           f"max {s['queue_depth_max']} mean {s['queue_depth_mean']:.1f} | "
           f"slot occupancy {s['slot_occupancy']:.2f}/{args.slots}")
+    if not basecall:
+        print(f"[serve] decode interval p50 "
+              f"{s['decode_interval_p50_s']*1e3:.1f}ms p99 "
+              f"{s['decode_interval_p99_s']*1e3:.1f}ms "
+              f"({'split-tick' if args.split_tick else 'unified tick'}"
+              + (f", prefill budget {args.max_prefill_tokens} tok"
+                 if args.max_prefill_tokens else "") + ")")
     if not basecall:
         print(f"[serve] pool util mean {s['pool_util_mean']:.2f} "
               f"max {s['pool_util_max']:.2f} | "
@@ -282,6 +299,18 @@ def main():
     ap.add_argument("--rate", type=float, default=16.0,
                     help="Poisson arrival rate, requests/s")
     ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--max-prefill-tokens", type=int, default=0,
+                    help="per-tick prefill token budget for the unified "
+                         "mixed tick: chunks schedule oldest-first until "
+                         "the cumulative payload crosses it (soft cap; "
+                         "0 = unlimited), so a burst of admissions "
+                         "cannot inflate the running slots' decode "
+                         "interval")
+    ap.add_argument("--split-tick", action="store_true",
+                    help="legacy scheduler: one runner step per prefill "
+                         "slot, then a decode-only step (admissions "
+                         "stall decode) — the baseline the unified "
+                         "co-batched tick is measured against")
     ap.add_argument("--eos-id", type=int, default=-1,
                     help="stop-token id for every request (engine path; "
                          "-1 = none). Requests end early when the decoded "

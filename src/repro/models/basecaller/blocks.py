@@ -135,17 +135,26 @@ def block_state(cfg: ModelConfig, i: int) -> State:
 def _mask_outside(h: jax.Array, bounds, s: int) -> jax.Array:
     """Zero positions outside the read (streamed-chunk serving).
 
-    ``bounds = (start, read_len)`` are traced scalars: position ``i`` at
-    cumulative stride ``s`` anchors global sample ``start + i*s``. The
-    whole-read forward's convs implicitly zero-pad beyond the read; a
-    chunk window's halo positions beyond the read edge would otherwise
-    carry BatchNorm-biased values into the next K>1 conv, breaking the
-    chunked == whole-read bit-parity the BasecallerRunner relies on.
+    ``bounds = (start, read_len)`` are traced scalars — or ``(B,)``
+    vectors when the serving runner batches every slot's window into
+    one forward; each batch row then masks against its own read edges
+    (rows with ``read_len == 0`` mask everything: inactive slots).
+    Position ``i`` at cumulative stride ``s`` anchors global sample
+    ``start + i*s``. The whole-read forward's convs implicitly zero-pad
+    beyond the read; a chunk window's halo positions beyond the read
+    edge would otherwise carry BatchNorm-biased values into the next
+    K>1 conv, breaking the chunked == whole-read bit-parity the
+    BasecallerRunner relies on.
     """
     if bounds is None:
         return h
     start, read_len = bounds
-    gpos = start + jnp.arange(h.shape[1], dtype=jnp.int32) * s
+    idx = jnp.arange(h.shape[1], dtype=jnp.int32) * s
+    if jnp.ndim(start) == 1:            # per-row bounds (batched serving)
+        gpos = start[:, None] + idx[None, :]
+        ok = (gpos >= 0) & (gpos < read_len[:, None])
+        return h * ok[:, :, None].astype(h.dtype)
+    gpos = start + idx
     ok = (gpos >= 0) & (gpos < read_len)
     return h * ok[None, :, None].astype(h.dtype)
 

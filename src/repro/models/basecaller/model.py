@@ -143,10 +143,12 @@ def forward_window(params: Params, state: State, window: jax.Array,
                    ) -> jax.Array:
     """Eval-mode forward over one padded window (B, W, 1) -> CTC
     log-probs (B, W/stride, n_bases). ``start``/``read_len`` are traced
-    scalars (global sample of window[0] — negative at the read head —
-    and the read's length) so the read-edge masking retraces nothing.
-    The jitted hot loop of the serving BasecallerRunner (one compile —
-    all windows share W)."""
+    scalars — or ``(B,)`` vectors when the serving runner co-batches
+    every slot's window into one forward, each row masking against its
+    own read edges (global sample of window[0] — negative at the read
+    head — and the read's length); either way the read-edge masking
+    retraces nothing. The jitted hot loop of the serving
+    BasecallerRunner (one compile — all windows share W)."""
     log_probs, _ = forward(params, state, window, cfg, train=False,
                            bounds=(start, read_len))
     return log_probs

@@ -395,10 +395,13 @@ def attn_decode_slots(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
     marking padding (padding tokens write nothing into the cache — their
     scatter index is clamped out of bounds and dropped — and their output
     rows are garbage the caller must ignore). Two call shapes cover the
-    serving engine: C == 1 is the lockstep decode over all slots; C > 1
-    is one chunked-prefill step for a single slot (B == 1). Causality
-    within a chunk holds because KV is written before attending and the
-    mask compares cached positions against each query's position.
+    serving engine: C == 1 is the lockstep decode-only tick over all
+    slots; C > 1 is a MIXED tick — each row carries its own prefill
+    chunk (or a single decode token in column 0 with the rest padded
+    ``t < 0``), so chunk rows and decode rows advance in one program.
+    Causality within a chunk holds because KV is written before
+    attending and the mask compares cached positions against each
+    query's position — ragged rows need no extra masking.
 
     ``table`` switches to the PAGED cache layout: ``cache["k"]``/``v``
     are shared block arenas ``(n_blocks, block_len, Hkv, hd)`` and
@@ -414,8 +417,9 @@ def attn_decode_slots(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
 
     ``attn_backend`` selects the decode-attention read path
     (``repro.kernels.ops.decode_gqa``): None/"xla" is the gather
-    reference; "pallas" computes single-token steps directly from the
-    arena (no logical-view materialisation).
+    reference; "pallas" computes both the C == 1 tick and the C > 1
+    chunk variant directly from the arena (no logical-view
+    materialisation in either shape).
     """
     B, C, _ = x.shape
     q, k_new, v_new = _project_qkv(p, x, jnp.maximum(t, 0), cfg)

@@ -168,10 +168,11 @@ def mla_decode_slots(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
     x: (B, C, d); t: (B, C) int32 per-token positions, ``t < 0`` marking
     padding (pad tokens write nothing — their scatter index is clamped
     out of bounds and dropped — and their output rows are garbage the
-    caller must ignore). C == 1 is the engine's lockstep decode; C > 1
-    one chunked-prefill step. Causality within a chunk holds because the
-    latent KV is written before scoring and the mask compares cached
-    positions against each query's position.
+    caller must ignore). C == 1 is the engine's lockstep decode-only
+    tick; C > 1 is a mixed tick — each row carries its own prefill
+    chunk or a single decode token padded to C. Causality within a
+    chunk holds because the latent KV is written before scoring and the
+    mask compares cached positions against each query's position.
 
     ``table`` switches to the PAGED layout: ``c``/``k_rope`` are shared
     block arenas ``(n_blocks, block_len, ...)`` and ``table: (B, T)``
@@ -182,9 +183,9 @@ def mla_decode_slots(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
 
     ``attn_backend`` selects the latent read path
     (``repro.kernels.ops.decode_mla``): None/"xla" is the gather
-    reference; "pallas" computes single-token steps directly from the
-    arena (absorbed-gather read through the table — no logical-view
-    materialisation).
+    reference; "pallas" computes both C == 1 ticks and C > 1 chunk
+    rows directly from the arena (absorbed read through the table — no
+    logical-view materialisation in either shape).
     """
     B, C, _ = x.shape
     H, qr, kvr, nope, rope_d, vd = _dims(cfg)

@@ -253,8 +253,11 @@ def ssm_decode_slots(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
     integrating garbage would poison the next occupant — so ``h``,
     ``conv`` and ``pos`` are frozen wherever ``t < 0`` (their output rows
     are garbage the caller ignores). C == 1 is the engine's lockstep
-    decode tick; C > 1 runs one chunked-prefill step as a sequential
-    scan over the chunk (the recurrence is inherently causal).
+    decode-only tick; C > 1 is a mixed tick — each row scans its own
+    prefill chunk (or a single decode token padded to C with ``t < 0``
+    steps, which freeze state) sequentially; the recurrence is
+    inherently causal and ragged rows cost only their valid steps'
+    state updates.
     """
     B, C, _ = x.shape
     d_in, nh, N, conv_ch = ssm_dims(cfg)

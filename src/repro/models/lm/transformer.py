@@ -155,7 +155,10 @@ def _cross_attn(p, x, enc_kv, cfg, attn_backend=None):
     ``attn_backend == "pallas"`` routes single-token decode steps
     through the fused decode-attention kernel (the encoder buffer is a
     degenerate contiguous "arena": every position valid, no window);
-    prefill/training and the default XLA path keep the dense einsum.
+    prefill/training, multi-token rows (chunk prefill in the unified
+    mixed tick) and the default XLA path keep the dense fp32 einsum —
+    it is not a paged-pool gather, so the no-logical-gather story is
+    unaffected, and its fp32 math is backend-identical by construction.
     """
     B, S, _ = x.shape
     H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
@@ -635,9 +638,12 @@ def decode_step_slots(params: Params, caches: Dict, tokens: jax.Array,
     its own position, so requests admitted at different times decode in
     one lockstep batch without ever changing the JIT shape.
 
-    ``logits_at`` (traced scalar index): unembed only that sequence
-    position — chunked prefill reads a single token's logits, so the
-    other C-1 rows of the vocab matmul would be wasted work.
+    ``logits_at`` (traced scalar or ``(B,)`` per-row indices): unembed
+    only that sequence position — chunked prefill reads a single
+    token's logits, so the other C-1 rows of the vocab matmul would be
+    wasted work. The ``(B,)`` form serves the unified co-batched tick,
+    where each row's emitting position differs (decode rows read column
+    0, prefill rows their chunk's last real token).
 
     ``tables`` (paged serving pool): {group name: (B, T) block table}
     for KV-bearing groups — the caches then hold shared block arenas
@@ -676,7 +682,11 @@ def decode_step_slots(params: Params, caches: Dict, tokens: jax.Array,
         x, ncache = jax.lax.scan(step, x, xs_in)
         new_caches[gname] = ncache
     if logits_at is not None:
-        x = jax.lax.dynamic_slice_in_dim(x, logits_at, 1, axis=1)
+        if jnp.ndim(logits_at) == 1:        # per-row emitting positions
+            x = jnp.take_along_axis(
+                x, jnp.maximum(logits_at, 0)[:, None, None], axis=1)
+        else:
+            x = jax.lax.dynamic_slice_in_dim(x, logits_at, 1, axis=1)
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = unembed(params, x, cfg)
     return logits, new_caches

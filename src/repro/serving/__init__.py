@@ -7,21 +7,21 @@ Architecture (post Runner/SamplingParams redesign)
 The stack splits into three layers:
 
 ``engine``   :class:`ServingEngine` — PURE host-side scheduling: FIFO
-             queue, fixed slot pool, admission, chunked-prefill/decode
-             interleave, preempt-youngest + resume-by-re-prefill,
+             queue, fixed slot pool, admission, the unified mixed-tick
+             schedule (below), preempt-youngest + resume-by-re-prefill,
              metrics. It imports no model code; everything model-shaped
              goes through a runner.
 
 ``runner``   the :class:`ModelRunner` protocol (``validate`` /
-             ``make_chunks`` / ``admit`` / ``alloc_pool`` /
-             ``prefill_chunk`` / ``decode_tick`` / ``reset_row``) plus a
-             registry (:func:`make_runner`) with three backends:
+             ``make_chunks`` / ``admit`` / ``alloc_pool`` / ``step`` /
+             ``reset_row``) plus a registry (:func:`make_runner`) with
+             three backends:
 
              - ``TokenRunner`` — every token-only arch (attention
                ``dense``/``moe``, SSM, MLA, hybrid) over the paged
-               block-granular KV pool, driving the two fixed-shape
-               jitted programs (lockstep ``(B, 1)`` decode over all
-               slots; ``(1, C)`` chunked prefill for one slot).
+               block-granular KV pool, driving the fixed-shape jitted
+               programs (lockstep ``(B, 1)`` decode-only ticks; one
+               co-batched ``(B, C)`` program for mixed ticks).
              - ``EncoderPrefixRunner`` — whisper-style audio enc-dec:
                ``encdec.encode`` runs once per request at admission and
                each decoder layer's cross-attention K/V is scattered
@@ -45,6 +45,38 @@ The stack splits into three layers:
              tick runs a program with no sampling ops at all, pinned
              bit-identical to the pre-redesign engine by regression
              tests.
+
+Unified mixed-tick scheduling (prefill + decode in one program)
+---------------------------------------------------------------
+
+Every scheduler tick emits ONE work list — one entry per slot: a
+``PrefillWork`` (the slot's next prompt chunk, up to C tokens) or a
+``DecodeWork`` (one lockstep token) — and the runner executes the whole
+list in one jitted ``step``. Decode rows occupy column 0 of the
+``(B, C)`` batch with their single token; prefill rows carry their
+chunk with per-token positions; a per-row ``fresh`` vector folds slot
+recycling into the step; and ``logits_at`` unembeds each row at its
+own emitting position. Chunk-prefill attention reads run the same
+backend as decode (for ``pallas``, the multi-token fused kernel — no
+logical-view gather anywhere in the tick). The result: a long
+admission no longer stalls decode for the running slots — prefill and
+decode advance together, which is what flattens decode-interval jitter
+and TTFT under bursty Poisson traffic.
+
+The per-tick prefill payload is bounded by ``max_prefill_tokens``
+(engine kwarg / ``serve.py --max-prefill-tokens``): chunks schedule
+oldest-admission-first until the cumulative payload crosses the
+budget — a soft cap, the crossing chunk still runs, so one chunk
+always makes progress; 0 disables the budget. Decode-only ticks skip
+the mixed program entirely and run the pinned ``(B, 1)`` decode
+programs (the greedy-parity regression gate is unchanged).
+
+``co_batch=False`` keeps the legacy split-tick scheduler — one runner
+step per prefill slot, then a decode-only step — as the measured
+baseline (``bench_serving --smoke`` asserts token parity between the
+two modes and reports the TTFT/jitter delta). Token sequences are
+IDENTICAL in both modes; only tick timing differs (co-batched slots
+decode their first post-prefill token on the following tick).
 
 Paged KV pool (block arena + block tables + free list)
 ------------------------------------------------------
@@ -86,18 +118,21 @@ by ``repro.kernels.ops.decode_gqa`` / ``decode_mla`` and threaded
              reference; forcing pallas on CPU runs interpret mode,
              which CI uses to exercise the kernel body).
 
-WHICH PATHS FUSE: single-token decode ticks (``C == 1``) for GQA self-
-attention (dense/moe/hybrid incl. sliding-window rings), absorbed-MLA
-latent reads, and the audio runner's cross-attention. Multi-token
-chunk-prefill steps always run the reference (literally the same
-program under either backend). Fused decode ticks share the reference's
+WHICH PATHS FUSE: single-token decode ticks (``C == 1``) AND
+multi-token chunk prefill (``C > 1``, the mixed-tick variant with a
+per-query causal mask) for GQA self-attention (dense/moe/hybrid incl.
+sliding-window rings) and absorbed-MLA latent reads; plus the audio
+runner's single-token cross-attention (its multi-token rows keep the
+dense fp32 einsum, which is not a paged gather and is
+backend-identical by construction). Fused paths share the reference's
 masking contract and compute dtypes; greedy token parity across the
-paged configs (incl. recycle/preemption and bf16 caches) is enforced by
-tests/test_paged_attention.py and the bench_serving ``--smoke`` backend
-section — the only residual difference is online- vs plain-softmax
-rounding. A new arch opts in by expressing its decode read through
-``decode_gqa`` / ``decode_mla`` instead of gathering KV itself;
-anything else simply keeps the reference path.
+paged configs (incl. recycle/preemption, bf16 caches, and C > 1
+chunks) is enforced by tests/test_paged_attention.py and the
+bench_serving ``--smoke`` backend section — the only residual
+difference is online- vs plain-softmax rounding. A new arch opts in by
+expressing its decode read through ``decode_gqa`` / ``decode_mla``
+instead of gathering KV itself; anything else simply keeps the
+reference path.
 
 Admission policy: ``submit`` rejects only what can never run (runner
 ``validate``: ``prompt + max_new - 1 > cache_len`` — the final token is
@@ -118,14 +153,16 @@ Slot lifecycle
    the audio runner encodes frames and scatters cross-attention K/V
    into the slot's buffer). Per-slot cache rows are reset in place per
    each cache's RESET SPEC on the first chunk.
-2. **Prefill** — the payload streams through ``prefill_chunk`` steps
-   (prompt tokens for LMs; halo-padded squiggle windows for reads,
-   which emit merged bases as they go). The final chunk of an
-   autoregressive prompt emits generated token #1 (TTFT).
-3. **Decode** — autoregressive slots join the lockstep ``decode_tick``
+2. **Prefill** — the payload streams through per-tick ``PrefillWork``
+   chunks inside the unified ``step`` (prompt tokens for LMs;
+   halo-padded squiggle windows for reads, which emit merged bases as
+   they go — the basecaller batches every scheduled slot's window into
+   one forward). The final chunk of an autoregressive prompt emits
+   generated token #1 (TTFT).
+3. **Decode** — autoregressive slots join the lockstep ``DecodeWork``
    batch until ``max_new_tokens`` or EOS, growing by one block at block
-   crossings. Basecaller reads skip this phase entirely: they finish
-   with their last chunk.
+   crossings, co-batched with any in-flight prefill chunks. Basecaller
+   reads skip this phase entirely: they finish with their last chunk.
 4. **Evict** — ``reset_row`` returns pool blocks / clears per-slot
    runner state; the next queued request is admitted on the following
    tick. JIT shapes never change throughout.
@@ -161,6 +198,22 @@ copied the gather-and-mask pattern should call
 backends for free. Pallas kernels no longer pin interpret mode at
 import — ``repro.kernels.ops.interpret_default()`` resolves it per
 call (``REPRO_PALLAS_INTERPRET=1|0`` overrides).
+
+Migration note (PR 6, unified mixed ticks)
+------------------------------------------
+
+The ``ModelRunner`` protocol collapsed ``prefill_chunk(slot, payload,
+pos, fresh, req, final)`` + ``decode_tick(views)`` into ONE method:
+``step(works)``, taking a per-slot list of ``PrefillWork`` /
+``DecodeWork`` / ``None`` and returning per-slot emitted tokens.
+``DecodeView`` was renamed ``DecodeWork`` (same fields). Custom
+runners must implement ``step``; the engine never calls anything else
+per tick. Engine behavior note: under the default co-batched schedule
+a slot that finishes prefill decodes its first token on the FOLLOWING
+tick (the old scheduler decoded it in the same tick) — token
+sequences, TTFT accounting, and preemption/resume semantics are
+unchanged, but per-tick traces differ. ``co_batch=False`` restores
+the old split-tick schedule exactly.
 """
 from repro.serving.cache import CachePool
 from repro.serving.engine import Request, ServingEngine

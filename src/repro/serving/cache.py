@@ -108,6 +108,23 @@ def _tree_mask_fresh(row, fresh, spec):
     return jax.tree.map(one, row, spec)
 
 
+def _tree_mask_fresh_rows(row, fresh, spec):
+    """Per-ROW variant of :func:`_tree_mask_fresh` over the whole pool:
+    ``fresh`` is ``(n_slots,)`` int32 and every row with ``fresh > 0``
+    takes its spec'd reset value on every resettable leaf (non-``keep``
+    leaves are per slot by construction — positions and SSM state, slot
+    axis 1). This is what lets the unified co-batched tick fold slot
+    recycling for EVERY freshly admitted row into the one jitted step,
+    exactly as the per-slot chunk program did with a scalar flag."""
+    def one(val, how):
+        fill = _reset_fill(val, how)
+        if fill is None:
+            return val
+        sel = fresh.reshape((1, -1) + (1,) * (val.ndim - 2)) > 0
+        return jnp.where(sel, jnp.broadcast_to(fill, val.shape), val)
+    return jax.tree.map(one, row, spec)
+
+
 def _tree_reset_row(pool, slot, spec):
     """Invalidate one slot in place per the reset spec (non-``keep``
     leaves are per slot by construction: positions and SSM state)."""
@@ -250,6 +267,7 @@ class CachePool:
     gather_row = staticmethod(_tree_gather_row)
     scatter_row = staticmethod(_tree_scatter_row)
     mask_fresh = staticmethod(_tree_mask_fresh)
+    mask_fresh_rows = staticmethod(_tree_mask_fresh_rows)
 
     def nbytes(self) -> int:
         return sum(leaf.size * leaf.dtype.itemsize

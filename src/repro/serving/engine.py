@@ -19,7 +19,8 @@ from typing import (Any, Callable, Deque, Dict, List, Optional, Sequence)
 import numpy as np
 
 from repro.serving.metrics import ServingMetrics
-from repro.serving.runner import Chunk, DecodeView, make_runner
+from repro.serving.runner import (Chunk, DecodeWork, PrefillWork,
+                                  make_runner)
 from repro.serving.sampling import GREEDY, SamplingParams
 
 FREE, PREFILL, DECODE = "free", "prefill", "decode"
@@ -154,7 +155,23 @@ class ServingEngine:
         request must satisfy ``len(prompt) + max_new_tokens - 1 <=
         cache_len``. (Ignored by the basecaller runner — reads stream.)
     prefill_chunk : tokens per chunked-prefill step. The scheduler runs
-        at most one chunk per slot between decode steps.
+        at most one chunk per slot per tick.
+    max_prefill_tokens : per-tick prefill token budget for the unified
+        tick — chunks are scheduled oldest-admission-first until the
+        cumulative payload reaches the budget (soft cap: the chunk that
+        crosses it still runs, so one chunk always makes progress).
+        0 = unlimited (every PREFILL slot runs a chunk each tick).
+        Bounding it keeps mixed ticks small, so a burst of admissions
+        cannot inflate the decode interval of the running slots.
+    co_batch : True (default) = unified ticks — every scheduled slot,
+        mid-prefill or decoding, advances in ONE runner step per tick.
+        False = the legacy split-tick scheduler (one runner step per
+        prefill slot, then a decode-only step; a long admission stalls
+        decode) — kept as the measured baseline in
+        ``benchmarks/bench_serving.py``. Token sequences are identical
+        in both modes; only tick timing differs (in co-batched mode a
+        slot finishing prefill decodes its next token on the FOLLOWING
+        tick rather than in the same one).
     block_len : KV positions per arena block (``cache_len`` degenerates
         to the old contiguous one-row-per-slot layout).
     n_blocks : arena blocks per full-length layer group; 0 = full
@@ -169,6 +186,7 @@ class ServingEngine:
 
     def __init__(self, params, cfg, *, n_slots: int = 4,
                  cache_len: int = 256, prefill_chunk: int = 16,
+                 max_prefill_tokens: int = 0, co_batch: bool = True,
                  cache_dtype=None, block_len: int = 0,
                  n_blocks: int = 0, history_limit: Optional[int] = None,
                  clock: Callable[[], float] = time.perf_counter,
@@ -181,6 +199,8 @@ class ServingEngine:
         self.n_slots = int(n_slots)
         self.cache_len = int(cache_len)
         self.prefill_chunk = int(prefill_chunk)
+        self.max_prefill_tokens = int(max_prefill_tokens)
+        self.co_batch = bool(co_batch)
         self.runner = runner if runner is not None else make_runner(
             params, cfg, n_slots=self.n_slots, cache_len=self.cache_len,
             prefill_chunk=self.prefill_chunk, cache_dtype=cache_dtype,
@@ -219,10 +239,28 @@ class ServingEngine:
 
     # --------------------------------------------------------- scheduler
     def step(self) -> None:
-        """One scheduler tick: admit -> one prefill chunk/slot -> decode."""
+        """One scheduler tick: admit -> schedule -> one co-batched
+        runner step (or the legacy split ticks when ``co_batch=False``)."""
         self._admit()
-        self._prefill_tick()
-        self._decode_tick()
+        if self.co_batch:
+            if self.runner.autoregressive:
+                self._ensure_decode_blocks()
+            works = self._schedule()
+            self._run_works(works)
+        else:
+            # legacy split ticks: one runner step per prefill slot,
+            # then a decode-only step — the pre-unified-tick scheduler,
+            # where a long admission stalls every running slot's decode
+            for i in [j for j, s in enumerate(self.slots)
+                      if s.state == PREFILL]:
+                works: List[Optional[Any]] = [None] * self.n_slots
+                self._pop_chunk(works, i)
+                self._run_works(works)
+            if self.runner.autoregressive:
+                self._ensure_decode_blocks()
+                works = [None] * self.n_slots
+                self._add_decode_works(works)
+                self._run_works(works)
         self.metrics.record_step(len(self.queue), self.n_active,
                                  self.runner.pool_util())
 
@@ -269,34 +307,83 @@ class ServingEngine:
             self.slot_history[i].append(req.rid)
             self.metrics.record_admit(req.rid)
 
-    def _prefill_tick(self) -> None:
-        for i, slot in enumerate(self.slots):
-            if slot.state != PREFILL:
+    def _pop_chunk(self, works: List[Optional[Any]], i: int) -> None:
+        """Pop slot ``i``'s next pending chunk into ``works[i]``."""
+        slot = self.slots[i]
+        chunk = slot.pending.pop(0)
+        works[i] = PrefillWork(chunk.payload, chunk.n_units, slot.pos,
+                               slot.fresh, not slot.pending, slot.req)
+
+    def _add_decode_works(self, works: List[Optional[Any]]) -> None:
+        for i, s in enumerate(self.slots):
+            if s.state == DECODE and works[i] is None:
+                works[i] = DecodeWork(s.last_token, s.pos, s.req)
+
+    def _schedule(self) -> List[Optional[Any]]:
+        """Build the unified tick's work list: every DECODE slot gets a
+        DecodeWork; PREFILL slots get their next chunk oldest-admission-
+        first until the cumulative payload reaches ``max_prefill_tokens``
+        (soft cap — the crossing chunk still runs, so one chunk always
+        progresses; 0 = no budget)."""
+        works: List[Optional[Any]] = [None] * self.n_slots
+        left = self.max_prefill_tokens or None
+        order = sorted((i for i, s in enumerate(self.slots)
+                        if s.state == PREFILL),
+                       key=lambda i: self.slots[i].seq)
+        for i in order:
+            self._pop_chunk(works, i)
+            if left is not None:
+                left -= works[i].n_units
+                if left <= 0:
+                    break
+        self._add_decode_works(works)
+        return works
+
+    def _run_works(self, works: List[Optional[Any]]) -> None:
+        """One runner step over the work list + all host bookkeeping:
+        emitted tokens, prefill/decode metrics, PREFILL->DECODE
+        transitions, completions."""
+        if not any(w is not None for w in works):
+            return
+        n_decode = sum(isinstance(w, DecodeWork) for w in works)
+        t0 = self.metrics.clock()
+        emitted = self.runner.step(works)                       # syncs
+        dt = self.metrics.clock() - t0
+        if n_decode:
+            self.metrics.record_decode(n_decode, dt)
+        for i, w in enumerate(works):
+            if w is None:
                 continue
-            chunk = slot.pending.pop(0)
-            final = not slot.pending
-            emitted = self.runner.prefill_chunk(i, chunk.payload, slot.pos,
-                                                slot.fresh, slot.req, final)
-            slot.fresh = False
-            slot.pos += chunk.n_units
-            self.metrics.record_prefill(chunk.n_units)
-            if emitted:
-                first = not slot.req.out_tokens
-                slot.req.out_tokens.extend(emitted)
-                if first:
-                    self.metrics.record_first_token(slot.req.rid)
-            if not final:
-                continue
-            if self.runner.autoregressive:
-                # prompt fully cached: the final chunk emitted the next
-                # generated token (token #1 for fresh requests; the
-                # resume point after a preemption)
-                slot.last_token = slot.req.out_tokens[-1]
-                slot.state = DECODE
-                if slot.req.done:       # max_new_tokens reached (or EOS)
-                    self._finish(i)
+            slot = self.slots[i]
+            toks = [int(x) for x in emitted[i]]
+            if isinstance(w, PrefillWork):
+                slot.fresh = False
+                slot.pos += w.n_units
+                self.metrics.record_prefill(w.n_units)
+                if toks:
+                    first = not slot.req.out_tokens
+                    slot.req.out_tokens.extend(toks)
+                    if first:
+                        self.metrics.record_first_token(slot.req.rid)
+                if not w.final:
+                    continue
+                if self.runner.autoregressive:
+                    # prompt fully cached: the final chunk emitted the
+                    # next generated token (token #1 for fresh requests;
+                    # the resume point after a preemption)
+                    slot.last_token = slot.req.out_tokens[-1]
+                    slot.state = DECODE
+                    if slot.req.done:   # max_new_tokens reached (or EOS)
+                        self._finish(i)
+                else:
+                    self._finish(i)     # reads end with their last chunk
             else:
-                self._finish(i)         # reads end with their last chunk
+                slot.pos += 1           # last_token now cached at pos
+                token = toks[0]
+                slot.req.out_tokens.append(token)
+                slot.last_token = token
+                if slot.req.done:
+                    self._finish(i)
 
     def _ensure_decode_blocks(self) -> None:
         """Every DECODE slot writes position ``slot.pos`` this tick;
@@ -323,29 +410,6 @@ class ServingEngine:
         self.metrics.record_preempt(req.rid)
         self.queue.appendleft(req)
         self.slots[i] = _Slot()
-
-    def _decode_tick(self) -> None:
-        if not self.runner.autoregressive:
-            return
-        self._ensure_decode_blocks()
-        live = [i for i, s in enumerate(self.slots) if s.state == DECODE]
-        if not live:
-            return
-        views: List[Optional[DecodeView]] = [None] * self.n_slots
-        for i in live:
-            s = self.slots[i]
-            views[i] = DecodeView(s.last_token, s.pos, s.req)
-        t0 = self.metrics.clock()
-        nxt = self.runner.decode_tick(views)                    # syncs
-        self.metrics.record_decode(len(live), self.metrics.clock() - t0)
-        for i in live:
-            slot = self.slots[i]
-            slot.pos += 1               # last_token now cached at pos
-            token = int(nxt[i])
-            slot.req.out_tokens.append(token)
-            slot.last_token = token
-            if slot.req.done:
-                self._finish(i)
 
     def _finish(self, i: int) -> None:
         slot = self.slots[i]

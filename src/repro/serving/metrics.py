@@ -4,7 +4,9 @@ depth, paged-pool utilization.
 Everything is host-side bookkeeping around an injectable clock (tests
 pass a fake clock for determinism). ``summary()`` condenses to the
 numbers the CLI / bench print: decode tokens/s, time-to-first-token
-percentiles, queue depth, slot occupancy, block-pool utilization,
+percentiles (p50/p95/p99), per-tick decode-interval jitter (p50/p99 of
+the gap between decode-bearing ticks — the number unified mixed ticks
+exist to flatten), queue depth, slot occupancy, block-pool utilization,
 preemption count.
 
 Bounded mode (``max_samples``): long-running serves must not grow host
@@ -60,6 +62,11 @@ class ServingMetrics:
         self.queue_depth_samples = _samples()
         self.active_samples = _samples()
         self.pool_util_samples = _samples()
+        # wall-clock gap between consecutive decode-bearing ticks — the
+        # decode-interval jitter reservoir (p50 = steady cadence, p99 =
+        # the stall an admission injects under split-tick scheduling)
+        self.decode_interval_samples = _samples()
+        self._last_decode_time: Optional[float] = None
         self.done_count = 0             # exact even when `requests` rolls
         self.gen_count = 0
         self.preempts = 0
@@ -116,6 +123,10 @@ class ServingMetrics:
         self.pool_util_samples.append(pool_util)
 
     def record_decode(self, n_tokens: int, dt: float) -> None:
+        now = self.clock()
+        if self._last_decode_time is not None:
+            self.decode_interval_samples.append(now - self._last_decode_time)
+        self._last_decode_time = now
         self.decode_steps += 1
         self.decode_tokens += n_tokens
         self.decode_time += dt
@@ -134,6 +145,7 @@ class ServingMetrics:
         qd = list(self.queue_depth_samples)
         act = list(self.active_samples)
         pu = list(self.pool_util_samples)
+        di = list(self.decode_interval_samples)
         return {
             "requests_done": self.done_count,
             "generated_tokens": gen,
@@ -146,7 +158,11 @@ class ServingMetrics:
             "prefill_tokens": self.prefill_tokens,
             "preemptions": self.preempts,
             "ttft_mean_s": (sum(ttfts) / len(ttfts)) if ttfts else float("nan"),
+            "ttft_p50_s": _pct(ttfts, 0.50),
             "ttft_p95_s": _pct(ttfts, 0.95),
+            "ttft_p99_s": _pct(ttfts, 0.99),
+            "decode_interval_p50_s": _pct(di, 0.50),
+            "decode_interval_p99_s": _pct(di, 0.99),
             "queue_depth_max": max(qd, default=0),
             "queue_depth_mean": sum(qd) / len(qd) if qd else 0.0,
             "slot_occupancy": sum(act) / len(act) if act else 0.0,

@@ -9,30 +9,46 @@ lives behind a :class:`ModelRunner`:
 ``admit``          stage per-request device state into a slot (e.g. the
                    audio runner's encoder K/V)
 ``alloc_pool``     back payload positions ``[0, upto)`` with pool blocks
-``prefill_chunk``  run one chunk through the model; returns tokens it
-                   commits (the final chunk of an autoregressive prompt
-                   emits exactly the first generated token)
-``decode_tick``    one lockstep token for every live slot (autoregressive
-                   runners only)
+``step``           run ONE co-batched tick: a per-slot work list mixing
+                   :class:`PrefillWork` (one prompt chunk, C tokens) and
+                   :class:`DecodeWork` (one lockstep token) entries —
+                   every scheduled slot advances in one jitted program.
+                   Returns per-slot emitted tokens (empty for mid-prompt
+                   chunks and idle slots; the final chunk of an
+                   autoregressive prompt emits exactly the first
+                   generated token).
 ``reset_row``      release a slot's pool blocks / per-slot runner state
+
+MIGRATION (unified tick): the former ``prefill_chunk(slot, payload,
+pos, fresh, req, final)`` / ``decode_tick(views)`` split is GONE —
+both shapes now arrive through ``step``'s work list (``DecodeView``
+became :class:`DecodeWork`). Custom runners implement ``step`` instead
+of the pair; the engine never calls anything else per tick.
 
 Three registered implementations:
 
 TokenRunner           every token-only arch (dense/moe/ssm/mla/hybrid)
                       over the paged KV pool, with per-request
-                      ``SamplingParams`` (greedy rows stay bit-identical
-                      to the pre-runner engine — the pure-greedy decode
-                      program contains no sampling ops at all).
+                      ``SamplingParams``. Decode-only ticks run the
+                      pure (B, 1) programs (greedy rows stay
+                      bit-identical to the pre-runner engine — the
+                      greedy decode program contains no sampling ops at
+                      all); mixed ticks run one (B, C) program where
+                      decode rows occupy column 0 and prefill rows
+                      carry their chunk, each row unembedding at its
+                      own emitting position.
 EncoderPrefixRunner   whisper-style audio enc-dec: ``encdec.encode`` runs
                       once per request at admission and the per-layer
                       cross-attention K/V is scattered into a per-slot
-                      buffer the decode/chunk programs read; the decoder
+                      buffer the step programs read; the decoder
                       tokens then serve exactly like a token-only arch.
 BasecallerRunner      squiggle-in, bases-out: reads stream through the
                       CTC basecaller as fixed-size halo-padded chunks
                       (bit-identical to the whole-read forward — see
                       ``repro.models.basecaller.model``) with an
-                      incremental greedy/beam CTC merge per slot. Not
+                      incremental greedy/beam CTC merge per slot. Every
+                      scheduled slot's window batches into ONE forward
+                      per tick (per-row read-edge bounds). Not
                       autoregressive: a read finishes with its last
                       chunk and never occupies a decode slot.
 
@@ -59,8 +75,18 @@ class Chunk(NamedTuple):
     n_units: int
 
 
-class DecodeView(NamedTuple):
-    """What a runner needs to decode one live slot for one tick."""
+class PrefillWork(NamedTuple):
+    """One scheduled prompt chunk for one slot in a unified tick."""
+    payload: Any                # one Chunk's payload
+    n_units: int                # logical positions the chunk advances
+    pos: int                    # positions already consumed before it
+    fresh: bool                 # first chunk: invalidate the slot's row
+    final: bool                 # last chunk of the payload
+    req: Any                    # repro.serving.engine.Request
+
+
+class DecodeWork(NamedTuple):
+    """One scheduled lockstep decode token for one slot."""
     last_token: int
     pos: int
     req: Any                    # repro.serving.engine.Request
@@ -95,11 +121,13 @@ class ModelRunner:
     def pool_util(self) -> float:
         return 0.0
 
-    def prefill_chunk(self, slot: int, payload, pos: int, fresh: bool,
-                      req, final: bool) -> List[int]:
-        raise NotImplementedError
-
-    def decode_tick(self, views: List[Optional["DecodeView"]]) -> np.ndarray:
+    def step(self, works: List[Optional[Any]]) -> List[List[int]]:
+        """Run one co-batched tick. ``works`` has one entry per slot:
+        a :class:`PrefillWork`, a :class:`DecodeWork`, or None (idle).
+        Returns the tokens each slot commits this tick (one per decode
+        row; the emitted token for a final prefill chunk; ``[]`` for
+        mid-prompt chunks and idle slots — basecaller chunks may emit
+        several bases)."""
         raise NotImplementedError
 
 
@@ -108,23 +136,31 @@ class ModelRunner:
 
 
 class TokenRunner(ModelRunner):
-    """Drives ``decode_step_slots`` (lockstep ``(B, 1)`` decode + ``(1,
-    C)`` chunked prefill) over a paged :class:`CachePool`, with
-    vectorized per-request sampling.
+    """Drives ``decode_step_slots`` over a paged :class:`CachePool`,
+    with vectorized per-request sampling, in two tick shapes:
 
-    Two decode programs are kept: the pure-greedy one is byte-for-byte
-    the pre-SamplingParams program (argmax only — the greedy-parity
-    regression gate), and the sampling one adds the per-row top-k/top-p/
-    Gumbel work. A tick uses the sampling program only when a live row
-    actually samples; greedy rows inside it still take exact argmax.
+    - DECODE-ONLY ticks run the lockstep ``(B, 1)`` programs. The
+      pure-greedy one is byte-for-byte the pre-SamplingParams program
+      (argmax only — the greedy-parity regression gate); the sampling
+      one adds the per-row top-k/top-p/Gumbel work and is used only
+      when a live row actually samples.
+    - MIXED ticks (any prefill work scheduled) run ONE ``(B, C)``
+      program: decode rows occupy column 0 with their single token,
+      prefill rows carry up to C chunk tokens, a per-row ``fresh``
+      vector folds slot recycling into the step, and ``logits_at``
+      unembeds each row at its own emitting position. Sampling rows
+      are packed only for rows that emit this tick (decode rows and
+      final chunks); mid-prompt chunks pack as greedy — their token is
+      discarded.
 
     ``attn_backend`` (``auto``/``xla``/``pallas``) picks the decode-
     attention read path (``repro.kernels.ops``): ``pallas`` computes
-    decode ticks directly from the paged block arena (fused kernel, no
-    per-layer logical-view gather), ``xla`` keeps the gather reference;
-    ``auto`` resolves to pallas on TPU. Chunked-prefill steps always
-    run the reference (multi-token), which applies the identical
-    masking — emitted tokens do not depend on the backend.
+    both tick shapes directly from the paged block arena (the C == 1
+    fused kernel for decode-only ticks, the multi-token chunk variant
+    inside mixed ticks — no per-layer logical-view gather either way),
+    ``xla`` keeps the gather reference; ``auto`` resolves to pallas on
+    TPU. Both backends apply the identical masking contract, so
+    emitted tokens do not depend on the backend.
     """
 
     autoregressive = True
@@ -158,7 +194,6 @@ class TokenRunner(ModelRunner):
     def _build_programs(self) -> None:
         cfg, tfm = self.cfg, self._tfm
         reset_spec = self.pool.reset_spec
-        slot_axes = self.pool.slot_axes
 
         # Greedy argmax / sampling happen on-device inside the jitted
         # programs: the host sees token ids, not (B,1,vocab) logits —
@@ -183,41 +218,32 @@ class TokenRunner(ModelRunner):
                                                   attn_backend=backend)
             return sample_tokens(logits[:, 0, :], sp), npool
 
-        def chunk_row(pool, tok, t, slot, fresh, last, tables, ekv, p):
-            row = CachePool.gather_row(pool, slot, slot_axes)
-            # recycle the slot in-chunk, per the cache's own reset spec
-            # (mask stale positions / zero SSM recurrent state; arena
-            # bytes are shared and stay put — the empty pos row is what
-            # keeps a recycled block's old KV out of attention)
-            row = CachePool.mask_fresh(row, fresh, reset_spec)
-            ekv_row = None if ekv is None else jax.tree.map(
-                lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1),
-                ekv)
-            # chunk steps are multi-token: the backend dispatch falls
-            # back to the gather reference for C > 1 (same masking, same
-            # tokens) and fuses only when prefill_chunk == 1
-            logits, nrow = tfm.decode_step_slots(p, row, tok, t, cfg,
-                                                 logits_at=last,
-                                                 tables=tables,
-                                                 enc_kv=ekv_row,
-                                                 attn_backend=backend)
-            return logits, CachePool.scatter_row(pool, nrow, slot, slot_axes)
+        def step_body(p, pool, tok, t, fresh, last, tables, ekv):
+            # recycle every freshly admitted row in-step, per the
+            # cache's own reset spec (mask stale positions / zero SSM
+            # recurrent state; arena bytes are shared and stay put —
+            # the empty pos row is what keeps a recycled block's old KV
+            # out of attention)
+            pool = CachePool.mask_fresh_rows(pool, fresh, reset_spec)
+            return tfm.decode_step_slots(p, pool, tok, t, cfg,
+                                         logits_at=last, tables=tables,
+                                         enc_kv=ekv, attn_backend=backend)
 
-        def chunk_greedy(p, pool, tok, t, slot, fresh, last, tables, ekv):
-            logits, npool = chunk_row(pool, tok, t, slot, fresh, last,
-                                      tables, ekv, p)
-            return jnp.argmax(logits[0, 0]).astype(jnp.int32), npool
+        def step_greedy(p, pool, tok, t, fresh, last, tables, ekv):
+            logits, npool = step_body(p, pool, tok, t, fresh, last,
+                                      tables, ekv)
+            return jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32), \
+                npool
 
-        def chunk_sampled(p, pool, tok, t, slot, fresh, last, tables, sp,
-                          ekv):
-            logits, npool = chunk_row(pool, tok, t, slot, fresh, last,
-                                      tables, ekv, p)
-            return sample_tokens(logits[:, 0, :], sp)[0], npool
+        def step_sampled(p, pool, tok, t, fresh, last, tables, sp, ekv):
+            logits, npool = step_body(p, pool, tok, t, fresh, last,
+                                      tables, ekv)
+            return sample_tokens(logits[:, 0, :], sp), npool
 
         self._decode_greedy = jax.jit(decode_greedy, donate_argnums=(1,))
         self._decode_sampled = jax.jit(decode_sampled, donate_argnums=(1,))
-        self._chunk_greedy = jax.jit(chunk_greedy, donate_argnums=(1,))
-        self._chunk_sampled = jax.jit(chunk_sampled, donate_argnums=(1,))
+        self._step_greedy = jax.jit(step_greedy, donate_argnums=(1,))
+        self._step_sampled = jax.jit(step_sampled, donate_argnums=(1,))
 
     # ------------------------------------------------------------ intake
     def validate(self, req) -> None:
@@ -271,43 +297,24 @@ class TokenRunner(ModelRunner):
         return self.pool.block_stats()["util"]
 
     # ------------------------------------------------------------ device
-    def prefill_chunk(self, slot: int, payload, pos: int, fresh: bool,
-                      req, final: bool) -> List[int]:
-        C = self.chunk_tokens
-        n = len(payload)
-        tok = np.zeros((1, C), np.int32)
-        tok[0, :n] = payload
-        t = np.full((1, C), -1, np.int32)
-        t[0, :n] = pos + np.arange(n)
-        args = (self.params, self.pool.caches, tok, t, np.int32(slot),
-                np.int32(fresh), np.int32(n - 1),
-                self.pool.table_rows(slot))
-        # only the FINAL chunk's token is ever used, so mid-prompt chunks
-        # always run the cheap greedy program (cache updates are identical
-        # in both; the sampled program's sort/top-k/Gumbel work would be
-        # discarded)
-        if final and req.sampling.temperature > 0:
-            sp = pack_rows([(req.sampling, req.rid, len(req.out_tokens))])
-            tok0, self.pool.caches = self._chunk_sampled(*args, sp,
-                                                         self.enc_kv)
-        else:
-            tok0, self.pool.caches = self._chunk_greedy(*args, self.enc_kv)
-        # the prompt's final chunk emits generated token #1 (the argmax/
-        # sample at the last real position); mid-prompt chunks emit
-        # nothing (their speculative token is discarded)
-        return [int(tok0)] if final else []
+    def step(self, works: List[Optional[Any]]) -> List[List[int]]:
+        if any(isinstance(w, PrefillWork) for w in works):
+            return self._step_mixed(works)
+        return self._step_decode_only(works)
 
-    def decode_tick(self, views: List[Optional[DecodeView]]) -> np.ndarray:
+    def _step_decode_only(self, works) -> List[List[int]]:
+        """Pure-decode tick: the lockstep (B, 1) programs, byte-for-byte
+        the pre-unified-tick decode path (the greedy-parity gate)."""
         B = self.n_slots
         tok = np.zeros((B, 1), np.int32)
         t = np.full((B, 1), -1, np.int32)
         rows: List[Optional[Tuple]] = [None] * B
-        for i, v in enumerate(views):
-            if v is None:
+        for i, w in enumerate(works):
+            if w is None:
                 continue
-            tok[i, 0] = v.last_token
-            t[i, 0] = v.pos
-            rows[i] = (v.req.sampling, v.req.rid, len(v.req.out_tokens))
+            tok[i, 0] = w.last_token
+            t[i, 0] = w.pos
+            rows[i] = (w.req.sampling, w.req.rid, len(w.req.out_tokens))
         tables = self.pool.device_tables()
         if any_sampled(rows):
             toks, self.pool.caches = self._decode_sampled(
@@ -316,7 +323,51 @@ class TokenRunner(ModelRunner):
         else:
             toks, self.pool.caches = self._decode_greedy(
                 self.params, self.pool.caches, tok, t, tables, self.enc_kv)
-        return np.asarray(toks)                                 # syncs
+        toks = np.asarray(toks)                                 # syncs
+        return [[int(toks[i])] if w is not None else []
+                for i, w in enumerate(works)]
+
+    def _step_mixed(self, works) -> List[List[int]]:
+        """Mixed tick: decode rows (column 0) and prefill chunks share
+        one (B, C) program — chunked admissions no longer stall decode
+        for the running slots. Every row's logits are read at its own
+        emitting position; only decode rows and final chunks commit
+        their token (mid-prompt chunk tokens are speculative and
+        discarded, so those rows pack as greedy — the sampled program's
+        sort/top-k/Gumbel work would be thrown away)."""
+        B, C = self.n_slots, self.chunk_tokens
+        tok = np.zeros((B, C), np.int32)
+        t = np.full((B, C), -1, np.int32)
+        fresh = np.zeros((B,), np.int32)
+        last = np.zeros((B,), np.int32)
+        rows: List[Optional[Tuple]] = [None] * B
+        for i, w in enumerate(works):
+            if w is None:
+                continue
+            if isinstance(w, DecodeWork):
+                tok[i, 0] = w.last_token
+                t[i, 0] = w.pos
+                rows[i] = (w.req.sampling, w.req.rid, len(w.req.out_tokens))
+                continue
+            n = len(w.payload)
+            tok[i, :n] = w.payload
+            t[i, :n] = w.pos + np.arange(n)
+            fresh[i] = int(w.fresh)
+            last[i] = n - 1
+            if w.final and w.req.sampling.temperature > 0:
+                rows[i] = (w.req.sampling, w.req.rid, len(w.req.out_tokens))
+        tables = self.pool.device_tables()
+        args = (self.params, self.pool.caches, tok, t, fresh, last, tables)
+        if any_sampled(rows):
+            toks, self.pool.caches = self._step_sampled(
+                *args, pack_rows(rows), self.enc_kv)
+        else:
+            toks, self.pool.caches = self._step_greedy(*args, self.enc_kv)
+        toks = np.asarray(toks)                                 # syncs
+        return [[int(toks[i])]
+                if w is not None and (isinstance(w, DecodeWork) or w.final)
+                else []
+                for i, w in enumerate(works)]
 
 
 # ---------------------------------------------------------------------------
@@ -410,6 +461,13 @@ class BasecallerRunner(ModelRunner):
     (``alloc_pool`` always succeeds, so reads are never preempted), and
     a read finishes with its final chunk. Slot/admission/queue machinery
     — and the metrics — are shared with the LM runners unchanged.
+
+    A tick batches EVERY scheduled slot's window into one fixed-shape
+    ``(n_slots, W, 1)`` forward (idle rows are zero windows with
+    ``read_len == 0`` — their frames mask to the read-edge value and
+    are never read), with per-row ``(B,)`` start/read_len bounds; each
+    row's core frames stay bit-identical to the whole-read forward, so
+    batching changes throughput, not output.
     """
 
     autoregressive = False
@@ -464,21 +522,36 @@ class BasecallerRunner(ModelRunner):
         return 0.0
 
     # ------------------------------------------------------------ device
-    def prefill_chunk(self, slot: int, payload, pos: int, fresh: bool,
-                      req, final: bool) -> List[int]:
-        window, n_frames, start, read_len = payload
-        lp = np.asarray(self._fwd(self.params, self.state, window[None],
-                                  np.int32(start), np.int32(read_len)))
+    def step(self, works: List[Optional[Any]]) -> List[List[int]]:
+        B = self.n_slots
+        W = self.core + 2 * self.halo
+        wins = np.zeros((B, W, 1), np.float32)
+        start = np.zeros((B,), np.int32)
+        read_len = np.zeros((B,), np.int32)     # 0 = idle row: all masked
+        for i, w in enumerate(works):
+            if w is None:
+                continue
+            window, _, st, rl = w.payload
+            wins[i] = window
+            start[i] = st
+            read_len[i] = rl
+        lp = np.asarray(self._fwd(self.params, self.state, wins, start,
+                                  read_len))
         f0 = self.halo // self.stride
-        core = lp[0, f0:f0 + n_frames]
-        merge = self._merge[slot]
-        out = merge.feed(core if self.beam else np.argmax(core, axis=-1))
-        if final:
-            out = out + merge.finalize()
+        out: List[List[int]] = []
+        for i, w in enumerate(works):
+            if w is None:
+                out.append([])
+                continue
+            _, n_frames, _, _ = w.payload
+            core = lp[i, f0:f0 + n_frames]
+            merge = self._merge[i]
+            toks = merge.feed(core if self.beam
+                              else np.argmax(core, axis=-1))
+            if w.final:
+                toks = toks + merge.finalize()
+            out.append(toks)
         return out
-
-    def decode_tick(self, views) -> np.ndarray:
-        raise RuntimeError("BasecallerRunner has no decode phase")
 
 
 # ---------------------------------------------------------------------------

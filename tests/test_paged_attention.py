@@ -8,13 +8,19 @@ Gates:
   ``prompt + max_new - 1 == cache_len`` boundary.
 - fused-vs-reference numeric parity for the GQA and MLA kernels across
   paged configs (small blocks, block_len == cache_len, sliding-window
-  ring, GQA grouping, pad rows, poisoned recycled blocks).
+  ring, GQA grouping, pad rows, poisoned recycled blocks) — for BOTH
+  the C == 1 decode tick and the C > 1 chunk variants (chunks crossing
+  block boundaries, chunk == block_len exact fit, mixed chunk+decode
+  row batches, bf16 arenas).
 - the fused path contains NO logical-view gather (jaxpr inspection) —
   the ``(B, T*block_len)`` per-layer materialisation the kernel exists
   to remove; the reference path must still contain it (oracle check).
+  Gated at C == 1 AND on a C > 1 mixed tick.
 - end-to-end engine token parity, xla vs pallas(interpret), per cache
   family — dense/GQA, MLA, hybrid ring, audio cross-attn — including
-  block recycling and preemption/resume.
+  block recycling and preemption/resume; plus co-batched vs split-tick
+  vs prefill-budgeted scheduling parity (mixed ticks must be a timing
+  change only).
 - runtime interpret resolution (the import-time INTERPRET pin fix).
 
 On CPU the fused kernel runs in Pallas interpret mode, so the kernel
@@ -223,19 +229,132 @@ def test_mla_fused_matches_reference(bl, T):
                                rtol=1e-5, atol=1e-5)
 
 
-def test_chunk_steps_fall_back_to_reference():
-    """C > 1 (chunked prefill) always takes the reference path — the
-    fused kernel is a decode-tick (C == 1) specialisation."""
-    rs = np.random.RandomState(3)
-    B, Hkv, hd, bl, T = 1, 2, 16, 4, 3
-    k, v, pos, t, table = _mk_paged(rs, 3, Hkv, hd, bl, T, 3 * T + 2)
-    k, v = k, v
-    q = jnp.asarray(rs.randn(B, 4, 4, hd), jnp.float32)
-    tc = jnp.asarray([[2, 3, 4, 5]], jnp.int32)
-    a = ops.decode_gqa(q, k, v, pos[:1], tc, table=table[:1], backend="xla")
-    b = ops.decode_gqa(q, k, v, pos[:1], tc, table=table[:1],
-                       backend="pallas")
-    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+# -------------------------------------- chunk (C > 1) kernel numeric parity
+
+
+def _mk_paged_chunk(rs, B, Hkv, hd, bl, T, n_blocks, C, fills,
+                    poison=99.0):
+    """Arena state as ``decode_gqa`` sees it MID-CHUNK: each row's first
+    ``fills[b]`` positions written, PLUS the C chunk tokens at
+    ``[fills[b], fills[b]+C)`` — the layer scatters the chunk's K/V
+    before the attention read, so causality-within-chunk is carried by
+    the per-query position mask alone. Everything unwritten is poisoned
+    (stale-KV trap). Returns t: (B, C) per-query positions."""
+    Leff = T * bl
+    k = np.full((n_blocks, bl, Hkv, hd), poison, np.float32)
+    v = np.full((n_blocks, bl, Hkv, hd), poison, np.float32)
+    table = np.full((B, T), -1, np.int32)
+    pos = np.full((B, Leff), EMPTY_POS, np.int32)
+    free = list(range(n_blocks))
+    t = np.zeros((B, C), np.int32)
+    for b in range(B):
+        n = fills[b]
+        assert n + C <= Leff
+        t[b] = np.arange(n, n + C)
+        for j in range(T):                # blocks covering [0, n+C)
+            if j * bl <= n + C - 1:
+                table[b, j] = free.pop(rs.randint(len(free)))
+        for p in range(n + C):
+            blk, off = table[b, p // bl], p % bl
+            k[blk, off] = rs.randn(Hkv, hd)
+            v[blk, off] = rs.randn(Hkv, hd)
+            pos[b, p] = p
+    return (jnp.asarray(k), jnp.asarray(v), jnp.asarray(pos),
+            jnp.asarray(t), jnp.asarray(table))
+
+
+def _chunk_fills(bl, T, C):
+    """Per-row chunk start positions covering the interesting layouts:
+    a chunk CROSSING a block boundary (start bl-1), a block-aligned
+    start, prompt-start (0) and a deep row near the end of the ring."""
+    Leff = T * bl
+    return [min(bl - 1, Leff - C), min(bl, Leff - C), 0, Leff - C]
+
+
+@pytest.mark.parametrize("group,window,bl,T,C",
+                         [(1, 0, 4, 4, 3),     # dense, boundary-crossing
+                          (2, 0, 4, 4, 4),     # GQA, chunk == block_len
+                          (4, 0, 16, 1, 5),    # contiguous-degenerate
+                          (2, 7, 4, 4, 3),     # SWA ring window
+                          (2, 5, 2, 8, 6)])    # chunk spans 3+ tiny blocks
+def test_gqa_chunk_fused_matches_reference(group, window, bl, T, C):
+    """The multi-token fused kernel == gather reference for C > 1 chunk
+    prefill: per-query causal masking (query c attends [0, t_c]),
+    boundary-crossing chunks, the chunk == block_len exact fit, GQA
+    grouping and sliding windows, on a poisoned arena."""
+    rs = np.random.RandomState(group * 100 + window * 10 + bl + C)
+    B, Hkv, hd = 4, 2, 16
+    H = Hkv * group
+    k, v, pos, t, table = _mk_paged_chunk(rs, B, Hkv, hd, bl, T,
+                                          B * T + 2, C,
+                                          _chunk_fills(bl, T, C))
+    q = jnp.asarray(rs.randn(B, C, H, hd), jnp.float32)
+    ref = ops.decode_gqa(q, k, v, pos, t, window=window, table=table,
+                         backend="xla")
+    fused = ops.decode_gqa(q, k, v, pos, t, window=window, table=table,
+                           backend="pallas")
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_gqa_chunk_mixed_rows_and_pads():
+    """The mixed-tick shape: chunk rows co-batched with a decode row
+    (single token in column 0, the rest padded ``t < 0``) and a fully
+    padded free slot. Live queries match the reference; pad queries are
+    finite garbage (the l == 0 guard) and must not leak poison."""
+    rs = np.random.RandomState(17)
+    B, Hkv, hd, bl, T, C = 4, 2, 16, 4, 4, 3
+    k, v, pos, t, table = _mk_paged_chunk(rs, B, Hkv, hd, bl, T,
+                                          B * T + 2, C,
+                                          _chunk_fills(bl, T, C))
+    t = np.asarray(t).copy()
+    t[1, 1:] = -1                 # row 1: a decode row padded to C
+    t[2, :] = -1                  # row 2: free slot, all pad
+    t = jnp.asarray(t)
+    q = jnp.asarray(rs.randn(B, C, Hkv * 2, hd), jnp.float32)
+    ref = ops.decode_gqa(q, k, v, pos, t, table=table, backend="xla")
+    fused = ops.decode_gqa(q, k, v, pos, t, table=table, backend="pallas")
+    live = np.asarray(t) >= 0                     # (B, C) query validity
+    np.testing.assert_allclose(np.asarray(fused)[live],
+                               np.asarray(ref)[live], rtol=1e-5, atol=1e-5)
+    assert np.isfinite(np.asarray(fused)).all()
+
+
+def test_gqa_chunk_bf16_cache_dtype_alignment():
+    """bf16 arena through the chunk kernel: both backends compute QK/PV
+    in the cache dtype, so they agree to bf16 rounding."""
+    rs = np.random.RandomState(23)
+    B, Hkv, hd, bl, T, C = 4, 2, 16, 4, 4, 3
+    k, v, pos, t, table = _mk_paged_chunk(rs, B, Hkv, hd, bl, T,
+                                          B * T + 2, C,
+                                          _chunk_fills(bl, T, C))
+    k, v = k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+    q = jnp.asarray(rs.randn(B, C, 4, hd), jnp.float32)
+    ref = ops.decode_gqa(q, k, v, pos, t, table=table, backend="xla")
+    fused = ops.decode_gqa(q, k, v, pos, t, table=table, backend="pallas")
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(ref),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("bl,T,C", [(4, 4, 3), (16, 1, 4), (4, 4, 4)])
+def test_mla_chunk_fused_matches_reference(bl, T, C):
+    """Absorbed-MLA chunk kernel == gather reference for C > 1,
+    including the chunk == block_len exact fit."""
+    rs = np.random.RandomState(bl + T + C)
+    B, H, kvr, rope_d = 4, 4, 16, 8
+    c, kr, pos, t, table = _mk_paged_chunk(rs, B, 1, kvr, bl, T,
+                                           B * T + 2, C,
+                                           _chunk_fills(bl, T, C))
+    c, kr = c[:, :, 0], jnp.asarray(
+        np.asarray(kr)[:, :, 0, :rope_d].copy())
+    qa = jnp.asarray(rs.randn(B, C, H, kvr), jnp.float32)
+    qr = jnp.asarray(rs.randn(B, C, H, rope_d), jnp.float32)
+    ref = ops.decode_mla(qa, qr, c, kr, pos, t, scale=0.17, table=table,
+                         backend="xla")
+    fused = ops.decode_mla(qa, qr, c, kr, pos, t, scale=0.17, table=table,
+                           backend="pallas")
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
 
 
 # ------------------------------------------- no logical-view materialisation
@@ -256,10 +375,13 @@ def _gathers(jaxpr, found):
 
 @pytest.mark.parametrize("backend,expect_gather", [("xla", True),
                                                    ("pallas", False)])
-def test_fused_path_has_no_logical_gather(backend, expect_gather):
-    """The acceptance gate: the fused decode step contains NO gather as
-    large as the (B, T*block_len) logical KV view (the reference must —
-    that is exactly the copy being eliminated)."""
+@pytest.mark.parametrize("C", [1, 4])
+def test_fused_path_has_no_logical_gather(backend, expect_gather, C):
+    """The acceptance gate, for BOTH tick shapes: the fused step
+    contains NO gather as large as the (B, T*block_len) logical KV view
+    (the reference must — that is exactly the copy being eliminated).
+    C == 1 is the lockstep decode-only tick; C == 4 is a mixed tick
+    with a chunk row co-batched against a padded decode row."""
     from repro.models.lm import attention as A
     cfg = get_config("qwen1.5-4b-smoke")
     p = A.make_attn_params(jax.random.key(0), cfg)
@@ -267,8 +389,11 @@ def test_fused_path_has_no_logical_gather(backend, expect_gather):
     Hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
     cache = A.init_attn_cache_paged(cfg, B, bl * T, Nb, bl,
                                     dtype=jnp.float32)
-    x = jnp.zeros((B, 1, cfg.d_model), jnp.float32)
-    t = jnp.asarray([[3], [5]], jnp.int32)
+    x = jnp.zeros((B, C, cfg.d_model), jnp.float32)
+    if C == 1:
+        t = jnp.asarray([[3], [5]], jnp.int32)
+    else:                    # mixed tick: chunk row + padded decode row
+        t = jnp.asarray([[3, 4, 5, 6], [5, -1, -1, -1]], jnp.int32)
     table = jnp.zeros((B, T), jnp.int32)
     jaxpr = jax.make_jaxpr(
         lambda *a: A.attn_decode_slots(*a, cfg, table=table,
@@ -339,6 +464,25 @@ def test_engine_backend_parity_families(arch):
     ref, _ = _drain(arch, "xla", spec, cache_len=48)
     fused, _ = _drain(arch, "pallas", spec, cache_len=48)
     assert fused == ref
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-4b-smoke", "mamba2-130m-smoke",
+                                  "deepseek-v3-671b-smoke",
+                                  "whisper-tiny-smoke"])
+def test_engine_cobatch_matches_split_tick(arch):
+    """Unified mixed ticks are a SCHEDULING change only: the co-batched
+    engine (default), the same engine under a tight per-tick prefill
+    budget, and the legacy split-tick schedule (``co_batch=False``)
+    produce token-identical outputs for every cache family — the
+    pre-refactor-parity acceptance gate."""
+    spec = [(6, 8), (10, 5), (3, 6)]
+    split, _ = _drain(arch, "xla", spec, cache_len=48, co_batch=False)
+    mixed, me = _drain(arch, "xla", spec, cache_len=48)
+    assert mixed == split
+    assert me.metrics.prefill_chunks > 0
+    budget, _ = _drain(arch, "xla", spec, cache_len=48,
+                       max_prefill_tokens=4)
+    assert budget == split
 
 
 # ------------------------------------------------- runtime interpret pin
