@@ -38,6 +38,12 @@ Poisson arrivals through the unified co-batched scheduler and the
 legacy split-tick one, asserts token parity between the modes, and
 reports TTFT p50/p99 + decode-interval jitter p50/p99 for both.
 
+Quantized-arena section (PR 7): ``bench_quantized`` serves the same
+workload under bf16/fp8/int8 cache policies at equal slots, reports
+honest total cache bytes (arena + scale leaves + pos + state), and
+gates fused-vs-reference token parity over the int8 arena plus the
+>= 1.8x byte-reduction floor for the best quantized policy.
+
 Smoke mode (``run(emit)`` registry / CLI default) runs all four arch
 families' smoke configs on CPU (quant variants on qwen only);
 ``--arch``/``--slots``/... scale it up on real hardware.
@@ -506,6 +512,98 @@ def bench_paged_attention(emit, arch: str = "qwen1.5-4b-smoke",
             "fused (pallas) vs reference (xla) decode token mismatch")
 
 
+def bench_quantized(emit, arch: str = "qwen1.5-4b-smoke", slots: int = 2,
+                    oversub: int = 2, prompt_len: int = 8,
+                    max_tokens: int = 12, prefill_chunk: int = 4,
+                    block_len: int = 8, seed: int = 0) -> None:
+    """Quantized KV arena at EQUAL SLOTS (PR 7): serve the same greedy
+    workload under bf16 / fp8 / int8 cache policies and report honest
+    total cache bytes (``CachePool.nbytes_by_class`` — arena + scale
+    leaves + pos + SSM state), decode tok/s, and token parity vs the
+    bf16 row. Gates:
+
+    - fused-vs-reference token parity over the QUANTIZED arena (the
+      int8 scale leaves ride the Pallas kernels as extra operands and
+      the XLA gather dequantizes identically) — hard assert;
+    - best quantized policy's total-cache-bytes reduction >= 1.8x vs
+      bf16 (deterministic shape math, not timing; skipped with a marker
+      when the platform lacks fp8 AND head_dim is too small for int8's
+      scale overhead to amortize) — hard assert;
+    - decode tok/s no worse than bf16 — emitted as a ``__SLOWER``
+      marker (CPU timing jitters; TPU runs read the same section).
+
+    int8 token drift vs bf16 is REPORTED, not asserted: a quantized
+    cache is a numerics change, unlike the backend comparison."""
+    from repro.serving.cache import fp8_supported
+    cfg = get_config(arch)
+    cache_len = prompt_len + max_tokens
+    params = api.init_params(jax.random.key(0), cfg)
+    workload = make_workload(cfg, slots, oversub, prompt_len, max_tokens,
+                             seed)
+
+    def build(policy, backend="xla"):
+        return ServingEngine(params, cfg, n_slots=slots,
+                             cache_len=cache_len,
+                             prefill_chunk=prefill_chunk,
+                             cache_dtype=jnp.dtype(cfg.dtype),
+                             quant_policy=policy, block_len=block_len,
+                             attn_backend=backend)
+
+    rows = {}
+    for mode in ("bf16", "fp8", "int8"):
+        engine = build(mode)
+        run_engine(engine, workload)                     # warm/compile
+        best_tps, out = 0.0, None
+        for _ in range(3):
+            _, out = run_engine(engine, workload)
+            best_tps = max(best_tps,
+                           engine.metrics.summary()["decode_tokens_per_s"])
+        pool = engine.pool
+        rows[mode] = (best_tps, pool.nbytes(), pool.nbytes_by_class(),
+                      out, pool.quant_policy.describe())
+    base_tps, base_bytes, base_by, base_out, _ = rows["bf16"]
+    for mode in ("bf16", "fp8", "int8"):
+        tps, total, by, out, resolved = rows[mode]
+        parity = out == base_out
+        emit(f"serving_quant_{mode}", total,
+             f"decode={tps:.1f}tok/s;cache_bytes={total};"
+             f"arena={by['arena']};scales={by['scales']};"
+             f"pos={by['pos']};state={by['state']};"
+             f"vs_bf16={base_bytes/max(total,1):.2f}x;"
+             f"resolved={resolved};"
+             f"tokens_vs_bf16={'ok' if parity else 'drift'}")
+        if mode != "bf16" and tps < base_tps:
+            emit(f"serving_quant_{mode}__SLOWER", 0.0,
+                 f"{tps:.1f}<{base_tps:.1f}tok/s")
+
+    # fused-vs-reference parity over the int8 arena: scales must reach
+    # the kernel and dequantize identically to the gather reference
+    eng_p = build("int8", "pallas")
+    run_engine(eng_p, workload)
+    _, out_p = run_engine(eng_p, workload)
+    fused_parity = out_p == rows["int8"][3]
+    emit("serving_quant_attn_backend_parity", 0.0,
+         f"parity={'ok' if fused_parity else 'MISMATCH'};policy=int8")
+    if not fused_parity:
+        raise AssertionError(
+            "int8 arena: fused (pallas) vs reference (xla) decode "
+            "token mismatch — scale leaves diverge between backends")
+
+    best_ratio = max(base_bytes / max(rows[m][1], 1)
+                     for m in ("fp8", "int8"))
+    if not fp8_supported() and best_ratio < 1.8:
+        emit("serving_quant_ratio__SKIPPED", best_ratio,
+             "no fp8 on this platform and int8 scale overhead dominates "
+             "at smoke head_dim")
+    else:
+        emit("serving_quant_ratio", best_ratio,
+             f"best_vs_bf16={best_ratio:.2f}x;floor=1.8x")
+        if best_ratio < 1.8:
+            raise AssertionError(
+                f"quantized cache only {best_ratio:.2f}x smaller than "
+                f"bf16 (floor 1.8x at equal slots)")
+
+
 def bench_mixed_ticks(emit, arch: str = "qwen1.5-4b-smoke", slots: int = 4,
                       prompt_len: int = 24, max_tokens: int = 20,
                       prefill_chunk: int = 4, max_prefill_tokens: int = 8,
@@ -610,6 +708,7 @@ def run(emit) -> None:
         bench(emit, arch=arch, wbits_list=wbits, tag_arch=True)
     bench_paged(emit)
     bench_paged_attention(emit)
+    bench_quantized(emit, slots=4, prompt_len=16, max_tokens=24)
     bench_mixed_ticks(emit, slots=4, prompt_len=32, max_tokens=24,
                       prefill_chunk=4, max_prefill_tokens=8)
     bench_sampling(emit, slots=4, oversub=2, prompt_len=16, max_tokens=24,
@@ -625,7 +724,9 @@ def run_smoke(emit) -> None:
     in interpret mode on CPU), a mixed-traffic scheduling section
     (co-batched vs split-tick token parity + TTFT/decode-jitter
     percentiles under Poisson arrivals), a mixed greedy+sampled decode section
-    (determinism + greedy isolation), and a basecaller-runner section
+    (determinism + greedy isolation), a quantized-arena section
+    (bf16/fp8/int8 cache bytes + tok/s, int8 fused-vs-reference token
+    parity, the 1.8x byte floor), and a basecaller-runner section
     (reads/s + CTC-merge parity vs the offline whole-read basecall).
     Minutes, not tens of minutes — the full four-family / quant sweep
     stays in the slow job (``run``)."""
@@ -633,6 +734,7 @@ def run_smoke(emit) -> None:
           prompt_len=8, max_tokens=12, prefill_chunk=4, wbits_list=(0,))
     bench_paged(emit, base_slots=2, cache_len=24, block_len=8)
     bench_paged_attention(emit)
+    bench_quantized(emit)
     bench_mixed_ticks(emit, slots=2, prompt_len=16, max_tokens=12,
                       prefill_chunk=4, max_prefill_tokens=4)
     bench_sampling(emit)

@@ -1,3 +1,7 @@
 from repro.core.qabas.space import SearchSpace, DEFAULT_SPACE
 from repro.core.qabas.latency import latency_table, expected_latency
 from repro.core.qabas.search import QABASConfig, run_search, derive_config
+from repro.core.qabas.serving import (ServingKnobs, KnobResult,
+                                      enumerate_knobs, measure_knobs,
+                                      search_serving_knobs,
+                                      format_knob_table)

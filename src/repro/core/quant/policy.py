@@ -104,7 +104,23 @@ def quantize_tree(params: Dict[str, Any], policy: QuantPolicy,
                        or tag.endswith(("/wi", "/wg", "/wo")))
         if wb in (4, 8) and hasattr(leaf, "ndim") and leaf.ndim >= 2 \
                 and leaf.size >= min_size and quantizable:
-            out.append(quantize_tensor(leaf, wb))
+            conv = (tag.endswith("/dw") or tag.endswith("/pw")
+                    or "head_pw" in tag or "skip_pw" in tag)
+            if conv and leaf.ndim == 3:
+                # Conv weights pack in the 2-D layouts the fused Pallas
+                # ``qconv1d`` kernel consumes — depthwise (k, 1, C) ->
+                # (k, C), pointwise (1, Cin, Cout) -> (Cin, Cout) — with
+                # ``orig_shape`` keeping the conv layout for the XLA
+                # fallback. int4's K-axis nibble packing does not apply
+                # to convs, so conv leaves clamp to int8.
+                w2 = leaf.reshape((leaf.shape[0], leaf.shape[2])
+                                  if leaf.shape[1] == 1 and leaf.shape[0] > 1
+                                  else leaf.shape[1:])
+                pt = quantize_tensor(w2, 8)
+                out.append(PackedTensor(pt.data, pt.scale, pt.bits,
+                                        tuple(leaf.shape)))
+            else:
+                out.append(quantize_tensor(leaf, wb))
         else:
             out.append(leaf)
     return jax.tree_util.tree_unflatten(treedef, out)

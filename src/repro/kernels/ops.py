@@ -73,6 +73,8 @@ def decode_gqa(q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array,
                t: jax.Array, *, window: int = 0,
                table: Optional[jax.Array] = None,
                backend: Optional[str] = None,
+               k_scale: Optional[jax.Array] = None,
+               v_scale: Optional[jax.Array] = None,
                interpret: Optional[bool] = None,
                shard_kv: Optional[Callable] = None) -> jax.Array:
     """Decode attention over slot-pool KV — the one read path both
@@ -94,8 +96,19 @@ def decode_gqa(q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array,
     arena with an identity table. ``shard_kv`` optionally constrains
     the gathered reads (flash-decoding sharding annotation; reference
     path only).
+
+    ``k_scale``/``v_scale``: int8-arena dequant scales (n_blocks,
+    block_len, Hkv) fp32 — paged layout only. The fused path DMAs them
+    alongside their value blocks and dequantizes in-register; the
+    reference gathers them with the SAME clamped indices and
+    dequantizes through the identical :func:`pa.dequantize_kv`
+    expression, so backend token-parity holds at int8 too.
     """
     B, C, H, hd = q.shape
+    quantized = k_scale is not None
+    if quantized and table is None:
+        raise ValueError("int8 KV scales require the paged layout "
+                         "(contiguous caches store bf16/fp8 directly)")
     if backend == "pallas":
         if table is None:
             karena, varena = k, v          # (B, L, Hkv, hd) == B blocks of L
@@ -107,10 +120,12 @@ def decode_gqa(q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array,
             group = H // Hkv
             qh = q.reshape(B, Hkv, group, hd)
             o = pa.gqa_paged_p(qh, karena, varena, pos, t[:, 0], tbl,
-                               window=window, interpret=interpret)
+                               window=window, k_scale=k_scale,
+                               v_scale=v_scale, interpret=interpret)
             return o.reshape(B, 1, H * hd)
         return pa.gqa_paged_chunk_p(q, karena, varena, pos, t, tbl,
-                                    window=window, interpret=interpret)
+                                    window=window, k_scale=k_scale,
+                                    v_scale=v_scale, interpret=interpret)
     if table is not None:
         Hkv = k.shape[2]
         bl = k.shape[1]
@@ -118,6 +133,11 @@ def decode_gqa(q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array,
         Leff = table.shape[1] * bl
         k_read = k[gidx].reshape(B, Leff, Hkv, hd)
         v_read = v[gidx].reshape(B, Leff, Hkv, hd)
+        if quantized:
+            k_read = pa.dequantize_kv(
+                k_read, k_scale[gidx].reshape(B, Leff, Hkv))
+            v_read = pa.dequantize_kv(
+                v_read, v_scale[gidx].reshape(B, Leff, Hkv))
         if shard_kv is not None:
             k_read = shard_kv(k_read)
             v_read = shard_kv(v_read)
@@ -130,6 +150,8 @@ def decode_mla(q_abs: jax.Array, q_rope: jax.Array, c: jax.Array,
                k_rope: jax.Array, pos: jax.Array, t: jax.Array, *,
                scale: float, table: Optional[jax.Array] = None,
                backend: Optional[str] = None,
+               c_scale: Optional[jax.Array] = None,
+               kr_scale: Optional[jax.Array] = None,
                interpret: Optional[bool] = None,
                shard_kv: Optional[Callable] = None,
                shard_s: Optional[Callable] = None) -> jax.Array:
@@ -138,9 +160,14 @@ def decode_mla(q_abs: jax.Array, q_rope: jax.Array, c: jax.Array,
 
     q_abs: (B, C, H, kvr); q_rope: (B, C, H, rope_d); ``table`` None:
     c/k_rope are (B, L, kvr|rope_d) rows, else latent arenas
-    (n_blocks, block_len, ...). Returns o_lat (B, C, H, kvr) fp32 —
-    the caller applies the absorbed value projection."""
+    (n_blocks, block_len, ...). ``c_scale``/``kr_scale``: int8 latent
+    dequant scales (n_blocks, block_len) fp32, same backend contract
+    as the GQA scales. Returns o_lat (B, C, H, kvr) fp32 — the caller
+    applies the absorbed value projection."""
     B, C, H, kvr = q_abs.shape
+    quantized = c_scale is not None
+    if quantized and table is None:
+        raise ValueError("int8 latent scales require the paged layout")
     if backend == "pallas":
         if table is None:
             carena, krarena = c, k_rope
@@ -150,17 +177,23 @@ def decode_mla(q_abs: jax.Array, q_rope: jax.Array, c: jax.Array,
         if C == 1:
             o = pa.mla_paged_p(q_abs[:, 0], q_rope[:, 0], carena, krarena,
                                pos, t[:, 0], tbl, scale=scale,
+                               c_scale=c_scale, kr_scale=kr_scale,
                                interpret=interpret)
             return o[:, None]
         return pa.mla_paged_chunk_p(q_abs, q_rope, carena, krarena, pos,
-                                    t, tbl, scale=scale,
-                                    interpret=interpret)
+                                    t, tbl, scale=scale, c_scale=c_scale,
+                                    kr_scale=kr_scale, interpret=interpret)
     if table is not None:
         bl = c.shape[1]
         gidx = jnp.maximum(table, 0)
         Leff = table.shape[1] * bl
         c_read = c[gidx].reshape(B, Leff, kvr)
         kr_read = k_rope[gidx].reshape(B, Leff, k_rope.shape[-1])
+        if quantized:
+            c_read = pa.dequantize_kv(c_read,
+                                      c_scale[gidx].reshape(B, Leff))
+            kr_read = pa.dequantize_kv(kr_read,
+                                       kr_scale[gidx].reshape(B, Leff))
         if shard_kv is not None:
             c_read = shard_kv(c_read)
             kr_read = shard_kv(kr_read)

@@ -111,6 +111,37 @@ def valid_mask(pos: jax.Array, t: jax.Array, window: int = 0) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# int8 arena quantization (shared by the cache write path, the fused
+# kernels, and the XLA gather reference — ONE rounding rule, so fused-vs-
+# reference parity holds at every cache dtype)
+
+
+QSCALE_MIN = 1e-8      # scale floor: an all-zero vector stays exactly 0
+
+
+def quantize_kv(x: jax.Array, axis: int = -1):
+    """Symmetric per-vector int8 quantization over the feature ``axis``
+    (per token per KV head for attention, per token for MLA latents).
+    Returns ``(q int8, scale fp32)`` with ``axis`` dropped from the
+    scale shape. Written at the same scatter indices as the values, so
+    scales can never go stale independently of their bytes."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=axis)
+    scale = jnp.maximum(amax / 127.0, QSCALE_MIN)
+    q = jnp.clip(jnp.round(xf / jnp.expand_dims(scale, axis)), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16,
+                  axis: int = -1) -> jax.Array:
+    """Inverse of :func:`quantize_kv` — fp32 multiply, then cast to the
+    compute dtype (bf16, matching the 1-byte-cache convention). Both
+    backends MUST dequantize through this exact expression."""
+    return (q.astype(jnp.float32)
+            * jnp.expand_dims(scale.astype(jnp.float32), axis)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
 # XLA reference backend (the pre-fusion gather path, verbatim)
 
 
@@ -168,9 +199,13 @@ def mla_reference(q_abs: jax.Array, q_rope: jax.Array, c_read: jax.Array,
 # Fused Pallas backend — GQA
 
 
-def _gqa_kernel(tbl_ref, t_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
-                m_ref, l_ref, acc_ref, *, scale: float, window: int,
-                nT: int):
+def _gqa_kernel(tbl_ref, t_ref, q_ref, k_ref, v_ref, *rest,
+                scale: float, window: int, nT: int, quantized: bool = False):
+    if quantized:      # int8 arena rides with per-token-per-head scales
+        ks_ref, vs_ref, pos_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        pos_ref, o_ref, m_ref, l_ref, acc_ref = rest
+        ks_ref = vs_ref = None
     b, j = pl.program_id(0), pl.program_id(2)
 
     @pl.when(j == 0)
@@ -185,14 +220,19 @@ def _gqa_kernel(tbl_ref, t_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
     @pl.when(tbl_ref[b, j] >= 0)
     def _body():
         # mirror the reference's compute dtypes (gqa_reference): QK/PV
-        # inputs in the cache dtype (bf16 for f8 storage), fp32 scores/
-        # stats/accumulation — keeps fused-vs-reference numerics matched
-        # for bf16 caches, not just the fp32 parity-suite configs
+        # inputs in the cache dtype (bf16 for 1-byte storage — int8
+        # dequantizes in-register through the same quantize_kv rule the
+        # reference uses), fp32 scores/stats/accumulation — keeps
+        # fused-vs-reference numerics matched at every cache dtype
         cdt = jnp.bfloat16 if jnp.dtype(k_ref.dtype).itemsize == 1 \
             else k_ref.dtype
         q = q_ref[0, 0].astype(cdt)                    # (group, hd)
-        k = k_ref[0, :, 0].astype(cdt)                 # (bl, hd)
-        v = v_ref[0, :, 0].astype(cdt)
+        if quantized:
+            k = dequantize_kv(k_ref[0, :, 0], ks_ref[0, :, 0])  # (bl, hd)
+            v = dequantize_kv(v_ref[0, :, 0], vs_ref[0, :, 0])
+        else:
+            k = k_ref[0, :, 0].astype(cdt)             # (bl, hd)
+            v = v_ref[0, :, 0].astype(cdt)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         pos = pos_ref[0]                               # (bl,) int32
@@ -219,6 +259,8 @@ def _gqa_kernel(tbl_ref, t_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
 
 def gqa_paged_p(q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array,
                 t: jax.Array, table: jax.Array, *, window: int = 0,
+                k_scale: jax.Array | None = None,
+                v_scale: jax.Array | None = None,
                 interpret: bool | None = None) -> jax.Array:
     """Fused paged GQA decode. q: (B, Hkv, group, hd); k/v: arenas
     (n_blocks, block_len, Hkv, hd); pos: (B, T*block_len); t: (B,);
@@ -228,25 +270,33 @@ def gqa_paged_p(q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array,
     prefetch operand, so each step's index_map DMAs arena block
     ``table[b, j]`` straight into VMEM — the logical (B, T*block_len)
     view is never materialised. Rows with no valid position produce
-    garbage (the scheduler ignores them)."""
+    garbage (the scheduler ignores them).
+
+    ``k_scale``/``v_scale`` (int8 arenas only): fp32 scale arenas
+    (n_blocks, block_len, Hkv), DMA'd per grid step alongside their
+    value block via the SAME index_map and dequantized in-register."""
     B, Hkv, group, hd = q.shape
     bl = k.shape[1]
     T = table.shape[1]
+    quantized = k_scale is not None
     kern = functools.partial(_gqa_kernel, scale=hd ** -0.5, window=window,
-                             nT=T)
+                             nT=T, quantized=quantized)
+    kv_spec = pl.BlockSpec(
+        (1, bl, 1, hd),
+        lambda b, h, j, tbl, t: (jnp.maximum(tbl[b, j], 0), 0, h, 0))
+    sc_spec = pl.BlockSpec(
+        (1, bl, 1),
+        lambda b, h, j, tbl, t: (jnp.maximum(tbl[b, j], 0), 0, h))
+    in_specs = [
+        pl.BlockSpec((1, 1, group, hd), lambda b, h, j, tbl, t: (b, h, 0, 0)),
+        kv_spec, kv_spec,
+        *([sc_spec, sc_spec] if quantized else []),
+        pl.BlockSpec((1, bl), lambda b, h, j, tbl, t: (b, j)),
+    ]
     spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                      # table, t
         grid=(B, Hkv, T),
-        in_specs=[
-            pl.BlockSpec((1, 1, group, hd), lambda b, h, j, tbl, t: (b, h, 0, 0)),
-            pl.BlockSpec((1, bl, 1, hd),
-                         lambda b, h, j, tbl, t: (jnp.maximum(tbl[b, j], 0),
-                                                  0, h, 0)),
-            pl.BlockSpec((1, bl, 1, hd),
-                         lambda b, h, j, tbl, t: (jnp.maximum(tbl[b, j], 0),
-                                                  0, h, 0)),
-            pl.BlockSpec((1, bl), lambda b, h, j, tbl, t: (b, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, group, hd),
                                lambda b, h, j, tbl, t: (b, h, 0, 0)),
         scratch_shapes=[
@@ -255,19 +305,25 @@ def gqa_paged_p(q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array,
             pltpu.VMEM((group, hd), jnp.float32),
         ],
     )
+    args = (q, k, v) + ((k_scale, v_scale) if quantized else ()) + (pos,)
     return pl.pallas_call(
         kern, grid_spec=spec,
         out_shape=jax.ShapeDtypeStruct((B, Hkv, group, hd), q.dtype),
         interpret=_interpret(interpret),
-    )(table.astype(jnp.int32), t.astype(jnp.int32), q, k, v, pos)
+    )(table.astype(jnp.int32), t.astype(jnp.int32), *args)
 
 
 # ---------------------------------------------------------------------------
 # Fused Pallas backend — MLA (absorbed latent form)
 
 
-def _mla_kernel(tbl_ref, t_ref, qa_ref, qr_ref, c_ref, kr_ref, pos_ref,
-                o_ref, m_ref, l_ref, acc_ref, *, scale: float, nT: int):
+def _mla_kernel(tbl_ref, t_ref, qa_ref, qr_ref, c_ref, kr_ref, *rest,
+                scale: float, nT: int, quantized: bool = False):
+    if quantized:      # int8 latent arena: per-token fp32 scale rows
+        cs_ref, krs_ref, pos_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        pos_ref, o_ref, m_ref, l_ref, acc_ref = rest
+        cs_ref = krs_ref = None
     b, j = pl.program_id(0), pl.program_id(1)
 
     @pl.when(j == 0)
@@ -279,12 +335,17 @@ def _mla_kernel(tbl_ref, t_ref, qa_ref, qr_ref, c_ref, kr_ref, pos_ref,
     @pl.when(tbl_ref[b, j] >= 0)
     def _body():
         # compute dtypes mirror mla_reference: latent/rope dots take the
-        # cache dtype with fp32 accumulation; softmax stats fp32
-        cdt = c_ref.dtype
+        # cache dtype (bf16 once an int8 block is dequantized) with fp32
+        # accumulation; softmax stats fp32
+        if quantized:
+            c = dequantize_kv(c_ref[0], cs_ref[0])     # (bl, kvr) bf16
+            kr = dequantize_kv(kr_ref[0], krs_ref[0])  # (bl, rope_d)
+        else:
+            c = c_ref[0]                               # (bl, kvr)
+            kr = kr_ref[0]                             # (bl, rope_d)
+        cdt = c.dtype
         qa = qa_ref[0].astype(cdt)                     # (H, kvr)
-        qr = qr_ref[0].astype(kr_ref.dtype)            # (H, rope_d)
-        c = c_ref[0]                                   # (bl, kvr)
-        kr = kr_ref[0]                                 # (bl, rope_d)
+        qr = qr_ref[0].astype(kr.dtype)                # (H, rope_d)
         s = jax.lax.dot_general(qa, c, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         s = s + jax.lax.dot_general(qr, kr, (((1,), (1,)), ((), ())),
@@ -311,31 +372,41 @@ def _mla_kernel(tbl_ref, t_ref, qa_ref, qr_ref, c_ref, kr_ref, pos_ref,
 def mla_paged_p(q_abs: jax.Array, q_rope: jax.Array, c: jax.Array,
                 kr: jax.Array, pos: jax.Array, t: jax.Array,
                 table: jax.Array, *, scale: float,
+                c_scale: jax.Array | None = None,
+                kr_scale: jax.Array | None = None,
                 interpret: bool | None = None) -> jax.Array:
     """Fused paged absorbed-MLA decode. q_abs: (B, H, kvr); q_rope:
     (B, H, rope_d); c/kr: latent arenas (n_blocks, block_len, kvr|
     rope_d); pos: (B, T*block_len); t: (B,); table: (B, T). Returns
     o_lat (B, H, kvr) fp32 — probability-weighted latent rows; the
-    caller applies the absorbed value projection."""
+    caller applies the absorbed value projection. ``c_scale``/
+    ``kr_scale`` (int8 arenas only): per-token fp32 scale arenas
+    (n_blocks, block_len) riding the same index_map as their blocks."""
     B, H, kvr = q_abs.shape
     rope_d = q_rope.shape[-1]
     bl = c.shape[1]
     T = table.shape[1]
-    kern = functools.partial(_mla_kernel, scale=scale, nT=T)
+    quantized = c_scale is not None
+    kern = functools.partial(_mla_kernel, scale=scale, nT=T,
+                             quantized=quantized)
+    sc_spec = pl.BlockSpec(
+        (1, bl), lambda b, j, tbl, t: (jnp.maximum(tbl[b, j], 0), 0))
+    in_specs = [
+        pl.BlockSpec((1, H, kvr), lambda b, j, tbl, t: (b, 0, 0)),
+        pl.BlockSpec((1, H, rope_d), lambda b, j, tbl, t: (b, 0, 0)),
+        pl.BlockSpec((1, bl, kvr),
+                     lambda b, j, tbl, t: (jnp.maximum(tbl[b, j], 0),
+                                           0, 0)),
+        pl.BlockSpec((1, bl, rope_d),
+                     lambda b, j, tbl, t: (jnp.maximum(tbl[b, j], 0),
+                                           0, 0)),
+        *([sc_spec, sc_spec] if quantized else []),
+        pl.BlockSpec((1, bl), lambda b, j, tbl, t: (b, j)),
+    ]
     spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, T),
-        in_specs=[
-            pl.BlockSpec((1, H, kvr), lambda b, j, tbl, t: (b, 0, 0)),
-            pl.BlockSpec((1, H, rope_d), lambda b, j, tbl, t: (b, 0, 0)),
-            pl.BlockSpec((1, bl, kvr),
-                         lambda b, j, tbl, t: (jnp.maximum(tbl[b, j], 0),
-                                               0, 0)),
-            pl.BlockSpec((1, bl, rope_d),
-                         lambda b, j, tbl, t: (jnp.maximum(tbl[b, j], 0),
-                                               0, 0)),
-            pl.BlockSpec((1, bl), lambda b, j, tbl, t: (b, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, H, kvr), lambda b, j, tbl, t: (b, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((H, 1), jnp.float32),
@@ -343,12 +414,13 @@ def mla_paged_p(q_abs: jax.Array, q_rope: jax.Array, c: jax.Array,
             pltpu.VMEM((H, kvr), jnp.float32),
         ],
     )
+    args = (q_abs, q_rope, c, kr) \
+        + ((c_scale, kr_scale) if quantized else ()) + (pos,)
     return pl.pallas_call(
         kern, grid_spec=spec,
         out_shape=jax.ShapeDtypeStruct((B, H, kvr), jnp.float32),
         interpret=_interpret(interpret),
-    )(table.astype(jnp.int32), t.astype(jnp.int32), q_abs, q_rope, c, kr,
-      pos)
+    )(table.astype(jnp.int32), t.astype(jnp.int32), *args)
 
 
 # ---------------------------------------------------------------------------
@@ -366,9 +438,14 @@ def mla_paged_p(q_abs: jax.Array, q_rope: jax.Array, c: jax.Array,
 # scheduler never reads (their l stays 0; the output is acc/max(l,eps)).
 
 
-def _gqa_chunk_kernel(tbl_ref, q_ref, k_ref, v_ref, tq_ref, pos_ref,
-                      o_ref, m_ref, l_ref, acc_ref, *, scale: float,
-                      window: int, nT: int):
+def _gqa_chunk_kernel(tbl_ref, q_ref, k_ref, v_ref, *rest,
+                      scale: float, window: int, nT: int,
+                      quantized: bool = False):
+    if quantized:
+        ks_ref, vs_ref, tq_ref, pos_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        tq_ref, pos_ref, o_ref, m_ref, l_ref, acc_ref = rest
+        ks_ref = vs_ref = None
     j = pl.program_id(2)
 
     @pl.when(j == 0)
@@ -382,8 +459,12 @@ def _gqa_chunk_kernel(tbl_ref, q_ref, k_ref, v_ref, tq_ref, pos_ref,
         cdt = jnp.bfloat16 if jnp.dtype(k_ref.dtype).itemsize == 1 \
             else k_ref.dtype
         q = q_ref[0, 0].astype(cdt)                    # (C*group, hd)
-        k = k_ref[0, :, 0].astype(cdt)                 # (bl, hd)
-        v = v_ref[0, :, 0].astype(cdt)
+        if quantized:
+            k = dequantize_kv(k_ref[0, :, 0], ks_ref[0, :, 0])  # (bl, hd)
+            v = dequantize_kv(v_ref[0, :, 0], vs_ref[0, :, 0])
+        else:
+            k = k_ref[0, :, 0].astype(cdt)             # (bl, hd)
+            v = v_ref[0, :, 0].astype(cdt)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         pos = pos_ref[0]                               # (bl,) int32
@@ -411,6 +492,8 @@ def _gqa_chunk_kernel(tbl_ref, q_ref, k_ref, v_ref, tq_ref, pos_ref,
 def gqa_paged_chunk_p(q: jax.Array, k: jax.Array, v: jax.Array,
                       pos: jax.Array, t: jax.Array, table: jax.Array, *,
                       window: int = 0,
+                      k_scale: jax.Array | None = None,
+                      v_scale: jax.Array | None = None,
                       interpret: bool | None = None) -> jax.Array:
     """Fused paged GQA chunk prefill (C > 1 query tokens per row).
 
@@ -422,7 +505,8 @@ def gqa_paged_chunk_p(q: jax.Array, k: jax.Array, v: jax.Array,
     the query-row axis (query token c, group member g -> row c*group+g)
     and ``t`` expands to a per-row position vector, so each chunk token
     masks against its own causal frontier inside one online-softmax
-    pass over the row's arena blocks."""
+    pass over the row's arena blocks. ``k_scale``/``v_scale``: int8
+    scale arenas as in :func:`gqa_paged_p`."""
     B, C, H, hd = q.shape
     Hkv = k.shape[2]
     group = H // Hkv
@@ -432,22 +516,26 @@ def gqa_paged_chunk_p(q: jax.Array, k: jax.Array, v: jax.Array,
     qf = (q.reshape(B, C, Hkv, group, hd).transpose(0, 2, 1, 3, 4)
           .reshape(B, Hkv, CG, hd))
     tq = jnp.repeat(t.astype(jnp.int32), group, axis=1)      # (B, CG)
+    quantized = k_scale is not None
     kern = functools.partial(_gqa_chunk_kernel, scale=hd ** -0.5,
-                             window=window, nT=T)
+                             window=window, nT=T, quantized=quantized)
+    kv_spec = pl.BlockSpec(
+        (1, bl, 1, hd),
+        lambda b, h, j, tbl: (jnp.maximum(tbl[b, j], 0), 0, h, 0))
+    sc_spec = pl.BlockSpec(
+        (1, bl, 1),
+        lambda b, h, j, tbl: (jnp.maximum(tbl[b, j], 0), 0, h))
+    in_specs = [
+        pl.BlockSpec((1, 1, CG, hd), lambda b, h, j, tbl: (b, h, 0, 0)),
+        kv_spec, kv_spec,
+        *([sc_spec, sc_spec] if quantized else []),
+        pl.BlockSpec((1, CG), lambda b, h, j, tbl: (b, 0)),
+        pl.BlockSpec((1, bl), lambda b, h, j, tbl: (b, j)),
+    ]
     spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,                      # table
         grid=(B, Hkv, T),
-        in_specs=[
-            pl.BlockSpec((1, 1, CG, hd), lambda b, h, j, tbl: (b, h, 0, 0)),
-            pl.BlockSpec((1, bl, 1, hd),
-                         lambda b, h, j, tbl: (jnp.maximum(tbl[b, j], 0),
-                                               0, h, 0)),
-            pl.BlockSpec((1, bl, 1, hd),
-                         lambda b, h, j, tbl: (jnp.maximum(tbl[b, j], 0),
-                                               0, h, 0)),
-            pl.BlockSpec((1, CG), lambda b, h, j, tbl: (b, 0)),
-            pl.BlockSpec((1, bl), lambda b, h, j, tbl: (b, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, CG, hd),
                                lambda b, h, j, tbl: (b, h, 0, 0)),
         scratch_shapes=[
@@ -456,18 +544,24 @@ def gqa_paged_chunk_p(q: jax.Array, k: jax.Array, v: jax.Array,
             pltpu.VMEM((CG, hd), jnp.float32),
         ],
     )
+    args = (qf, k, v) + ((k_scale, v_scale) if quantized else ()) \
+        + (tq, pos)
     o = pl.pallas_call(
         kern, grid_spec=spec,
         out_shape=jax.ShapeDtypeStruct((B, Hkv, CG, hd), q.dtype),
         interpret=_interpret(interpret),
-    )(table.astype(jnp.int32), qf, k, v, tq, pos)
+    )(table.astype(jnp.int32), *args)
     return (o.reshape(B, Hkv, C, group, hd).transpose(0, 2, 1, 3, 4)
             .reshape(B, C, H * hd))
 
 
-def _mla_chunk_kernel(tbl_ref, qa_ref, qr_ref, c_ref, kr_ref, tq_ref,
-                      pos_ref, o_ref, m_ref, l_ref, acc_ref, *,
-                      scale: float, nT: int):
+def _mla_chunk_kernel(tbl_ref, qa_ref, qr_ref, c_ref, kr_ref, *rest,
+                      scale: float, nT: int, quantized: bool = False):
+    if quantized:
+        cs_ref, krs_ref, tq_ref, pos_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        tq_ref, pos_ref, o_ref, m_ref, l_ref, acc_ref = rest
+        cs_ref = krs_ref = None
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -478,11 +572,15 @@ def _mla_chunk_kernel(tbl_ref, qa_ref, qr_ref, c_ref, kr_ref, tq_ref,
 
     @pl.when(tbl_ref[pl.program_id(0), j] >= 0)
     def _body():
-        cdt = c_ref.dtype
+        if quantized:
+            c = dequantize_kv(c_ref[0], cs_ref[0])     # (bl, kvr) bf16
+            kr = dequantize_kv(kr_ref[0], krs_ref[0])  # (bl, rope_d)
+        else:
+            c = c_ref[0]                               # (bl, kvr)
+            kr = kr_ref[0]                             # (bl, rope_d)
+        cdt = c.dtype
         qa = qa_ref[0].astype(cdt)                     # (C*H, kvr)
-        qr = qr_ref[0].astype(kr_ref.dtype)            # (C*H, rope_d)
-        c = c_ref[0]                                   # (bl, kvr)
-        kr = kr_ref[0]                                 # (bl, rope_d)
+        qr = qr_ref[0].astype(kr.dtype)                # (C*H, rope_d)
         s = jax.lax.dot_general(qa, c, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         s = s + jax.lax.dot_general(qr, kr, (((1,), (1,)), ((), ())),
@@ -510,6 +608,8 @@ def _mla_chunk_kernel(tbl_ref, qa_ref, qr_ref, c_ref, kr_ref, tq_ref,
 def mla_paged_chunk_p(q_abs: jax.Array, q_rope: jax.Array, c: jax.Array,
                       kr: jax.Array, pos: jax.Array, t: jax.Array,
                       table: jax.Array, *, scale: float,
+                      c_scale: jax.Array | None = None,
+                      kr_scale: jax.Array | None = None,
                       interpret: bool | None = None) -> jax.Array:
     """Fused paged absorbed-MLA chunk prefill (C > 1).
 
@@ -518,7 +618,8 @@ def mla_paged_chunk_p(q_abs: jax.Array, q_rope: jax.Array, c: jax.Array,
     t: (B, C) per-query positions; table: (B, T). Returns o_lat
     (B, C, H, kvr) fp32 — chunk folded into the query-row axis (row
     c*H + h), per-query causal mask, same arena DMA as
-    :func:`mla_paged_p`."""
+    :func:`mla_paged_p`. ``c_scale``/``kr_scale``: int8 scale arenas
+    (n_blocks, block_len)."""
     B, C, H, kvr = q_abs.shape
     rope_d = q_rope.shape[-1]
     bl = c.shape[1]
@@ -527,22 +628,28 @@ def mla_paged_chunk_p(q_abs: jax.Array, q_rope: jax.Array, c: jax.Array,
     qaf = q_abs.reshape(B, CH, kvr)
     qrf = q_rope.reshape(B, CH, rope_d)
     tq = jnp.repeat(t.astype(jnp.int32), H, axis=1)          # (B, CH)
-    kern = functools.partial(_mla_chunk_kernel, scale=scale, nT=T)
+    quantized = c_scale is not None
+    kern = functools.partial(_mla_chunk_kernel, scale=scale, nT=T,
+                             quantized=quantized)
+    sc_spec = pl.BlockSpec(
+        (1, bl), lambda b, j, tbl: (jnp.maximum(tbl[b, j], 0), 0))
+    in_specs = [
+        pl.BlockSpec((1, CH, kvr), lambda b, j, tbl: (b, 0, 0)),
+        pl.BlockSpec((1, CH, rope_d), lambda b, j, tbl: (b, 0, 0)),
+        pl.BlockSpec((1, bl, kvr),
+                     lambda b, j, tbl: (jnp.maximum(tbl[b, j], 0),
+                                        0, 0)),
+        pl.BlockSpec((1, bl, rope_d),
+                     lambda b, j, tbl: (jnp.maximum(tbl[b, j], 0),
+                                        0, 0)),
+        *([sc_spec, sc_spec] if quantized else []),
+        pl.BlockSpec((1, CH), lambda b, j, tbl: (b, 0)),
+        pl.BlockSpec((1, bl), lambda b, j, tbl: (b, j)),
+    ]
     spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(B, T),
-        in_specs=[
-            pl.BlockSpec((1, CH, kvr), lambda b, j, tbl: (b, 0, 0)),
-            pl.BlockSpec((1, CH, rope_d), lambda b, j, tbl: (b, 0, 0)),
-            pl.BlockSpec((1, bl, kvr),
-                         lambda b, j, tbl: (jnp.maximum(tbl[b, j], 0),
-                                            0, 0)),
-            pl.BlockSpec((1, bl, rope_d),
-                         lambda b, j, tbl: (jnp.maximum(tbl[b, j], 0),
-                                            0, 0)),
-            pl.BlockSpec((1, CH), lambda b, j, tbl: (b, 0)),
-            pl.BlockSpec((1, bl), lambda b, j, tbl: (b, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, CH, kvr), lambda b, j, tbl: (b, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((CH, 1), jnp.float32),
@@ -550,9 +657,11 @@ def mla_paged_chunk_p(q_abs: jax.Array, q_rope: jax.Array, c: jax.Array,
             pltpu.VMEM((CH, kvr), jnp.float32),
         ],
     )
+    args = (qaf, qrf, c, kr) \
+        + ((c_scale, kr_scale) if quantized else ()) + (tq, pos)
     o = pl.pallas_call(
         kern, grid_spec=spec,
         out_shape=jax.ShapeDtypeStruct((B, CH, kvr), jnp.float32),
         interpret=_interpret(interpret),
-    )(table.astype(jnp.int32), qaf, qrf, c, kr, tq, pos)
+    )(table.astype(jnp.int32), *args)
     return o.reshape(B, C, H, kvr)

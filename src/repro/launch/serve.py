@@ -159,8 +159,36 @@ def resolved_backend_label(engine) -> str:
     return backend
 
 
+def resolve_quant_policy(cfg, args):
+    """Admission-time validation of ``--cache-dtype``/``--quant-policy``:
+    an invalid mode or an override naming a group this arch does not
+    have is rejected HERE with a clear error, before any device memory
+    is allocated (fp8 on an unsupported platform is NOT an error — the
+    pool warns and falls back to bf16). Returns the policy spec to hand
+    the runner, or None for the config-dtype default."""
+    spec = args.quant_policy or args.cache_dtype or None
+    if spec is None:
+        return None
+    if cfg.family == "basecaller":
+        raise SystemExit(
+            f"[serve] error: --cache-dtype/--quant-policy configure the "
+            f"paged KV arena; basecaller arch {cfg.name!r} has no KV "
+            f"cache (reads are not autoregressive)")
+    from repro.models.lm import transformer as tfm
+    from repro.serving.cache import CacheQuantPolicy
+    try:
+        policy = CacheQuantPolicy.parse(spec)
+        policy.validate_groups([g for g, _, _ in tfm.group_names(cfg)])
+    except ValueError as e:
+        raise SystemExit(f"[serve] error: invalid cache quantization "
+                         f"spec {spec!r}: {e}")
+    return spec
+
+
 def run_engine(params, cfg, args) -> None:
-    runner_kw = {"attn_backend": args.attn_backend}
+    quant_policy = resolve_quant_policy(cfg, args)
+    runner_kw = {"attn_backend": args.attn_backend,
+                 "quant_policy": quant_policy}
     if cfg.family == "basecaller":
         runner_kw = dict(chunk_samples=args.chunk_samples, beam=args.beam)
     engine = api.make_serving_engine(
@@ -192,11 +220,17 @@ def run_engine(params, cfg, args) -> None:
                   if n_sampled else ""))
         print(f"[serve] sampler mix: {mix}")
         pool = engine.pool
+        by = pool.nbytes_by_class()
         print(f"[serve] paged pool: block_len {pool.block_len}, "
               f"{pool.block_stats()['blocks_total']} blocks "
-              f"({pool.nbytes()/2**20:.1f} MiB cache)"
+              f"({pool.nbytes()/2**20:.2f} MiB cache = "
+              f"{by['arena']/2**20:.2f} arena + "
+              f"{by['scales']/2**20:.2f} scales + "
+              f"{by['pos']/2**20:.2f} pos + "
+              f"{by['state']/2**20:.2f} state)"
               + (f", history_limit {args.history_limit}"
                  if args.history_limit else ""))
+        print(f"[serve] cache quantization: {pool.quant_policy.describe()}")
         print(f"[serve] attn backend: {resolved_backend_label(engine)} "
               f"(requested {args.attn_backend!r}; decode ticks "
               f"{'read the arena fused' if engine.runner.attn_backend == 'pallas' else 'gather the logical view'})")
@@ -284,6 +318,37 @@ def run_static(params, cfg, args) -> None:
     print("[serve] sample:", jnp.concatenate(out_tokens, 1)[0][:16])
 
 
+def run_knob_search(params, cfg, args) -> None:
+    """QABAS-style serving-knob search: rank (cache policy, block_len,
+    attn backend) by measured decode tok/s per cache byte."""
+    if cfg.family == "basecaller":
+        raise SystemExit(
+            f"[serve] error: --knob-search tunes the paged KV arena; "
+            f"basecaller arch {cfg.name!r} has no KV cache")
+    from repro.core.qabas.serving import (format_knob_table,
+                                          search_serving_knobs)
+    backends = ([args.attn_backend] if args.attn_backend != "auto"
+                else ["xla", "pallas"])
+    block_lens = sorted({args.block_len, max(args.block_len // 2, 4)})
+    results = search_serving_knobs(
+        params, cfg, block_lens=block_lens, backends=backends,
+        n_slots=args.slots, cache_len=args.cache_len,
+        prompt_len=min(args.prompt_len, args.cache_len // 2),
+        max_tokens=min(args.tokens, args.cache_len // 2),
+        per_group=args.per_group,
+        budget=args.knob_budget or None, emit=print)
+    print(f"[serve] knob search over {cfg.name}: ranked by measured "
+          f"decode tok/s per cache byte")
+    print(format_knob_table(results))
+    best = results[0]
+    print(f"[serve] best: --quant-policy '{best.knobs.quant_policy}' "
+          f"--block-len {best.knobs.block_len} "
+          f"--attn-backend {best.knobs.attn_backend} "
+          f"({best.decode_tok_s:.1f} tok/s at "
+          f"{best.cache_bytes/2**20:.2f} MiB, "
+          f"{best.bytes_vs_bf16:.2f}x smaller than bf16)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-4b")
@@ -364,6 +429,29 @@ def main():
                          "kernel in interpret mode). The resolved "
                          "backend is reported in the run summary")
     ap.add_argument("--wbits", type=int, default=0, choices=[0, 4, 8])
+    # ---- quantized KV arena (CacheQuantPolicy) ----
+    ap.add_argument("--cache-dtype", default="",
+                    help="uniform KV-arena storage mode: bf16 (default), "
+                         "fp16, fp32, fp8, or int8 (per-block scale "
+                         "leaves, in-kernel dequant). fp8 falls back to "
+                         "bf16 with a warning where the platform lacks "
+                         "float8; invalid modes are rejected at launch")
+    ap.add_argument("--quant-policy", default="",
+                    help="per-layer-group cache policy, e.g. "
+                         "'default=bf16,g1_moe=int8' (group names from "
+                         "the arch's layer groups; unknown groups are "
+                         "rejected at launch). Overrides --cache-dtype")
+    ap.add_argument("--knob-search", action="store_true",
+                    help="QABAS-style serving-knob search: measure "
+                         "per-layer cache dtype x block_len x attn "
+                         "backend on a small greedy workload, print the "
+                         "ranked tok/s-per-cache-byte table, and exit")
+    ap.add_argument("--knob-budget", type=int, default=0,
+                    help="cap measured knob-search candidates (taken in "
+                         "roofline-prior order; 0 = measure all)")
+    ap.add_argument("--per-group", action="store_true",
+                    help="knob search: add the coordinate-descent "
+                         "per-group precision refinement pass")
     args = ap.parse_args()
     if not args.cache_len:
         args.cache_len = args.prompt_len + args.tokens
@@ -379,7 +467,9 @@ def main():
         print(f"[serve] weights quantized to int{args.wbits} "
               f"(packed storage; dequant-on-read)")
 
-    if args.static:
+    if args.knob_search:
+        run_knob_search(params, cfg, args)
+    elif args.static:
         run_static(params, cfg, args)
     else:
         run_engine(params, cfg, args)

@@ -24,6 +24,17 @@ from repro.models.lm.common import Params, truncated_normal_init
 State = Dict[str, jax.Array]
 
 
+def conv_kernel_of(w, dtype) -> jax.Array:
+    """Conv weight leaf -> its ``(K, Cg, Cout)`` array form, dequantizing
+    serving-time :class:`PackedTensor` storage on read (packed 2-D — see
+    ``core.quant.policy.quantize_tree``; ``orig_shape`` keeps the conv
+    layout)."""
+    from repro.core.quant.policy import PackedTensor, dequantize
+    if isinstance(w, PackedTensor):
+        return dequantize(w, dtype).reshape(w.orig_shape)
+    return w.astype(dtype)
+
+
 def _maybe_quant(w: jax.Array, x: jax.Array, cfg: ModelConfig, tag: str):
     if cfg.quant.enabled:
         from repro.core.quant.fake_quant import fake_quant
@@ -92,11 +103,43 @@ def sep_conv(p: Params, s: State, x: jax.Array, cfg: ModelConfig, tag: str,
              *, stride: int = 1, dilation: int = 1, causal: bool = False,
              train: bool = True, relu: bool = True
              ) -> Tuple[jax.Array, State]:
+    from repro.core.quant.policy import PackedTensor
     c_in = x.shape[-1]
-    dw, xq = _maybe_quant(p["dw"].astype(x.dtype), x, cfg, tag + "/dw")
+    dw_p, pw_p = p["dw"], p["pw"]
+    if (isinstance(dw_p, PackedTensor) and isinstance(pw_p, PackedTensor)
+            and not train and stride == 1 and dilation == 1 and not causal
+            and dw_p.bits == 8 and pw_p.bits == 8
+            and pw_p.orig_shape[-2] == pw_p.orig_shape[-1]
+            and cfg.quant.bits_for(tag + "/pw")[0] in (4, 8)):
+        # Fused Pallas route (the config carries QABAS bit-widths for
+        # this layer and both weights serve packed): depthwise ->
+        # pointwise -> folded-BN -> ReLU in one VMEM-resident kernel
+        # over the int8 bytes. Eval-mode only — BN folds its running
+        # stats into the per-channel scale/shift, so state passes
+        # through unchanged.
+        from repro.kernels.ops import qconv1d_block
+        rs = s["bn"]
+        g = p["bn"]["scale"] * jax.lax.rsqrt(rs["var"] + 1e-5)
+        b = p["bn"]["bias"] - rs["mean"] * g
+        h = qconv1d_block(x, dw_p, pw_p, g, b, relu=relu)
+        if relu and cfg.quant.enabled:
+            from repro.core.quant.fake_quant import fake_quant
+            _, ab = cfg.quant.bits_for(tag + "/act")
+            if ab:
+                h = fake_quant(h, ab)
+        return h, {"bn": rs}
+    dw = conv_kernel_of(dw_p, x.dtype)
+    if isinstance(dw_p, PackedTensor):
+        xq = x          # storage is already quantized — no fake-quant
+    else:
+        dw, xq = _maybe_quant(dw, x, cfg, tag + "/dw")
     h = conv1d(xq, dw, stride=stride, groups=c_in, dilation=dilation,
                causal=causal)
-    pw, hq = _maybe_quant(p["pw"].astype(x.dtype), h, cfg, tag + "/pw")
+    pw = conv_kernel_of(pw_p, x.dtype)
+    if isinstance(pw_p, PackedTensor):
+        hq = h
+    else:
+        pw, hq = _maybe_quant(pw, h, cfg, tag + "/pw")
     h = conv1d(hq, pw)
     h, bn_s = batchnorm(p["bn"], s["bn"], h, train=train)
     if relu:
@@ -185,7 +228,7 @@ def block_forward(p: Params, s: State, x: jax.Array, cfg: ModelConfig,
         new_s[f"rep{j}"] = ns
     if cfg.use_skips and "skip_pw" in p:
         gate = 1.0 if skip_gate is None else skip_gate
-        sk = conv1d(x, p["skip_pw"].astype(x.dtype))
+        sk = conv1d(x, conv_kernel_of(p["skip_pw"], x.dtype))
         if stride > 1:
             sk = sk[:, ::stride]
         sk, bn_s = batchnorm(p["skip_bn"], s["skip_bn"], sk, train=train)

@@ -64,7 +64,7 @@ def forward(params: Params, state: State, signal: jax.Array,
                                  bounds=bounds, s_in=s_in)
         new_state[f"block{i:02d}"] = ns
         s_in *= int(cfg.strides[i])
-    logits = bl.conv1d(x, params["head_pw"].astype(x.dtype))
+    logits = bl.conv1d(x, bl.conv_kernel_of(params["head_pw"], x.dtype))
     return jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1), new_state
 
 

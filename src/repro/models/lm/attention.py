@@ -30,7 +30,7 @@ from repro.config import ModelConfig
 # predate the refactor (repro.models.lm.mla, serving/cache, tests).
 from repro.kernels.ops import decode_gqa
 from repro.kernels.paged_attention import (EMPTY_POS, NEG_INF,  # noqa: F401
-                                           paged_indices)
+                                           paged_indices, quantize_kv)
 from repro.models.lm.common import (BATCH_AXES, Params, constrain, dense,
                                     make_dense_params)
 from repro.models.lm.rope import apply_rope
@@ -309,10 +309,16 @@ def cache_specs(window: int = 0):
             "pos": P(None), "window": P()}
 
 
-def attn_cache_reset_spec():
+def attn_cache_reset_spec(quantized: bool = False):
     """Per-leaf slot-recycle action (see repro.serving.cache): KV bytes
-    stay stale-but-masked; only positions are invalidated (O(L) words)."""
-    return {"k": "keep", "v": "keep", "pos": "empty", "window": "keep"}
+    stay stale-but-masked; only positions are invalidated (O(L) words).
+    int8 scale leaves are ``keep`` like the bytes they scale: a stale
+    scale times a stale int8 value is finite garbage the new occupant's
+    empty ``pos`` row masks out, and writes land in lockstep anyway."""
+    spec = {"k": "keep", "v": "keep", "pos": "empty", "window": "keep"}
+    if quantized:
+        spec.update({"k_scale": "keep", "v_scale": "keep"})
+    return spec
 
 
 def fill_cache_from_prefill(cache: Dict, kv: Dict, t0: int = 0) -> Dict:
@@ -364,24 +370,39 @@ def init_attn_cache_paged(cfg: ModelConfig, n_slots: int, cache_len: int,
     arena block; positions stay PER SLOT (``pos: (n_slots, T*block_len)``
     int32 words) so validity masking and the reset-spec recycle machinery
     are unchanged — a recycled arena block's stale KV is masked because
-    the new occupant's ``pos`` row is empty until it writes."""
+    the new occupant's ``pos`` row is empty until it writes.
+
+    int8 ``dtype`` stores a QUANTIZED arena: K/V bytes are int8 and two
+    fp32 scale arenas (``k_scale``/``v_scale``, per block per position
+    per KV head) ride alongside, written at the same scatter indices as
+    their values."""
     Hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
     L = attn_ring_len(cfg, cache_len, window=window)
     T = -(-L // block_len)                     # blocks per slot (ceil)
-    return {
+    cache = {
         "k": jnp.zeros((n_blocks, block_len, Hkv, hd), dtype),
         "v": jnp.zeros((n_blocks, block_len, Hkv, hd), dtype),
         "pos": jnp.full((n_slots, T * block_len), EMPTY_POS, jnp.int32),
         "window": jnp.asarray(window, jnp.int32),
     }
+    if jnp.dtype(dtype) == jnp.dtype(jnp.int8):
+        cache["k_scale"] = jnp.zeros((n_blocks, block_len, Hkv),
+                                     jnp.float32)
+        cache["v_scale"] = jnp.zeros((n_blocks, block_len, Hkv),
+                                     jnp.float32)
+    return cache
 
 
-def attn_cache_slot_axes() -> Dict:
+def attn_cache_slot_axes(quantized: bool = False) -> Dict:
     """Which leaves of the PAGED cache carry a slot axis (axis 1 once
     layer-stacked). Arena leaves (``False``) are shared across slots: the
     serving pool's row gather passes them through whole and its row
-    scatter takes the updated arena back whole."""
-    return {"k": False, "v": False, "pos": True, "window": False}
+    scatter takes the updated arena back whole. Scale leaves (int8
+    arenas) are shared exactly like the bytes they scale."""
+    axes = {"k": False, "v": False, "pos": True, "window": False}
+    if quantized:
+        axes.update({"k_scale": False, "v_scale": False})
+    return axes
 
 
 def attn_decode_slots(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
@@ -443,18 +464,38 @@ def attn_decode_slots(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
     else:
         Nb, bl = cache["k"].shape[0], cache["k"].shape[1]
         wblk, off, lw, _, _ = paged_indices(table, t, Nb, bl)
-        k = cache["k"].at[wblk, off].set(k_new.astype(cache["k"].dtype),
-                                         mode="drop")
-        v = cache["v"].at[wblk, off].set(v_new.astype(cache["v"].dtype),
-                                         mode="drop")
+        quantized = "k_scale" in cache
+        if quantized:
+            # int8 arena: quantize per token per KV head and scatter the
+            # scale at the SAME (wblk, off) as its bytes — lockstep by
+            # construction, so a recycled block can never pair fresh
+            # bytes with a stale scale (or vice versa)
+            kq, ks_new = quantize_kv(k_new)
+            vq, vs_new = quantize_kv(v_new)
+            k = cache["k"].at[wblk, off].set(kq, mode="drop")
+            v = cache["v"].at[wblk, off].set(vq, mode="drop")
+            k_scale = cache["k_scale"].at[wblk, off].set(ks_new,
+                                                         mode="drop")
+            v_scale = cache["v_scale"].at[wblk, off].set(vs_new,
+                                                         mode="drop")
+        else:
+            k = cache["k"].at[wblk, off].set(k_new.astype(cache["k"].dtype),
+                                             mode="drop")
+            v = cache["v"].at[wblk, off].set(v_new.astype(cache["v"].dtype),
+                                             mode="drop")
+            k_scale = v_scale = None
         pos = cache["pos"].at[bidx, lw].set(t, mode="drop")
         o = decode_gqa(
             q, k, v, pos, t, window=window, table=table,
-            backend=attn_backend,
+            backend=attn_backend, k_scale=k_scale, v_scale=v_scale,
             shard_kv=lambda a: constrain(
                 a, P(BATCH_AXES, "model", None, None)))
+    new_cache = {"k": k, "v": v, "pos": pos, "window": cache["window"]}
+    if "k_scale" in cache:
+        new_cache["k_scale"] = k_scale
+        new_cache["v_scale"] = v_scale
     out = dense(p["wo"], o, cfg=cfg, tag="attn/wo")
-    return out, {"k": k, "v": v, "pos": pos, "window": cache["window"]}
+    return out, new_cache
 
 
 def attn_decode(p: Params, x: jax.Array, cache: Dict, t: jax.Array,

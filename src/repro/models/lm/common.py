@@ -47,6 +47,16 @@ def kernel_of(p: Params, dtype) -> jax.Array:
     return w.astype(dtype)
 
 
+def _qmatmul_tiles(m: int, k: int, n: int, bits: int) -> bool:
+    """True when (M, K, N) satisfies ``qmatmul_p``'s tiling contract:
+    every dim divides its ``min(128, dim)`` block, and int4 needs an
+    even K (two nibbles per byte along the reduction axis)."""
+    ok = all(d > 0 and d % min(128, d) == 0 for d in (m, k, n))
+    if bits == 4:
+        ok = ok and k % 2 == 0 and min(128, k) % 2 == 0
+    return ok
+
+
 def dense(p: Params, x: jax.Array, *, cfg: ModelConfig, tag: str = "",
           quantize: bool = True) -> jax.Array:
     """Quantization-aware dense layer — the RUBICON policy hook.
@@ -54,12 +64,27 @@ def dense(p: Params, x: jax.Array, *, cfg: ModelConfig, tag: str = "",
     When the config's :class:`QuantPolicy` is enabled, weights (and
     optionally activations) pass through symmetric fake-quant at the
     per-layer bit-width before the matmul (QAT semantics). Serving-time
-    int8/int4 packed weights (``PackedTensor``) dequantize on read; the
-    Pallas ``qmatmul`` kernel is the explicit TPU path.
+    int8/int4 packed weights (``PackedTensor``) take the Pallas
+    ``qmatmul`` kernel when the config carries QABAS bit-widths for the
+    layer and the shapes satisfy the kernel's tiling contract; otherwise
+    they dequantize on read (same int storage, XLA matmul).
     """
     dt = jnp.dtype(cfg.dtype)
     from repro.core.quant.policy import PackedTensor
     if isinstance(p["kernel"], PackedTensor):
+        w_p = p["kernel"]
+        wb, _ = cfg.quant.bits_for(tag)
+        m = 1
+        for s in x.shape[:-1]:
+            m *= s
+        if (wb in (4, 8) and w_p.data.ndim == 2
+                and _qmatmul_tiles(m, x.shape[-1], w_p.data.shape[-1],
+                                   w_p.bits)):
+            from repro.kernels.ops import qmatmul
+            y = qmatmul(x.astype(dt), w_p)
+            if "bias" in p:
+                y = y + p["bias"].astype(dt)
+            return y
         w = kernel_of(p, dt)
     else:
         w = p["kernel"]

@@ -16,7 +16,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.config import ModelConfig
 from repro.kernels.ops import decode_mla
-from repro.kernels.paged_attention import EMPTY_POS, paged_indices
+from repro.kernels.paged_attention import (EMPTY_POS, paged_indices,
+                                           quantize_kv)
 from repro.models.lm.attention import blockwise_attn
 from repro.models.lm.common import (BATCH_AXES, Params, constrain, dense,
                                     make_dense_params, make_rmsnorm_params,
@@ -116,14 +117,24 @@ def init_mla_cache_paged(cfg: ModelConfig, n_slots: int, cache_len: int,
     recycling are unchanged (see ``attention.init_attn_cache_paged``)."""
     _, _, kvr, _, rope_d, _ = _dims(cfg)
     T = -(-cache_len // block_len)
-    return {"c": jnp.zeros((n_blocks, block_len, kvr), dtype),
-            "k_rope": jnp.zeros((n_blocks, block_len, rope_d), dtype),
-            "pos": jnp.full((n_slots, T * block_len), EMPTY_POS, jnp.int32)}
+    cache = {"c": jnp.zeros((n_blocks, block_len, kvr), dtype),
+             "k_rope": jnp.zeros((n_blocks, block_len, rope_d), dtype),
+             "pos": jnp.full((n_slots, T * block_len), EMPTY_POS,
+                             jnp.int32)}
+    if jnp.dtype(dtype) == jnp.dtype(jnp.int8):
+        # per-token fp32 scales (the latent has no head axis), written
+        # at the same (wblk, off) as their int8 rows
+        cache["c_scale"] = jnp.zeros((n_blocks, block_len), jnp.float32)
+        cache["kr_scale"] = jnp.zeros((n_blocks, block_len), jnp.float32)
+    return cache
 
 
-def mla_cache_slot_axes() -> Dict:
+def mla_cache_slot_axes(quantized: bool = False) -> Dict:
     """Paged-cache leaves with a slot axis (see attn_cache_slot_axes)."""
-    return {"c": False, "k_rope": False, "pos": True}
+    axes = {"c": False, "k_rope": False, "pos": True}
+    if quantized:
+        axes.update({"c_scale": False, "kr_scale": False})
+    return axes
 
 
 def mla_cache_specs():
@@ -132,10 +143,15 @@ def mla_cache_specs():
             "pos": P(BATCH_AXES, None)}
 
 
-def mla_cache_reset_spec():
+def mla_cache_reset_spec(quantized: bool = False):
     """Per-leaf slot-recycle action (see repro.serving.cache): latent
-    bytes stay stale-but-masked; only positions are invalidated."""
-    return {"c": "keep", "k_rope": "keep", "pos": "empty"}
+    bytes stay stale-but-masked; only positions are invalidated. Scale
+    leaves are ``keep`` like the bytes they scale (stale scale x stale
+    int8 = finite garbage the empty ``pos`` row masks out)."""
+    spec = {"c": "keep", "k_rope": "keep", "pos": "empty"}
+    if quantized:
+        spec.update({"c_scale": "keep", "kr_scale": "keep"})
+    return spec
 
 
 def fill_mla_cache(cache: Dict, kv: Dict) -> Dict:
@@ -210,28 +226,50 @@ def mla_decode_slots(p: Params, x: jax.Array, cache: Dict, t: jax.Array,
     else:
         Nb, bl = cache["c"].shape[0], cache["c"].shape[1]
         wblk, off, lw, _, _ = paged_indices(table, t, Nb, bl)
-        c = cache["c"].at[wblk, off].set(c_new.astype(cache["c"].dtype),
-                                         mode="drop")
-        k_rope = cache["k_rope"].at[wblk, off].set(
-            kr_new.astype(cache["k_rope"].dtype), mode="drop")
+        if "c_scale" in cache:
+            # int8 latent arena: per-token scales scattered at the SAME
+            # (wblk, off) as their rows — lockstep by construction
+            cq, cs_new = quantize_kv(c_new)
+            krq, krs_new = quantize_kv(kr_new)
+            c = cache["c"].at[wblk, off].set(cq, mode="drop")
+            k_rope = cache["k_rope"].at[wblk, off].set(krq, mode="drop")
+            c_scale = cache["c_scale"].at[wblk, off].set(cs_new,
+                                                         mode="drop")
+            kr_scale = cache["kr_scale"].at[wblk, off].set(krs_new,
+                                                           mode="drop")
+        else:
+            c = cache["c"].at[wblk, off].set(c_new.astype(cache["c"].dtype),
+                                             mode="drop")
+            k_rope = cache["k_rope"].at[wblk, off].set(
+                kr_new.astype(cache["k_rope"].dtype), mode="drop")
         pos = cache["pos"].at[bidx, lw].set(t, mode="drop")
         shard_kv = lambda a: constrain(a, P(BATCH_AXES, "model", None))
 
+    quantized = "c_scale" in cache
+    # absorbed-form compute dtype: 1-byte storage (fp8/int8) computes in
+    # bf16 — an int8 arena dequantizes to bf16 inside decode_mla
+    cdt = jnp.bfloat16 if jnp.dtype(c.dtype).itemsize == 1 else c.dtype
     # weight absorption: score in latent space. q replicated over 'model',
     # latent cache sequence-sharded (flash-decoding pattern).
     from repro.models.lm.common import kernel_of
     wukv = kernel_of(p["wukv"], jnp.float32).reshape(kvr, H, nope + vd)
     w_uk = wukv[..., :nope]                               # (kvr, H, nope)
     w_uv = wukv[..., nope:]                               # (kvr, H, vd)
-    qf = constrain(q_nope, P(BATCH_AXES, None, None, None)).astype(c.dtype)
-    q_abs = jnp.einsum("bchn,rhn->bchr", qf, w_uk.astype(c.dtype))
+    qf = constrain(q_nope, P(BATCH_AXES, None, None, None)).astype(cdt)
+    q_abs = jnp.einsum("bchn,rhn->bchr", qf, w_uk.astype(cdt))
     o_lat = decode_mla(
         q_abs, q_rope, c, k_rope, pos, t,
         scale=(nope + rope_d) ** -0.5, table=table, backend=attn_backend,
+        c_scale=c_scale if quantized else None,
+        kr_scale=kr_scale if quantized else None,
         shard_kv=shard_kv,
         shard_s=lambda s: constrain(s, P(BATCH_AXES, None, None, "model")))
-    o = jnp.einsum("bchr,rhv->bchv", o_lat.astype(c.dtype),
-                   w_uv.astype(c.dtype))
+    o = jnp.einsum("bchr,rhv->bchv", o_lat.astype(cdt),
+                   w_uv.astype(cdt))
     o = o.reshape(B, C, H * vd).astype(x.dtype)
     out = dense(p["wo"], o, cfg=cfg, tag="mla/wo")
-    return out, {"c": c, "k_rope": k_rope, "pos": pos}
+    new_cache = {"c": c, "k_rope": k_rope, "pos": pos}
+    if quantized:
+        new_cache["c_scale"] = c_scale
+        new_cache["kr_scale"] = kr_scale
+    return out, new_cache

@@ -356,44 +356,75 @@ def init_block_cache_slots(cfg: ModelConfig, kind: str, batch: int,
         cfg, batch, cache_len, window=_block_window(cfg, kind), dtype=dtype)
 
 
+def _group_cache_dtype(cache_dtype, gname, default=jnp.bfloat16):
+    """Per-group storage dtype: ``cache_dtype`` is either one dtype for
+    every group (legacy) or a ``{group name: dtype}`` policy mapping."""
+    if cache_dtype is None:
+        return default
+    if isinstance(cache_dtype, dict):
+        return cache_dtype.get(gname, default)
+    return cache_dtype
+
+
+def _quantized_cache(dtype) -> bool:
+    """int8 storage carries fp32 scale leaves alongside the KV arena;
+    every float storage dtype (incl. fp8 — direct cast) does not."""
+    return jnp.dtype(dtype) == jnp.dtype(jnp.int8)
+
+
+def _state_dtype(dtype):
+    """SSM recurrent state never quantizes: it feeds forward
+    multiplicatively with no masking point, so 1-byte storage would
+    compound error every tick. Sub-2-byte policies keep bf16 state."""
+    return jnp.bfloat16 if jnp.dtype(dtype).itemsize < 2 else dtype
+
+
 def init_block_cache_paged(cfg: ModelConfig, kind: str, n_slots: int,
                            cache_len: int, n_blocks: int, block_len: int,
                            dtype=jnp.bfloat16):
     """Paged slot-pool cache for one block: KV bytes in a shared block
-    arena, positions per slot, SSM state per slot (O(1)/row — nothing to
-    page)."""
+    arena (storage ``dtype``; int8 adds lockstep-written fp32 scale
+    leaves), positions per slot, SSM state per slot (O(1)/row — nothing
+    to page, never quantized)."""
     if kind in ("mla_dense", "mla_moe"):
         return mla_mod.init_mla_cache_paged(cfg, n_slots, cache_len,
                                             n_blocks, block_len, dtype)
     if kind == "ssm":
-        return ssm_mod.init_ssm_cache_slots(cfg, n_slots, dtype)
+        return ssm_mod.init_ssm_cache_slots(cfg, n_slots, _state_dtype(dtype))
     if kind.startswith("hybrid"):
         return {"kv": attn_mod.init_attn_cache_paged(
                     cfg, n_slots, cache_len, n_blocks, block_len,
                     window=_block_window(cfg, kind), dtype=dtype),
-                "ssm": ssm_mod.init_ssm_cache_slots(cfg, n_slots, dtype)}
+                "ssm": ssm_mod.init_ssm_cache_slots(
+                    cfg, n_slots, _state_dtype(dtype))}
     return attn_mod.init_attn_cache_paged(
         cfg, n_slots, cache_len, n_blocks, block_len,
         window=_block_window(cfg, kind), dtype=dtype)
 
 
-def block_cache_slot_axes(cfg: ModelConfig, kind: str):
+def block_cache_slot_axes(cfg: ModelConfig, kind: str, quantized=False):
     """Which leaves of a block's PAGED cache carry a slot axis (axis 1
     once layer-stacked): True = per-slot (row gather/scatter applies),
-    False = shared arena / per-layer scalar (passed through whole)."""
+    False = shared arena / per-layer scalar (passed through whole).
+    ``quantized`` must match the pool's storage (int8 adds shared-arena
+    scale leaves) so the spec pytree stays structurally congruent."""
     if kind in ("mla_dense", "mla_moe"):
-        return mla_mod.mla_cache_slot_axes()
+        return mla_mod.mla_cache_slot_axes(quantized=quantized)
     if kind == "ssm":
         return ssm_mod.ssm_cache_slot_axes()
     if kind.startswith("hybrid"):
-        return {"kv": attn_mod.attn_cache_slot_axes(),
+        return {"kv": attn_mod.attn_cache_slot_axes(quantized=quantized),
                 "ssm": ssm_mod.ssm_cache_slot_axes()}
-    return attn_mod.attn_cache_slot_axes()
+    return attn_mod.attn_cache_slot_axes(quantized=quantized)
 
 
-def caches_slot_axes(cfg: ModelConfig) -> Dict:
-    """Slot-axis pytree matching the :func:`init_caches_paged` pool."""
-    return {gname: block_cache_slot_axes(cfg, kind)
+def caches_slot_axes(cfg: ModelConfig, cache_dtype=None) -> Dict:
+    """Slot-axis pytree matching the :func:`init_caches_paged` pool
+    built with the same ``cache_dtype`` (scalar or per-group dict)."""
+    return {gname: block_cache_slot_axes(
+                cfg, kind,
+                quantized=_quantized_cache(_group_cache_dtype(cache_dtype,
+                                                              gname)))
             for gname, kind, n in group_names(cfg)}
 
 
@@ -413,7 +444,7 @@ def paged_group_layout(cfg: ModelConfig, cache_len: int,
     return out
 
 
-def block_cache_reset_spec(cfg: ModelConfig, kind: str):
+def block_cache_reset_spec(cfg: ModelConfig, kind: str, quantized=False):
     """Per-leaf recycle action for a block's slot cache — a pytree with
     the cache's structure and string leaves: ``"keep"`` (stale bytes are
     masked out by the position check), ``"empty"`` (fill with the
@@ -422,18 +453,24 @@ def block_cache_reset_spec(cfg: ModelConfig, kind: str):
     time). ``repro.serving.cache`` drives ``mask_fresh``/``reset_row``
     off this spec instead of key-name matching."""
     if kind in ("mla_dense", "mla_moe"):
-        return mla_mod.mla_cache_reset_spec()
+        return mla_mod.mla_cache_reset_spec(quantized=quantized)
     if kind == "ssm":
         return ssm_mod.ssm_cache_reset_spec()
     if kind.startswith("hybrid"):
-        return {"kv": attn_mod.attn_cache_reset_spec(),
+        return {"kv": attn_mod.attn_cache_reset_spec(quantized=quantized),
                 "ssm": ssm_mod.ssm_cache_reset_spec()}
-    return attn_mod.attn_cache_reset_spec()
+    return attn_mod.attn_cache_reset_spec(quantized=quantized)
 
 
-def caches_reset_specs(cfg: ModelConfig) -> Dict:
-    """Reset-spec pytree matching the :func:`init_caches_slots` pool."""
-    return {gname: block_cache_reset_spec(cfg, kind)
+def caches_reset_specs(cfg: ModelConfig, cache_dtype=None) -> Dict:
+    """Reset-spec pytree matching the :func:`init_caches_slots` pool
+    (``cache_dtype`` as in :func:`caches_slot_axes` — int8 groups carry
+    ``keep``-reset scale leaves: stale scales are masked exactly like
+    stale KV bytes, via the new occupant's empty ``pos`` row)."""
+    return {gname: block_cache_reset_spec(
+                cfg, kind,
+                quantized=_quantized_cache(_group_cache_dtype(cache_dtype,
+                                                              gname)))
             for gname, kind, n in group_names(cfg)}
 
 
@@ -714,17 +751,21 @@ def init_caches_paged(cfg: ModelConfig, n_slots: int, cache_len: int,
     """Empty PAGED pool caches for the serving engine: per group, KV
     leaves are shared block arenas ``(n_layers, n_blocks[g], block_len,
     ...)``; positions and SSM state stay per slot. ``n_blocks`` maps each
-    paged group name to its arena size (SSM groups are ignored)."""
+    paged group name to its arena size (SSM groups are ignored).
+    ``cache_dtype`` is one storage dtype for every group or a per-group
+    ``{group name: dtype}`` policy mapping (int8 groups grow fp32 scale
+    leaves in the arena)."""
     caches: Dict[str, Any] = {}
     for gname, kind, n in group_names(cfg):
         if kind not in SLOT_KINDS:
             raise NotImplementedError(
                 f"slot cache pool not implemented for block kind {kind!r}")
         nb = n_blocks.get(gname, 0)
+        gdt = _group_cache_dtype(cache_dtype, gname)
 
         def one(_):
             return init_block_cache_paged(cfg, kind, n_slots, cache_len,
-                                          nb, block_len, dtype=cache_dtype)
+                                          nb, block_len, dtype=gdt)
         caches[gname] = jax.vmap(one)(jnp.arange(n))
     return caches
 

@@ -134,6 +134,40 @@ expressing its decode read through ``decode_gqa`` / ``decode_mla``
 instead of gathering KV itself; anything else simply keeps the
 reference path.
 
+Cache quantization policy (fp8/int8 block arenas)
+-------------------------------------------------
+
+WHAT the pool stores is a per-layer-group policy, orthogonal to the
+backend choice above: :class:`~repro.serving.cache.CacheQuantPolicy`
+maps each KV-bearing layer group to a storage mode — ``bf16`` (the
+default), ``fp8`` (``float8_e4m3fn`` bytes, no scales), or ``int8``
+(symmetric per-token-per-head quantization with fp32 scale leaves
+``k_scale``/``v_scale`` — per-token latent scales ``c_scale``/
+``kr_scale`` for MLA — living in the arena alongside their blocks).
+Construct it with ``CachePool(quant_policy=…)`` /
+``ServingEngine(quant_policy=…)`` / ``serve.py --cache-dtype int8`` or
+``--quant-policy "default=bf16,g1_moe=int8"``; a policy naming unknown
+groups fails ADMISSION with the model's real group list, and fp8 on a
+build without fp8 storage falls back to bf16 with a RuntimeWarning —
+never a serve-time crash.
+
+Scales are written IN LOCKSTEP with their K/V bytes — same scatter
+indices, same tick — so a recycled block's stale scales are fenced by
+exactly the same empty ``pos`` row that fences its stale bytes (there
+is no separate scale-invalidation path to get wrong). Reads
+dequantize per backend through one shared expression
+(``paged_attention.dequantize_kv``): the XLA reference gathers scales
+with the same clamped indices as the values; the fused Pallas kernels
+take the scale leaves as extra VMEM operands and dequantize
+in-register, keeping fp32 softmax statistics — so greedy token parity
+across backends holds at every cache dtype
+(tests/test_quantized_serving.py, ``bench_serving --smoke``).
+``CachePool.nbytes()`` counts EVERY leaf — arena bytes, scale leaves,
+pos rows, SSM state — and ``nbytes_by_class()`` splits them, so
+equal-slot byte comparisons can't hide the int8 scale overhead
+(``serve.py`` prints the breakdown; fp8 halves arena bytes with zero
+overhead, int8 halves them plus one fp32 scale per token per head).
+
 Admission policy: ``submit`` rejects only what can never run (runner
 ``validate``: ``prompt + max_new - 1 > cache_len`` — the final token is
 never written — more blocks than the arena holds, or a malformed
@@ -214,6 +248,24 @@ tick (the old scheduler decoded it in the same tick) — token
 sequences, TTFT accounting, and preemption/resume semantics are
 unchanged, but per-tick traces differ. ``co_batch=False`` restores
 the old split-tick schedule exactly.
+
+Migration note (PR 7, quantized serving)
+----------------------------------------
+
+``CachePool(cache_dtype=…)`` still works and now derives a uniform
+:class:`~repro.serving.cache.CacheQuantPolicy` (``jnp.bfloat16`` ->
+``"bf16"`` etc.); pass ``quant_policy=`` for per-group control — it
+wins over ``cache_dtype`` when both are given. ``pool.nbytes()`` now
+includes scale/pos/state leaves it previously ignored, so byte
+numbers logged by older runs read LOW by the bookkeeping share; use
+``nbytes_by_class()["arena"]`` for the old quantity. Serving-time
+packed weights (``PackedTensor``) route decode matmuls through the
+Pallas ``qmatmul``/``qconv1d`` kernels when the model config carries
+8-bit QABAS widths for the layer and the kernel's tiling contract
+holds; they dequantize on read otherwise — same ints, same numbers to
+rounding, no action needed. The serving-knob search over these
+policies lives in ``repro.core.qabas.search_serving_knobs``
+(``serve.py --knob-search``).
 """
 from repro.serving.cache import CachePool
 from repro.serving.engine import Request, ServingEngine

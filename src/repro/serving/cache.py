@@ -43,11 +43,30 @@ Row operations (``gather_row`` / ``scatter_row`` / ``mask_fresh`` /
 modules: SLOT AXES (does this leaf have a slot axis, or is it a shared
 arena passed through whole?) and RESET SPECS (``keep`` / ``empty`` /
 ``zero`` — what slot recycling means for the leaf).
+
+Quantized arenas (``CacheQuantPolicy``)
+---------------------------------------
+Cache precision is a per-layer-group serving policy: each group stores
+its K/V (and MLA latent) leaves as ``bf16`` | ``fp8`` | ``int8``.
+``fp8`` is a pure storage-dtype change (the kernels already compute in
+bf16 for 1-byte caches). ``int8`` adds fp32 SCALE LEAVES to the arena —
+``k_scale``/``v_scale`` of shape ``(n_blocks, block_len, Hkv)`` (MLA:
+``c_scale``/``kr_scale`` at ``(n_blocks, block_len)``) — written at the
+SAME ``(wblk, off)`` indices as the K/V scatter, in the same jitted
+step, so a scale can never be newer or older than the bytes it scales.
+Recycled blocks need no scale reset: a stale scale multiplies a stale
+int8 value into a finite garbage float that the occupant's empty
+``pos`` row masks out, exactly like stale KV bytes (scale leaves are
+``keep``-reset shared-arena leaves). ``nbytes`` sums EVERY leaf —
+arena, scales, positions, SSM state — so equal-bytes comparisons
+between policies are honest.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Any, Dict, List, Optional
+import warnings
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +77,118 @@ from repro.kernels.paged_attention import EMPTY_POS
 from repro.models.lm import transformer as tfm
 
 DEFAULT_BLOCK_LEN = 16
+
+# storage modes a policy may name; fp8 availability is probed at resolve
+CACHE_MODES = ("bf16", "fp8", "int8", "fp16", "fp32")
+
+
+def _mode_dtype(mode: str):
+    table = {"bf16": jnp.bfloat16, "fp16": jnp.float16,
+             "fp32": jnp.float32, "int8": jnp.int8}
+    if mode == "fp8":
+        dt = getattr(jnp, "float8_e4m3fn", None)
+        if dt is None:
+            raise ValueError("fp8 cache mode requested but this JAX build "
+                             "has no float8_e4m3fn dtype")
+        return dt
+    return table[mode]
+
+
+def _dtype_mode(dtype) -> str:
+    """Canonical mode name for a storage dtype (for reports/errors)."""
+    dt = jnp.dtype(dtype)
+    if dt == jnp.dtype(jnp.int8):
+        return "int8"
+    if dt.itemsize == 1:
+        return "fp8"
+    return {2: "bf16" if dt == jnp.dtype(jnp.bfloat16) else "fp16",
+            4: "fp32"}.get(dt.itemsize, str(dt))
+
+
+def fp8_supported() -> bool:
+    """Can this JAX build materialize an fp8 arena? (Compute is bf16
+    either way — storage is the only capability that matters.)"""
+    try:
+        jnp.zeros((1,), _mode_dtype("fp8")).astype(jnp.float32)
+        return True
+    except Exception:
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheQuantPolicy:
+    """Per-layer-group cache storage policy: ``default`` mode plus
+    ``(group, mode)`` overrides, e.g. ``CacheQuantPolicy("int8")`` or
+    ``CacheQuantPolicy("bf16", (("g0_dense", "int8"),))``.
+
+    ``parse`` accepts the CLI grammar: a bare mode (``"int8"``) applies
+    pool-wide; ``"g0_dense=int8,g1_moe=fp8"`` overrides named groups
+    (an optional bare segment or ``default=...`` sets the default).
+    """
+    default: str = "bf16"
+    overrides: Tuple[Tuple[str, str], ...] = ()
+
+    def __post_init__(self):
+        for mode in (self.default,) + tuple(m for _, m in self.overrides):
+            if mode not in CACHE_MODES:
+                raise ValueError(
+                    f"unknown cache mode {mode!r}; choose from {CACHE_MODES}")
+
+    @classmethod
+    def parse(cls, spec) -> "CacheQuantPolicy":
+        if isinstance(spec, CacheQuantPolicy):
+            return spec
+        if spec is None:
+            return cls()
+        if not isinstance(spec, str):        # a raw dtype (legacy kwarg)
+            return cls(_dtype_mode(spec))
+        default, overrides = None, []
+        for seg in filter(None, (s.strip() for s in spec.split(","))):
+            if "=" in seg:
+                g, _, m = seg.partition("=")
+                g, m = g.strip(), m.strip()
+                if g == "default":
+                    default = m
+                else:
+                    overrides.append((g, m))
+            elif default is None:
+                default = seg
+            else:
+                raise ValueError(
+                    f"quant policy {spec!r}: more than one default mode")
+        return cls(default or "bf16", tuple(overrides))
+
+    def mode_for(self, group: str) -> str:
+        return dict(self.overrides).get(group, self.default)
+
+    def dtype_for(self, group: str):
+        return _mode_dtype(self.mode_for(group))
+
+    def validate_groups(self, groups) -> None:
+        """Reject overrides naming groups the model doesn't have — a
+        typo'd policy must fail admission, not silently serve bf16."""
+        unknown = [g for g, _ in self.overrides if g not in groups]
+        if unknown:
+            raise ValueError(
+                f"quant policy names unknown layer groups {unknown}; "
+                f"this model has {sorted(groups)}")
+
+    def resolve(self) -> "CacheQuantPolicy":
+        """Platform check: fp8 entries fall back to bf16 WITH A WARNING
+        when the build can't store fp8 (never a crash at serve time)."""
+        modes = {self.default, *(m for _, m in self.overrides)}
+        if "fp8" not in modes or fp8_supported():
+            return self
+        warnings.warn("fp8 cache storage unsupported on this platform; "
+                      "falling back to bf16", RuntimeWarning, stacklevel=2)
+        swap = lambda m: "bf16" if m == "fp8" else m
+        return CacheQuantPolicy(
+            swap(self.default),
+            tuple((g, swap(m)) for g, m in self.overrides))
+
+    def describe(self) -> str:
+        parts = [self.default] + [f"{g}={m}" for g, m in self.overrides]
+        return ",".join(parts)
 
 
 def _tree_gather_row(pool, slot, axes):
@@ -159,11 +290,18 @@ class CachePool:
         against. ``pallas`` computes decode ticks directly from the
         arena (the block table becomes a scalar-prefetch operand);
         ``xla`` is the gather reference.
+    quant_policy : per-group cache storage policy — a
+        :class:`CacheQuantPolicy`, a policy string (``"int8"``,
+        ``"g0_dense=int8,g1_moe=fp8"``), or None to derive a uniform
+        policy from the legacy ``cache_dtype`` kwarg. Resolved once
+        here (fp8 falls back to bf16 with a warning on unsupported
+        builds; overrides naming unknown groups raise).
     """
 
     def __init__(self, cfg: ModelConfig, n_slots: int, cache_len: int,
                  cache_dtype=jnp.bfloat16, block_len: int = 0,
-                 n_blocks: int = 0, attn_backend: str = "auto"):
+                 n_blocks: int = 0, attn_backend: str = "auto",
+                 quant_policy=None):
         from repro.kernels.ops import resolve_attn_backend
         self.cfg = cfg
         self.attn_backend = resolve_attn_backend(attn_backend)
@@ -176,11 +314,20 @@ class CachePool:
         self.n_blocks: Dict[str, int] = {
             g: min(int(n_blocks) or self.n_slots * T, self.n_slots * T)
             for g, T in self.layout.items()}
+        policy = CacheQuantPolicy.parse(
+            quant_policy if quant_policy is not None else cache_dtype)
+        all_groups = [g for g, _, _ in tfm.group_names(cfg)]
+        policy.validate_groups(all_groups)
+        self.quant_policy = policy.resolve()
+        self.group_dtypes: Dict[str, Any] = {
+            g: self.quant_policy.dtype_for(g) for g in all_groups}
         self.caches: Dict[str, Any] = tfm.init_caches_paged(
             cfg, self.n_slots, cache_len, self.n_blocks, self.block_len,
-            cache_dtype=cache_dtype)
-        self.reset_spec: Dict[str, Any] = tfm.caches_reset_specs(cfg)
-        self.slot_axes: Dict[str, Any] = tfm.caches_slot_axes(cfg)
+            cache_dtype=self.group_dtypes)
+        self.reset_spec: Dict[str, Any] = tfm.caches_reset_specs(
+            cfg, cache_dtype=self.group_dtypes)
+        self.slot_axes: Dict[str, Any] = tfm.caches_slot_axes(
+            cfg, cache_dtype=self.group_dtypes)
         self._reset = jax.jit(
             functools.partial(_tree_reset_row, spec=self.reset_spec))
         # host allocator state: block tables + LIFO free lists
@@ -270,5 +417,28 @@ class CachePool:
     mask_fresh_rows = staticmethod(_tree_mask_fresh_rows)
 
     def nbytes(self) -> int:
+        """Total pool bytes over EVERY leaf — quantized K/V arenas, scale
+        leaves, position rows, SSM state — so equal-bytes comparisons
+        between cache policies can't hide bookkeeping overhead."""
         return sum(leaf.size * leaf.dtype.itemsize
                    for leaf in jax.tree.leaves(self.caches))
+
+    def nbytes_by_class(self) -> Dict[str, int]:
+        """``nbytes`` split by leaf class: ``arena`` (K/V/latent bytes),
+        ``scales`` (int8 dequant scales), ``pos`` (validity words),
+        ``state`` (SSM/other per-slot leaves)."""
+        out = {"arena": 0, "scales": 0, "pos": 0, "state": 0}
+        for g, tree in self.caches.items():
+            paged = g in self.layout
+            for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+                name = str(path[-1].key) if path else ""
+                nb = leaf.size * leaf.dtype.itemsize
+                if name.endswith("_scale"):
+                    out["scales"] += nb
+                elif name == "pos":
+                    out["pos"] += nb
+                elif paged and name in ("k", "v", "c", "k_rope"):
+                    out["arena"] += nb
+                else:
+                    out["state"] += nb
+        return out

@@ -168,8 +168,8 @@ class TokenRunner(ModelRunner):
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int,
                  cache_len: int, prefill_chunk: int, cache_dtype,
                  block_len: int = 0, n_blocks: int = 0,
-                 attn_backend: str = "auto", _check: bool = True,
-                 **_):
+                 attn_backend: str = "auto", quant_policy=None,
+                 _check: bool = True, **_):
         from repro.models.lm import transformer as tfm
         if _check and not tfm.supports_slot_serving(cfg):
             kinds = sorted({k for _, k, _ in tfm.group_names(cfg)})
@@ -186,7 +186,9 @@ class TokenRunner(ModelRunner):
         self.chunk_tokens = int(prefill_chunk)
         self.pool = CachePool(cfg, n_slots, cache_len, cache_dtype,
                               block_len=block_len, n_blocks=n_blocks,
-                              attn_backend=attn_backend)
+                              attn_backend=attn_backend,
+                              quant_policy=quant_policy)
+        self.quant_policy = self.pool.quant_policy
         self.attn_backend = self.pool.attn_backend       # resolved
         self.enc_kv: Optional[Dict[str, Dict]] = None    # audio subclass
         self._build_programs()
