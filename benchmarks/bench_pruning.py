@@ -10,7 +10,6 @@ from __future__ import annotations
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import data_iter, eval_identity, train_model
 from repro.config import QuantPolicy, get_config

@@ -3,7 +3,6 @@ baseline — accuracy (read identity on held-out synthetic reads) and model
 size per <weight, activation> configuration."""
 from __future__ import annotations
 
-import jax
 
 from benchmarks.common import eval_identity, train_model
 from repro.config import get_config

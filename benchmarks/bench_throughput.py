@@ -11,14 +11,13 @@ Two views:
 """
 from __future__ import annotations
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import CHUNK, wall_time_per_call
 from repro.analysis.roofline import HBM_BW, PEAK_BF16, PEAK_INT8
-from repro.config import QuantPolicy, get_config
+from repro.config import get_config
 from repro.models import api
 from repro.models.basecaller import model as bc
 
@@ -92,7 +91,6 @@ def run(emit):
     for arch in ("causalcall", "bonito", "rubicall"):
         cfg = get_config(arch)
         n = api.count_params_analytic(cfg)
-        from repro.core.quant.policy import quantize_tree, tree_size_bytes
         ps = jax.eval_shape(lambda c=cfg: api.init_params(rng, c))
         fp_bytes = sum(l.size * 4 for l in jax.tree.leaves(ps))
         if cfg.quant.enabled:

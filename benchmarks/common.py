@@ -5,13 +5,12 @@ see DESIGN.md §8)."""
 from __future__ import annotations
 
 import time
-from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import ModelConfig, get_config
+from repro.config import ModelConfig
 from repro.data.align import identity
 from repro.data.squiggle import SquiggleConfig, batches
 from repro.models import api
@@ -41,7 +40,6 @@ def train_model(cfg: ModelConfig, steps: int = 300, lr: float = 5e-3,
     params = api.init_params(rng, cfg)
     state = api.init_model_state(cfg)
     opt = AdamWConfig(lr=lr, total_steps=steps, warmup_steps=3)
-    loss_fn = api.make_loss_fn(cfg)
 
     if skip_gates is None:
         step = jax.jit(api.make_train_step(cfg, opt, n_micro=1))

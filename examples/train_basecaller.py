@@ -10,11 +10,9 @@ checkpoint.
 import argparse
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.config import get_config
 from repro.data.squiggle import SquiggleConfig, batches
-from repro.models import api
 from repro.training.optimizer import AdamWConfig
 from repro.training.train_loop import TrainLoopConfig, run
 

@@ -1,0 +1,18 @@
+"""Repo-wide default allowlist for the serving-invariant analyzer.
+
+Entries are ``"<rule-id>:<glob>"`` where the glob matches
+``Finding.where`` (``<file>:<line>`` for AST rules,
+``<target>::<eqn path>`` for jaxpr rules); a bare ``"<rule-id>"``
+suppresses the rule everywhere (don't). Prefer an inline
+``# repro-allow: <rule-id>`` comment for one-off AST suppressions —
+this list is for invariant-shaped exceptions that outlive single
+lines, and every entry should say why.
+
+Kept empty at HEAD: the repo currently passes every rule with no
+exceptions. The CLI adds ad-hoc entries via ``--allow``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+DEFAULT_ALLOWLIST: Tuple[str, ...] = ()

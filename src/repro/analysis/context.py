@@ -1,0 +1,82 @@
+"""AnalysisContext — what rules see when they run.
+
+One context per analyzer invocation. It owns the three surfaces rules
+check:
+
+- ``ast_files()``: every ``*.py`` under ``src_root`` as
+  ``(relpath, source, tree)`` triples (AST rules).
+- ``jaxpr_targets``: the traced serving programs from
+  :mod:`repro.analysis.targets` (jaxpr rules). Traced lazily on first
+  access and cached — AST-only runs never touch JAX.
+- ``trace_stability_setup()``: a live smoke :class:`TokenRunner` plus
+  canned decode-only and mixed work lists (the runtime retrace audit).
+
+Tests inject their own surfaces: pass ``src_root``/``rel_prefix`` to
+lint a temp tree, or ``jaxpr_targets`` to feed seeded-violation
+programs through the registered rules.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Any, Iterator, List, Optional, Sequence, Tuple
+
+
+class AnalysisContext:
+    def __init__(self, src_root: Optional[Path] = None,
+                 rel_prefix: Optional[str] = None,
+                 jaxpr_targets: Optional[Sequence[Any]] = None):
+        if src_root is None:
+            src_root = Path(__file__).resolve().parents[1]   # src/repro
+            if rel_prefix is None:
+                rel_prefix = "src/repro/"
+        self.src_root = Path(src_root)
+        self.rel_prefix = rel_prefix or ""
+        self._jaxpr_targets = (list(jaxpr_targets)
+                               if jaxpr_targets is not None else None)
+        self._stability = None
+
+    # ----------------------------------------------------------- AST
+    def py_files(self) -> List[Path]:
+        return sorted(self.src_root.rglob("*.py"))
+
+    def ast_files(self) -> Iterator[Tuple[str, str, ast.AST]]:
+        """``(relpath, source, tree)`` per parseable source file."""
+        for path in self.py_files():
+            rel = (self.rel_prefix
+                   + path.relative_to(self.src_root).as_posix())
+            source = path.read_text()
+            try:
+                tree = ast.parse(source, filename=rel)
+            except SyntaxError:
+                continue        # not this analyzer's job; python will say
+            yield rel, source, tree
+
+    # --------------------------------------------------------- jaxpr
+    @property
+    def jaxpr_targets(self) -> List[Any]:
+        if self._jaxpr_targets is None:
+            from repro.analysis.targets import (attention_op_targets,
+                                                serving_step_targets)
+            self._jaxpr_targets = (serving_step_targets()
+                                   + attention_op_targets())
+        return self._jaxpr_targets
+
+    # ------------------------------------------------------- runtime
+    def trace_stability_setup(self):
+        """``(runner, works_decode, works_mixed)`` for the retrace
+        audit: a qwen smoke runner plus one fixed decode-only tick and
+        one fixed mixed (prefill chunk + decode row) tick."""
+        if self._stability is None:
+            from repro.analysis.targets import _build_runner
+            from repro.serving.engine import Request
+            from repro.serving.runner import DecodeWork, PrefillWork
+            runner = _build_runner("qwen1.5-4b-smoke", "xla")
+            for slot in range(runner.n_slots):
+                runner.alloc_pool(slot, 8)
+            r0, r1 = Request(0, [1, 2, 3, 4]), Request(1, [1, 2])
+            works_decode = [DecodeWork(1, 3, r0), DecodeWork(2, 5, r1)]
+            works_mixed = [PrefillWork([1, 2, 3, 4], 4, 0, True, False, r0),
+                           DecodeWork(2, 5, r1)]
+            self._stability = (runner, works_decode, works_mixed)
+        return self._stability

@@ -148,7 +148,6 @@ def _conv_flops(comp: Computation, ins: Instr) -> float:
     if not kdims:
         return 0.0
     # rhs (kernel) total elems / output-features ~ per-output MACs
-    m = re.search(r"dim_labels=\S*?_(\w+?)->", ins.raw)
     kelems = 1.0
     for d in kdims:
         kelems *= d

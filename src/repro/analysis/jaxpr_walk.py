@@ -1,0 +1,79 @@
+"""Recursive jaxpr walker — ONE implementation repo-wide.
+
+Walks every equation of a (closed) jaxpr including the sub-jaxprs of
+higher-order primitives — ``pjit``, ``scan``, ``while``, ``cond``,
+``custom_vjp/jvp`` and ``pallas_call`` all stash their bodies in
+``eqn.params`` as either ``ClosedJaxpr`` (has ``.jaxpr``) or raw
+``Jaxpr`` (has ``.eqns``) values, possibly inside lists/tuples
+(``cond`` branches). This generalizes the ad-hoc ``_gathers`` walker
+that used to live in ``tests/test_paged_attention.py``; the analyzer
+rules and that test now share this one.
+"""
+from __future__ import annotations
+
+from typing import Any, Iterator, List, NamedTuple, Sequence, Tuple
+
+
+class EqnSite(NamedTuple):
+    """One equation + the primitive path of its enclosing equations
+    (e.g. ``("pjit", "scan")`` for a gather inside a scanned layer)."""
+    eqn: Any
+    path: Tuple[str, ...]
+
+    @property
+    def path_str(self) -> str:
+        return "/".join(self.path + (self.eqn.primitive.name,))
+
+
+def _as_jaxpr(jaxpr: Any) -> Any:
+    """Accept a ``ClosedJaxpr`` or a raw ``Jaxpr``."""
+    return getattr(jaxpr, "jaxpr", jaxpr)
+
+
+def sub_jaxprs(eqn: Any) -> Iterator[Any]:
+    """Yield every sub-jaxpr a higher-order equation carries."""
+    for val in eqn.params.values():
+        for j in (val if isinstance(val, (list, tuple)) else [val]):
+            if hasattr(j, "jaxpr"):
+                yield j.jaxpr
+            elif hasattr(j, "eqns"):
+                yield j
+
+
+def iter_eqns(jaxpr: Any, _path: Tuple[str, ...] = ()) -> Iterator[EqnSite]:
+    """Depth-first over every equation, recursing into sub-jaxprs."""
+    for eqn in _as_jaxpr(jaxpr).eqns:
+        yield EqnSite(eqn, _path)
+        for sub in sub_jaxprs(eqn):
+            yield from iter_eqns(sub, _path + (eqn.primitive.name,))
+
+
+def find_eqns(jaxpr: Any, names: Sequence[str]) -> List[EqnSite]:
+    """All equations whose primitive name is in ``names``."""
+    names = set(names)
+    return [s for s in iter_eqns(jaxpr) if s.eqn.primitive.name in names]
+
+
+def gather_sizes(jaxpr: Any) -> List[int]:
+    """Output sizes of every ``gather`` equation anywhere in the
+    program — the quantity the no-materialization gates compare against
+    the paged logical-view size (drop-in for the old test-local walker)."""
+    return [v.aval.size for site in iter_eqns(jaxpr)
+            if site.eqn.primitive.name == "gather"
+            for v in site.eqn.outvars]
+
+
+def eqn_provenance(eqn: Any) -> str:
+    """Best-effort ``file:line`` for an equation from its source info
+    (empty string when JAX internals don't cooperate)."""
+    si = getattr(eqn, "source_info", None)
+    if si is None:
+        return ""
+    try:
+        from jax._src import source_info_util
+        fr = source_info_util.user_frame(si)
+        if fr is not None:
+            return f"{fr.file_name}:{fr.start_line}"
+    except Exception:
+        pass
+    return ""

@@ -1,0 +1,88 @@
+"""Rule ``compat``: version-dependent JAX APIs only via ``repro.compat``.
+
+Mechanizes the ROADMAP's standing rule (PR 1): the repo pins a JAX
+floor of 0.4.x, so APIs that only exist on newer releases —
+``jax.sharding.get_abstract_mesh``, ``jax.sharding.AxisType``,
+``jax.make_mesh`` — must route through the shims in
+``src/repro/compat.py``. A raw reference anywhere else in ``src/repro``
+breaks the CI floor pin; this rule makes it a static error instead of
+a version-matrix surprise.
+
+Flags, in every file except ``compat.py`` itself:
+
+- an attribute chain rooted at ``jax`` ending in a gated name
+  (``jax.make_mesh``, ``jax.sharding.AxisType`` ...);
+- ``from jax[...] import <gated name>``;
+- ``getattr(jax..., "<gated name>")`` probing (that litter is exactly
+  what the shim module exists to contain).
+
+Importing the same names from ``repro.compat`` is of course fine —
+those are bare names / ``repro``-rooted attributes and don't match.
+Suppress a deliberate use with ``# repro-allow: compat``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from repro.analysis.findings import Finding, inline_allowed
+from repro.analysis.rules import rule
+
+GATED_APIS = ("get_abstract_mesh", "AxisType", "make_mesh")
+_EXEMPT_BASENAME = "compat.py"
+
+
+def _attr_root(node: ast.AST) -> Optional[str]:
+    """Base ``Name`` id of an attribute chain (``jax.sharding.X`` ->
+    ``jax``)."""
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def check_source(relpath: str, source: str,
+                 tree: Optional[ast.AST] = None) -> List[Finding]:
+    """Scan one file's source (public so tests can seed snippets)."""
+    if relpath.replace("\\", "/").split("/")[-1] == _EXEMPT_BASENAME:
+        return []
+    if tree is None:
+        tree = ast.parse(source, filename=relpath)
+    lines = source.splitlines()
+    findings: List[Finding] = []
+
+    def flag(node: ast.AST, api: str, how: str) -> None:
+        if inline_allowed(lines, node.lineno, "compat"):
+            return
+        findings.append(Finding(
+            "compat", f"{relpath}:{node.lineno}",
+            f"version-dependent JAX API {api!r} {how} outside "
+            f"repro/compat.py — route it through repro.compat so the "
+            f"0.4.x floor pin keeps passing"))
+
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Attribute) and node.attr in GATED_APIS
+                and _attr_root(node) == "jax"):
+            flag(node, f"jax...{node.attr}", "referenced")
+        elif (isinstance(node, ast.ImportFrom) and node.module
+                and node.module.split(".")[0] == "jax"):
+            for alias in node.names:
+                if alias.name in GATED_APIS:
+                    flag(node, f"{node.module}.{alias.name}", "imported")
+        elif (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Name)
+                and node.func.id == "getattr" and len(node.args) >= 2
+                and isinstance(node.args[1], ast.Constant)
+                and node.args[1].value in GATED_APIS
+                and _attr_root(node.args[0]) == "jax"):
+            flag(node, str(node.args[1].value), "probed via getattr")
+    return findings
+
+
+@rule("compat", "ast",
+      "version-dependent JAX APIs (get_abstract_mesh, AxisType, "
+      "make_mesh) are referenced only inside repro/compat.py")
+def check(ctx) -> List[Finding]:
+    findings: List[Finding] = []
+    for relpath, source, tree in ctx.ast_files():
+        findings.extend(check_source(relpath, source, tree))
+    return findings

@@ -1,0 +1,78 @@
+"""Rule ``no-materialization``: the fused decode path never gathers a
+``(B, T*block_len)``-or-larger logical KV view out of the block arena.
+
+This is THE property the Pallas paged-attention kernels exist for
+(ROADMAP PR 5/6): the XLA reference copies ``B * T * block_len``
+positions of K and V per layer per tick; the fused path DMAs one arena
+block per grid step and the logical view never exists. The rule walks
+the real runner step programs (both tick shapes, every cache family,
+int8 arenas included) and the ``ops.decode_*`` dispatch jaxprs:
+
+- backend ``pallas``: any ``gather``/``dynamic_gather`` whose operand is
+  ARENA-SHAPED (leading dims match a pool group's ``(n_blocks,
+  block_len)`` signature) and whose output is at least the logical-view
+  size is a violation. A ``reshape`` flattening an arena operand into a
+  view-sized result is flagged the same way. Matching on the operand's
+  arena signature (not raw output size) is what keeps embedding-table
+  lookups and logits slicing out of the blast radius.
+- backend ``xla``: the reference MUST contain such a gather — it is
+  exactly the copy being eliminated. Its absence means the traced
+  program is no longer the oracle the parity gates compare against
+  (oracle drift), which is reported too.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.findings import Finding
+from repro.analysis.jaxpr_walk import eqn_provenance, iter_eqns
+from repro.analysis.rules import rule
+from repro.analysis.targets import TraceTarget
+
+_GATHER_PRIMS = ("gather", "dynamic_gather")
+
+
+def check_target(tgt: TraceTarget) -> List[Finding]:
+    """Apply the rule to one traced target (public so tests can seed
+    deliberately-broken programs)."""
+    if not tgt.arena_sigs or tgt.backend not in ("xla", "pallas"):
+        return []
+    hits = []
+    for site in iter_eqns(tgt.jaxpr):
+        name = site.eqn.primitive.name
+        if name not in _GATHER_PRIMS + ("reshape",):
+            continue
+        floor = tgt.view_floor(site.eqn.invars[0].aval.shape)
+        if floor is None:
+            continue
+        for v in site.eqn.outvars:
+            if v.aval.size >= floor:
+                hits.append((site, v.aval, floor))
+    findings: List[Finding] = []
+    if tgt.backend == "pallas":
+        for site, aval, floor in hits:
+            src = eqn_provenance(site.eqn)
+            findings.append(Finding(
+                "no-materialization", f"{tgt.name}::{site.path_str}",
+                f"fused path materializes a logical KV view: "
+                f"{site.eqn.primitive.name} of an arena operand produces "
+                f"{tuple(aval.shape)} ({aval.size} elems >= view floor "
+                f"{floor})" + (f" at {src}" if src else "")))
+    elif not hits:
+        findings.append(Finding(
+            "no-materialization", f"{tgt.name}::oracle",
+            "reference (xla) program contains NO logical-view arena "
+            "gather — the parity oracle no longer measures the copy the "
+            "fused path eliminates (oracle drift)"))
+    return findings
+
+
+@rule("no-materialization", "jaxpr",
+      "no gather/reshape materializes a (B, T*block_len)+ logical KV "
+      "view inside fused paged decode/chunk programs (xla reference "
+      "must keep it: oracle)")
+def check(ctx) -> List[Finding]:
+    findings: List[Finding] = []
+    for tgt in ctx.jaxpr_targets:
+        findings.extend(check_target(tgt))
+    return findings

@@ -1,0 +1,160 @@
+"""Rule ``precision``: fp32 softmax statistics and accumulators in the
+attention / quantized-matmul programs.
+
+The quantized serving stack (PR 7) keeps one numerical contract: KV
+bytes may be bf16/fp8/int8, but softmax statistics (max/sum/exp) and
+matmul ACCUMULATION are always fp32 — ``preferred_element_type=
+jnp.float32`` on every QK/PV/absorbed dot, fp32 VMEM accumulators in
+the kernels, fp32 scale math. Helix (PAPERS.md) is the cautionary
+tale: quantized basecalling paths silently lose accuracy when exactly
+these spots drift to low precision. The rule walks the attention-op
+and serving-step jaxprs and flags:
+
+- ``exp`` over a non-fp32 float (softmax stats computed in bf16/f16);
+- float ``reduce_max``/``reduce_sum`` over non-fp32 operands (online-
+  softmax running stats must be fp32);
+- ``dot_general`` with a low-precision input (int8/fp8/bf16/f16) whose
+  output is not fp32 (or int32 for pure-integer dots) — a low-precision
+  accumulator on a path that must dequantize-then-accumulate in fp32;
+- on QUANTIZED attention-op traces: an fp32 -> bf16/f16
+  ``convert_element_type`` whose value then REACHES softmax stats or a
+  non-fp32 dot accumulator (followed through shape/elementwise ops) —
+  the "silent downcast" that launders fp32 math back through half
+  precision. The dataflow qualifier is what exempts the two deliberate
+  casts of the quantization contract: ``dequantize_kv``'s fp32-multiply-
+  then-cast-to-compute-dtype and the ``prob.astype(compute)`` feeding a
+  ``preferred_element_type=fp32`` dot are both clean, because every
+  consumer accumulates in fp32.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+
+from repro.analysis.findings import Finding
+from repro.analysis.jaxpr_walk import EqnSite, _as_jaxpr, eqn_provenance, \
+    sub_jaxprs
+from repro.analysis.rules import rule
+from repro.analysis.targets import TraceTarget
+
+_F32 = (jnp.dtype(jnp.float32), jnp.dtype(jnp.float64))
+_HALF = (jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float16))
+
+# ops a downcast value may pass through without changing the verdict:
+# pure layout ops plus elementwise arithmetic (bf16 QK/PV COMPUTE is the
+# alignment contract — only stats/accumulation must be fp32)
+_PASSTHROUGH = frozenset((
+    "reshape", "broadcast_in_dim", "transpose", "squeeze", "slice",
+    "dynamic_slice", "rev", "convert_element_type", "expand_dims",
+    "mul", "add", "sub", "div", "neg", "max", "min", "where", "select_n",
+))
+
+
+def _is_low_precision(dt) -> bool:
+    dt = jnp.dtype(dt)
+    return dt in _HALF or dt == jnp.dtype(jnp.int8) or "float8" in dt.name
+
+
+def _finding(tgt, site, msg) -> Finding:
+    src = eqn_provenance(site.eqn)
+    return Finding("precision", f"{tgt.name}::{site.path_str}",
+                   msg + (f" at {src}" if src else ""))
+
+
+def _bad_stat_sink(eqn) -> bool:
+    """Is this equation a place where half precision breaks the
+    contract — stats math or a low-precision accumulator?"""
+    name = eqn.primitive.name
+    if name in ("exp", "reduce_max", "reduce_sum"):
+        dt = jnp.dtype(eqn.invars[0].aval.dtype)
+        return bool(jnp.issubdtype(dt, jnp.floating) and dt not in _F32)
+    if name == "dot_general":
+        out_dt = jnp.dtype(eqn.outvars[0].aval.dtype)
+        return out_dt not in _F32 and out_dt != jnp.dtype(jnp.int32)
+    return False
+
+
+def _launders(eqn, consumers: Dict) -> bool:
+    """Does the downcast value reach a bad stat sink, following shape
+    and elementwise ops? Higher-order/unknown consumers are opaque and
+    end the walk (their interiors get their own direct checks)."""
+    seen = set()
+    stack = list(eqn.outvars)
+    while stack:
+        v = stack.pop()
+        for c in consumers.get(v, ()):
+            if _bad_stat_sink(c):
+                return True
+            if c.primitive.name in _PASSTHROUGH:
+                for ov in c.outvars:
+                    if ov not in seen:
+                        seen.add(ov)
+                        stack.append(ov)
+    return False
+
+
+def _check_level(tgt: TraceTarget, jaxpr, path: Tuple[str, ...],
+                 findings: List[Finding]) -> None:
+    consumers: Dict = {}
+    for eqn in jaxpr.eqns:
+        for v in eqn.invars:
+            if not hasattr(v, "val"):            # skip Literals
+                consumers.setdefault(v, []).append(eqn)
+    for eqn in jaxpr.eqns:
+        site = EqnSite(eqn, path)
+        name = eqn.primitive.name
+        if name == "exp":
+            dt = jnp.dtype(eqn.invars[0].aval.dtype)
+            if jnp.issubdtype(dt, jnp.floating) and dt not in _F32:
+                findings.append(_finding(
+                    tgt, site, f"softmax stats must be fp32: exp over "
+                    f"{dt.name}"))
+        elif name in ("reduce_max", "reduce_sum"):
+            dt = jnp.dtype(eqn.invars[0].aval.dtype)
+            if jnp.issubdtype(dt, jnp.floating) and dt not in _F32:
+                findings.append(_finding(
+                    tgt, site, f"softmax/scale reduction must accumulate "
+                    f"in fp32: {name} over {dt.name}"))
+        elif name == "dot_general":
+            in_dts = [jnp.dtype(v.aval.dtype) for v in eqn.invars]
+            out_dt = jnp.dtype(eqn.outvars[0].aval.dtype)
+            if (any(_is_low_precision(dt) for dt in in_dts)
+                    and out_dt not in _F32
+                    and out_dt != jnp.dtype(jnp.int32)):
+                findings.append(_finding(
+                    tgt, site, f"low-precision accumulator: dot_general"
+                    f"({', '.join(d.name for d in in_dts)}) -> "
+                    f"{out_dt.name}; accumulate in fp32 "
+                    f"(preferred_element_type)"))
+        elif (name == "convert_element_type" and tgt.quantized
+                and tgt.kind in ("attn-op", "qmatmul")):
+            src_dt = jnp.dtype(eqn.invars[0].aval.dtype)
+            dst_dt = jnp.dtype(eqn.params.get("new_dtype", src_dt))
+            if (src_dt in _F32 and dst_dt in _HALF
+                    and _launders(eqn, consumers)):
+                findings.append(_finding(
+                    tgt, site, f"silent fp32->{dst_dt.name} downcast on a "
+                    f"quantized path reaches softmax stats / a low-"
+                    f"precision accumulator"))
+        for sub in sub_jaxprs(eqn):
+            _check_level(tgt, _as_jaxpr(sub),
+                         path + (eqn.primitive.name,), findings)
+
+
+def check_target(tgt: TraceTarget) -> List[Finding]:
+    """Apply the rule to one traced target (public for seeded tests)."""
+    findings: List[Finding] = []
+    _check_level(tgt, _as_jaxpr(tgt.jaxpr), (), findings)
+    return findings
+
+
+@rule("precision", "jaxpr",
+      "softmax stats, scale math and dot accumulation in attention/"
+      "qmatmul programs stay fp32 (no bf16/int8 accumulators, no silent "
+      "fp32->bf16 downcasts on quantized paths)")
+def check(ctx) -> List[Finding]:
+    findings: List[Finding] = []
+    for tgt in ctx.jaxpr_targets:
+        findings.extend(check_target(tgt))
+    return findings

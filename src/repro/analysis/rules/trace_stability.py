@@ -1,0 +1,72 @@
+"""Rule ``trace-stability``: serving the same tick shape bucket twice
+must hit the jit cache.
+
+Front-runs the ROADMAP's "no mid-traffic retraces" hardening item: a
+production engine tick that RETRACES (an unhashable or per-call-fresh
+static argument, a weak-type flip, a host scalar captured as a new
+constant) silently turns a microsecond dispatch into a multi-second
+compile, mid-traffic. The audit is a retrace counter over the real
+``TokenRunner`` programs: run one decode-only tick and one mixed tick
+twice each with identical shape buckets and assert the underlying
+compiled-program caches did not grow on the repeat — and that one
+bucket compiled exactly one program in the first place (a cache that
+starts above 1 means a static-arg hash is unstable within a single
+call batch).
+"""
+from __future__ import annotations
+
+from typing import Callable, List
+
+from repro.analysis.findings import Finding
+from repro.analysis.rules import rule
+
+
+def cache_size(jitted) -> int:
+    """Compiled-program cache entries of a ``jax.jit`` callable (-1
+    when this JAX build doesn't expose the counter)."""
+    fn = getattr(jitted, "_cache_size", None)
+    try:
+        return int(fn()) if fn is not None else -1
+    except Exception:
+        return -1
+
+
+def audit_program(name: str, jitted, call: Callable[[], None],
+                  repeats: int = 2) -> List[Finding]:
+    """Retrace audit: ``call()`` drives ``jitted`` with one fixed shape
+    bucket; after warmup, repeats must not grow its program cache."""
+    call()                                   # warmup: trace + compile
+    before = cache_size(jitted)
+    if before < 0:
+        return []                            # no counter on this build
+    for _ in range(repeats - 1):
+        call()
+    after = cache_size(jitted)
+    findings: List[Finding] = []
+    if after > before:
+        findings.append(Finding(
+            "trace-stability", f"{name}::retrace",
+            f"re-traced on an identical shape bucket: program cache grew "
+            f"{before} -> {after} across {repeats} calls (unhashable/"
+            f"fresh static arg or weak-type flip in the tick arguments)"))
+    if before > 1:
+        findings.append(Finding(
+            "trace-stability", f"{name}::fanout",
+            f"one shape bucket compiled {before} programs on first use — "
+            f"static-arg hashing is unstable within a single tick"))
+    return findings
+
+
+@rule("trace-stability", "runtime",
+      "ticking the same shape bucket twice hits the jit cache (retrace-"
+      "counter audit over the real TokenRunner step programs)")
+def check(ctx) -> List[Finding]:
+    runner, works_decode, works_mixed = ctx.trace_stability_setup()
+    findings: List[Finding] = []
+    findings += audit_program(
+        "TokenRunner._decode_greedy[qwen1.5-4b-smoke]",
+        runner._decode_greedy, lambda: runner.step(works_decode))
+    findings += audit_program(
+        "TokenRunner._step_greedy[qwen1.5-4b-smoke]",
+        runner._step_greedy, lambda: runner.step(works_mixed))
+    return findings

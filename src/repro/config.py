@@ -7,11 +7,9 @@ tiny configs that drift from the real ones.
 """
 from __future__ import annotations
 
-import dataclasses
 import importlib
-import math
 from dataclasses import dataclass, field, replace
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 # ---------------------------------------------------------------------------
 # Families

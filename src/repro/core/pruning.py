@@ -7,7 +7,6 @@ dense math stays dense, so it maps directly to smaller MXU tiles.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -103,7 +103,6 @@ def supernet_forward(params: Params, arch: Params, x: jax.Array,
         y = 0.0
         for ii in range(2):
             for jj in range(2):
-                bits = tuple(space.quant_options[0])  # static default
                 # static switch over quant options for correct bits
                 def quant_branch(qi):
                     def run(xx):

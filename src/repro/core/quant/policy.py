@@ -9,7 +9,7 @@ memory-roofline win the paper reports as RUBICALL-MP vs RUBICALL-FP).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -10,9 +10,8 @@ stripped from the param tree entirely (``strip_skip_params``).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict
 
-import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig

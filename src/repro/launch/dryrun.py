@@ -22,8 +22,7 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 
-from repro.config import (ASSIGNED_ARCHS, PAPER_ARCHS, SHAPES, ModelConfig,
-                          ShapeConfig, get_config, shape_applicable)
+from repro.config import (ASSIGNED_ARCHS, SHAPES, ModelConfig, ShapeConfig, get_config, shape_applicable)
 from repro.launch.mesh import make_production_mesh
 from repro.models import api
 from repro.parallel import sharding as shd

@@ -7,7 +7,6 @@ data-parallel axis (gradient all-reduce crosses DCI once per step).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 

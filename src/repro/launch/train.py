@@ -18,11 +18,9 @@ import argparse
 import json
 
 import jax
-import numpy as np
 
 from repro.config import get_config
 from repro.launch.mesh import make_host_mesh
-from repro.models import api
 from repro.training.optimizer import AdamWConfig
 from repro.training.train_loop import TrainLoopConfig, run
 

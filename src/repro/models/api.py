@@ -6,18 +6,15 @@ multi-pod dry-run lowers these without allocating anything).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.config import ModelConfig, ShapeConfig
-from repro.models.lm.common import BATCH_AXES, cross_entropy, dense, rmsnorm
-from repro.training.optimizer import (AdamWConfig, OptState, adamw_update,
-                                      init_opt_state)
+from repro.models.lm.common import cross_entropy, dense, rmsnorm
+from repro.training.optimizer import AdamWConfig, OptState, adamw_update
 
 MICRO_TOKENS = 65536       # grad-accum target: tokens per microbatch
 
@@ -280,8 +277,6 @@ def batch_specs(cfg: ModelConfig, shape: ShapeConfig,
         if not leaf.shape:
             return P()
         b = leaf.shape[0]
-        import numpy as _np
-        dp_size = 1
         # divisibility check is done against axis sizes by the caller's mesh;
         # here we only emit names — dryrun validates divisibility.
         return P(dp if b > 1 else None,

@@ -5,7 +5,7 @@ Alphabet: index 0 = CTC blank; 1..4 = A, C, G, T (paper's 5-way head).
 """
 from __future__ import annotations
 
-from typing import List, Sequence, Tuple
+from typing import List
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,6 @@ The Pallas twin of the prefill path is ``repro.kernels.flash_attention``
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax

@@ -6,7 +6,6 @@ adds sinusoidal positions and runs bidirectional attention blocks.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,7 @@ collective-bound roofline term for the MoE archs.
 from __future__ import annotations
 
 import math
-from typing import Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,6 @@ Block kinds:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -29,10 +28,7 @@ from repro.models.lm import attention as attn_mod
 from repro.models.lm import mla as mla_mod
 from repro.models.lm import moe as moe_mod
 from repro.models.lm import ssm as ssm_mod
-from repro.models.lm.common import (BATCH_AXES, Params, constrain,
-                                    cross_entropy, dense, make_dense_params,
-                                    make_mlp_params, make_rmsnorm_params,
-                                    mlp, rmsnorm, truncated_normal_init)
+from repro.models.lm.common import (BATCH_AXES, Params, constrain, dense, make_dense_params, make_mlp_params, make_rmsnorm_params, mlp, rmsnorm, truncated_normal_init)
 
 # ---------------------------------------------------------------------------
 # Layer plan

@@ -266,6 +266,44 @@ holds; they dequantize on read otherwise — same ints, same numbers to
 rounding, no action needed. The serving-knob search over these
 policies lives in ``repro.core.qabas.search_serving_knobs``
 (``serve.py --knob-search``).
+
+Enforced invariants (repro.analysis)
+------------------------------------
+
+The contracts this stack is built on are MECHANIZED: ``python -m
+repro.analysis`` (a blocking CI fast-gate step) traces the real jitted
+serving programs (every cache family x both attention backends x both
+tick shapes, int8 arenas included) and lints ``src/repro``, enforcing:
+
+``no-materialization``
+    The fused (Pallas) decode/chunk programs never gather or reshape a
+    ``(B, T*block_len)``-or-larger logical KV view out of the block
+    arena — the property the paged-attention kernels exist for. The
+    XLA reference must KEEP that gather (it is the parity oracle).
+``precision``
+    Softmax statistics, scale math and matmul accumulation in the
+    attention/qmatmul programs stay fp32: no bf16/f16 ``exp`` or
+    reductions, no low-precision ``dot_general`` accumulators, and on
+    quantized paths no fp32 downcast whose value reaches stats math.
+    (bf16 QK/PV COMPUTE is the alignment contract and is exempt.)
+``compat``
+    Version-dependent JAX APIs (``get_abstract_mesh``, ``AxisType``,
+    ``make_mesh``) appear only inside ``repro/compat.py`` — everything
+    else imports the shims, keeping the 0.4.x floor pin honest.
+``host-sync``
+    ``np.asarray`` / ``.item()`` / ``device_get`` /
+    ``block_until_ready`` inside engine/runner tick paths carry an
+    explicit ``# sync: <reason>`` marker — the hot loop's device->host
+    round trips are intentional, counted, and reviewable.
+``trace-stability``
+    Ticking the same shape bucket twice hits the jit cache (retrace-
+    counter audit over the live ``TokenRunner`` step programs) — no
+    mid-traffic recompiles from unstable static arguments.
+
+Suppress a deliberate exception inline with ``# repro-allow:
+<rule-id>`` (AST rules) or an ``"<rule-id>:<where-glob>"`` entry in
+``repro.analysis.allowlist.DEFAULT_ALLOWLIST``; add a rule by
+registering ``check(ctx)`` under ``repro/analysis/rules/``.
 """
 from repro.serving.cache import CachePool
 from repro.serving.engine import Request, ServingEngine

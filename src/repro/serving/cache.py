@@ -66,7 +66,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import warnings
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp

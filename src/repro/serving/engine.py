@@ -347,7 +347,9 @@ class ServingEngine:
             return
         n_decode = sum(isinstance(w, DecodeWork) for w in works)
         t0 = self.metrics.clock()
-        emitted = self.runner.step(works)                       # syncs
+        # sync: runner.step reads the tick's emitted tokens back to the
+        # host — the engine's one intentional sync point per tick
+        emitted = self.runner.step(works)
         dt = self.metrics.clock() - t0
         if n_decode:
             self.metrics.record_decode(n_decode, dt)

@@ -325,7 +325,9 @@ class TokenRunner(ModelRunner):
         else:
             toks, self.pool.caches = self._decode_greedy(
                 self.params, self.pool.caches, tok, t, tables, self.enc_kv)
-        toks = np.asarray(toks)                                 # syncs
+        # the one intentional round trip per decode tick:
+        # sync: scheduler needs this tick's emitted tokens on the host
+        toks = np.asarray(toks)
         return [[int(toks[i])] if w is not None else []
                 for i, w in enumerate(works)]
 
@@ -365,7 +367,9 @@ class TokenRunner(ModelRunner):
                 *args, pack_rows(rows), self.enc_kv)
         else:
             toks, self.pool.caches = self._step_greedy(*args, self.enc_kv)
-        toks = np.asarray(toks)                                 # syncs
+        # sync: emitted tokens feed the next scheduling decision (same
+        # single round trip as the decode-only tick)
+        toks = np.asarray(toks)
         return [[int(toks[i])]
                 if w is not None and (isinstance(w, DecodeWork) or w.final)
                 else []
@@ -537,6 +541,8 @@ class BasecallerRunner(ModelRunner):
             wins[i] = window
             start[i] = st
             read_len[i] = rl
+        # sync: CTC merge (stitch/beam) is host-side by design — every
+        # basecall tick reads the window's log-probs back
         lp = np.asarray(self._fwd(self.params, self.state, wins, start,
                                   read_len))
         f0 = self.halo // self.stride

@@ -17,11 +17,11 @@ Policy (documented for the 1000+-node posture, simulated in tests):
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, Sequence, Tuple
 
 import jax
 import numpy as np
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
 
 
 def best_mesh_shape(n_devices: int, model_parallel: int

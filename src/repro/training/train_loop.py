@@ -6,14 +6,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, Iterator, Optional
+from typing import Any, Callable, Dict, Iterator
 
 import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
 from repro.models import api
-from repro.parallel import sharding as shd
 from repro.training import grad_compress
 from repro.training.checkpoint import CheckpointManager
 from repro.training.optimizer import (AdamWConfig, adamw_update,

@@ -3,7 +3,6 @@ default path (they are perf levers, not approximations — except bf16
 scores, which is bounded)."""
 import os
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -74,7 +74,6 @@ def test_swa_ring_cache(rng):
     cfg = get_config("hymba-1.5b-smoke")
     from repro.models.lm import attention as A
     assert cfg.sliding_window > 0
-    params = api.init_params(rng, cfg)
     c = A.init_attn_cache(cfg, 2, 64, window=cfg.sliding_window)
     assert c["k"].shape[1] == cfg.sliding_window
 

@@ -1,7 +1,5 @@
 """Distribution substrate: sharding rules, checkpoint fault tolerance,
 gradient compression convergence, elastic mesh math, HLO analyzer."""
-import json
-import shutil
 from pathlib import Path
 
 import jax
@@ -16,7 +14,7 @@ from repro.parallel import sharding as shd
 from repro.training import grad_compress
 from repro.training.checkpoint import CheckpointManager
 from repro.training.elastic import Watchdog, best_mesh_shape, rebuild_mesh
-from repro.training.optimizer import AdamWConfig, init_opt_state
+from repro.training.optimizer import AdamWConfig
 
 
 # ------------------------------------------------------------- sharding

@@ -1,6 +1,5 @@
 """Pallas kernel validation: shape/dtype sweeps against the pure-jnp
 oracles (interpret mode on CPU; TPU is the target)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -360,19 +360,6 @@ def test_mla_chunk_fused_matches_reference(bl, T, C):
 # ------------------------------------------- no logical-view materialisation
 
 
-def _gathers(jaxpr, found):
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "gather":
-            found.extend(v.aval.size for v in eqn.outvars)
-        for val in eqn.params.values():
-            for j in (val if isinstance(val, (list, tuple)) else [val]):
-                if hasattr(j, "jaxpr"):
-                    _gathers(j.jaxpr, found)
-                elif hasattr(j, "eqns"):
-                    _gathers(j, found)
-    return found
-
-
 @pytest.mark.parametrize("backend,expect_gather", [("xla", True),
                                                    ("pallas", False)])
 @pytest.mark.parametrize("C", [1, 4])
@@ -381,7 +368,11 @@ def test_fused_path_has_no_logical_gather(backend, expect_gather, C):
     contains NO gather as large as the (B, T*block_len) logical KV view
     (the reference must — that is exactly the copy being eliminated).
     C == 1 is the lockstep decode-only tick; C == 4 is a mixed tick
-    with a chunk row co-batched against a padded decode row."""
+    with a chunk row co-batched against a padded decode row. The jaxpr
+    walk is the analyzer's (repro.analysis.gather_sizes — the same
+    walker the no-materialization CI rule runs over the full runner
+    programs)."""
+    from repro.analysis import gather_sizes
     from repro.models.lm import attention as A
     cfg = get_config("qwen1.5-4b-smoke")
     p = A.make_attn_params(jax.random.key(0), cfg)
@@ -400,7 +391,7 @@ def test_fused_path_has_no_logical_gather(backend, expect_gather, C):
                                        attn_backend=backend)
     )(p, x, cache, t)
     view_size = B * T * bl * Hkv * hd             # the logical view
-    big = [s for s in _gathers(jaxpr.jaxpr, []) if s >= view_size]
+    big = [s for s in gather_sizes(jaxpr) if s >= view_size]
     assert bool(big) == expect_gather, (backend, big)
 
 

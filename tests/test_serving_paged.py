@@ -16,7 +16,7 @@ import pytest
 from repro.config import get_config
 from repro.models import api
 from repro.models.lm import transformer as tfm
-from repro.serving import CachePool, Request, ServingEngine
+from repro.serving import Request, ServingEngine
 
 CACHE_LEN = 48
 

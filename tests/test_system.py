@@ -10,8 +10,7 @@ from hypothesis import strategies as st
 
 from repro.config import SHAPES, get_config, shape_applicable
 from repro.data.align import identity
-from repro.data.squiggle import SquiggleConfig, batches, make_batch, \
-    normalize, pore_table, simulate_read
+from repro.data.squiggle import (SquiggleConfig, batches, make_batch, pore_table, simulate_read)
 from repro.models import api
 
 
