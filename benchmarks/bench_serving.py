@@ -450,6 +450,126 @@ def bench_basecaller(emit, arch: str = "bonito-smoke", slots: int = 2,
                              f"whole-read basecall")
 
 
+def bench_read_until(emit, arch: str = "bonito-smoke", slots: int = 2,
+                     reads: int = 6, read_bases: int = 150,
+                     chunk_samples: int = 300, eject_after_chunks: int = 2,
+                     off_target_frac: float = 0.5, seed: int = 0) -> None:
+    """Streaming + read-until gate: every read streams in as appended
+    chunks (StreamingRequest) with the trained start-of-read classifier
+    armed. Hard gates: (a) on-target reads' streamed tokens EQUAL the
+    whole-read engine run (token parity through the live-append path);
+    (b) every off-target (white-noise) read is ejected, no on-target
+    read is, and each ejection consumes at most ``eject_after_chunks``
+    windows of basecall compute; (c) ejected reads' partial bases are a
+    PREFIX of their would-be full basecall, and samples saved > 0."""
+    from repro.data.squiggle import (SquiggleConfig, normalize, pore_table,
+                                     simulate_read)
+    from repro.models.basecaller import classifier as rc
+    from repro.serving.stream import ReadUntil, StreamingRequest
+    cfg = get_config(arch)
+    params = api.init_params(jax.random.key(0), cfg)
+    rs = np.random.RandomState(seed)
+    sim = SquiggleConfig(noise=0.1, drift=0.0)
+    table = pore_table()
+    n_off = max(int(round(reads * off_target_frac)), 1)
+    sigs, is_off = [], []
+    for i in range(reads):
+        n = int(rs.randint(max(read_bases // 2, 8), read_bases + 1))
+        off = i < n_off
+        if off:
+            sigs.append(normalize(rs.randn(n * 9).astype(np.float32)))
+        else:
+            sig, _ = simulate_read(rs, sim, table, n)
+            sigs.append(normalize(sig))
+        is_off.append(off)
+
+    # whole-read reference run (no read-until) — also yields the
+    # would-be full basecall of every off-target read for the prefix gate
+    ref = ServingEngine(params, cfg, n_slots=slots,
+                        chunk_samples=chunk_samples)
+    for i, s in enumerate(sigs):
+        ref.submit(Request(rid=i, signal=s))
+    full = ref.run()
+
+    probe = ref.runner          # geometry for classifier training windows
+    window = probe.core + 2 * probe.halo
+    x, y = rc.make_training_set(np.random.RandomState(seed + 77), window,
+                                n_per_class=24)
+    cls_params, _ = rc.fit(rc.init_params(jax.random.key(seed + 1)), x, y,
+                           steps=120, lr=0.1)
+    engine = ServingEngine(
+        params, cfg, n_slots=slots, chunk_samples=chunk_samples,
+        read_until=ReadUntil(params=cls_params,
+                             eject_after_chunks=eject_after_chunks))
+
+    def drain(append: int = 512):
+        engine.reset_stats()
+        live = {}
+        t0 = time.perf_counter()
+        for i, s in enumerate(sigs):
+            req = StreamingRequest(rid=i)
+            engine.submit(req)
+            live[i] = [req, s, 0]
+        while live:
+            for rid in list(live):
+                req, s, ptr = live[rid]
+                if req.done:
+                    if req.ejected and ptr < s.shape[0]:
+                        engine.metrics.record_samples_saved(
+                            s.shape[0] - ptr)
+                    del live[rid]
+                    continue
+                nxt = min(ptr + append, s.shape[0])
+                if nxt > ptr:
+                    req.append(s[ptr:nxt])
+                    live[rid][2] = nxt
+                elif not req.stream_finished:
+                    req.finish()
+            if engine.busy:
+                engine.step()
+        while engine.busy:
+            engine.step()
+        return time.perf_counter() - t0, engine.drain_completed()
+
+    drain()                                       # warm/compile
+    dt, done = drain()
+    m = engine.metrics.summary()
+    ejected = {i for i, r in done.items() if r.ejected}
+    parity = all(done[i].out_tokens == full[i].out_tokens
+                 for i in range(reads) if i not in ejected)
+    prefix_ok = all(
+        done[i].out_tokens == full[i].out_tokens[:len(done[i].out_tokens)]
+        for i in ejected)
+    per_eject = (m["ejected_consumed_samples"] / len(ejected)
+                 if ejected else 0.0)
+    emit(f"serving_read_until_{arch.replace('-smoke', '').replace('-', '_')}",
+         dt / reads * 1e6,
+         f"ejections={len(ejected)};off_target={n_off};"
+         f"samples_saved={m['samples_saved']:.0f};"
+         f"consumed_per_eject={per_eject:.0f};"
+         f"eject_budget={eject_after_chunks * engine.runner.core};"
+         f"token_parity={'ok' if parity else 'MISMATCH'};"
+         f"eject_prefix={'ok' if prefix_ok else 'MISMATCH'}")
+    if not parity:
+        raise AssertionError(f"{arch}: streamed on-target base calls != "
+                             f"whole-read engine basecall")
+    if not prefix_ok:
+        raise AssertionError(f"{arch}: ejected reads' partial bases are "
+                             f"not a prefix of their full basecall")
+    if ejected != {i for i in range(reads) if is_off[i]}:
+        raise AssertionError(
+            f"{arch}: read-until ejected {sorted(ejected)}, expected "
+            f"exactly the off-target reads "
+            f"{[i for i in range(reads) if is_off[i]]}")
+    if per_eject > eject_after_chunks * engine.runner.core:
+        raise AssertionError(
+            f"{arch}: ejections consumed {per_eject:.0f} samples each — "
+            f"more than {eject_after_chunks} chunks of "
+            f"{engine.runner.core}")
+    if m["samples_saved"] <= 0:
+        raise AssertionError(f"{arch}: read-until saved no samples")
+
+
 def bench_paged_attention(emit, arch: str = "qwen1.5-4b-smoke",
                           slots: int = 2, oversub: int = 2,
                           prompt_len: int = 8, max_tokens: int = 12,
@@ -714,6 +834,7 @@ def run(emit) -> None:
     bench_sampling(emit, slots=4, oversub=2, prompt_len=16, max_tokens=24,
                    prefill_chunk=8)
     bench_basecaller(emit, reads=8, read_bases=120)
+    bench_read_until(emit, reads=8)
 
 
 def run_smoke(emit) -> None:
@@ -726,8 +847,11 @@ def run_smoke(emit) -> None:
     percentiles under Poisson arrivals), a mixed greedy+sampled decode section
     (determinism + greedy isolation), a quantized-arena section
     (bf16/fp8/int8 cache bytes + tok/s, int8 fused-vs-reference token
-    parity, the 1.8x byte floor), and a basecaller-runner section
-    (reads/s + CTC-merge parity vs the offline whole-read basecall).
+    parity, the 1.8x byte floor), a basecaller-runner section
+    (reads/s + CTC-merge parity vs the offline whole-read basecall),
+    and a read-until section (streamed-vs-whole-read token parity
+    through live appends + classifier-driven ejection of off-target
+    reads within the chunk budget, with samples-saved accounting).
     Minutes, not tens of minutes — the full four-family / quant sweep
     stays in the slow job (``run``)."""
     bench(emit, arch="qwen1.5-4b-smoke", slots=2, oversub=2,
@@ -739,6 +863,7 @@ def run_smoke(emit) -> None:
                       prefill_chunk=4, max_prefill_tokens=4)
     bench_sampling(emit)
     bench_basecaller(emit)
+    bench_read_until(emit)
 
 
 def main() -> None:

@@ -21,6 +21,8 @@ import ast
 from pathlib import Path
 from typing import Any, Iterator, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 
 class AnalysisContext:
     def __init__(self, src_root: Optional[Path] = None,
@@ -35,6 +37,7 @@ class AnalysisContext:
         self._jaxpr_targets = (list(jaxpr_targets)
                                if jaxpr_targets is not None else None)
         self._stability = None
+        self._stream_stability = None
 
     # ----------------------------------------------------------- AST
     def py_files(self) -> List[Path]:
@@ -57,9 +60,11 @@ class AnalysisContext:
     def jaxpr_targets(self) -> List[Any]:
         if self._jaxpr_targets is None:
             from repro.analysis.targets import (attention_op_targets,
+                                                basecaller_stream_targets,
                                                 serving_step_targets)
             self._jaxpr_targets = (serving_step_targets()
-                                   + attention_op_targets())
+                                   + attention_op_targets()
+                                   + basecaller_stream_targets())
         return self._jaxpr_targets
 
     # ------------------------------------------------------- runtime
@@ -80,3 +85,26 @@ class AnalysisContext:
                            DecodeWork(2, 5, r1)]
             self._stability = (runner, works_decode, works_mixed)
         return self._stability
+
+    def stream_stability_setup(self):
+        """``(runner, works_stream)`` for the streaming-tick retrace
+        audit: a live read-until BasecallerRunner plus one fixed
+        streaming window tick (a pre-finish cursor payload: UNBOUNDED
+        read_len, classify armed)."""
+        if self._stream_stability is None:
+            from repro.analysis.targets import _build_basecaller_runner
+            from repro.serving.runner import PrefillWork
+            from repro.serving.stream import UNBOUNDED, StreamingRequest
+            runner = _build_basecaller_runner(read_until=True)
+            req = StreamingRequest(rid=0)
+            req.append(np.zeros((runner.core + 2 * runner.halo,),
+                                np.float32))
+            runner.admit(0, req)
+            payload = (np.zeros((runner.core + 2 * runner.halo, 1),
+                                np.float32), 0,
+                       runner.core // runner.stride, -runner.halo,
+                       UNBOUNDED, 1)
+            works = [PrefillWork(payload, runner.core, 0, True, False,
+                                 req), None]
+            self._stream_stability = (runner, works)
+        return self._stream_stability

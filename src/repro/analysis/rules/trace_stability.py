@@ -59,7 +59,8 @@ def audit_program(name: str, jitted, call: Callable[[], None],
 
 @rule("trace-stability", "runtime",
       "ticking the same shape bucket twice hits the jit cache (retrace-"
-      "counter audit over the real TokenRunner step programs)")
+      "counter audit over the real TokenRunner + streaming-basecaller "
+      "step programs)")
 def check(ctx) -> List[Finding]:
     runner, works_decode, works_mixed = ctx.trace_stability_setup()
     findings: List[Finding] = []
@@ -69,4 +70,11 @@ def check(ctx) -> List[Finding]:
     findings += audit_program(
         "TokenRunner._step_greedy[qwen1.5-4b-smoke]",
         runner._step_greedy, lambda: runner.step(works_mixed))
+    # streaming tick: live-window forward + fused read-until classifier
+    # (pre-finish payloads vary only in VALUES — UNBOUNDED read_len,
+    # window content — never in shape, so repeats must hit the cache)
+    bc_runner, works_stream = ctx.stream_stability_setup()
+    findings += audit_program(
+        "BasecallerRunner._fwd[bonito-smoke/stream/read_until]",
+        bc_runner._fwd, lambda: bc_runner.step(works_stream))
     return findings

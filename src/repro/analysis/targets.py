@@ -18,6 +18,12 @@ jitted programs serving runs:
   dispatch (GQA + MLA, fp32/bf16/int8 arenas, C == 1 and chunk) and
   the quantized ``qmatmul`` — the jaxprs the precision rule audits for
   fp32 softmax stats / accumulators.
+- ``basecaller_stream_targets``: the streaming basecall tick — the
+  batched halo-window forward exactly as ``BasecallerRunner.step``
+  invokes it, with and without the co-executed read-until classifier
+  head. No KV arena (``arena_sigs`` stays empty, so the
+  materialization rule skips them); the precision rule walks them and
+  the trace-stability audit re-ticks the live runner.
 
 Tracing uses ``jax.make_jaxpr`` only (no compilation, no execution),
 so a full target sweep costs seconds on CPU.
@@ -142,6 +148,43 @@ def _trace_runner_steps(runner, label: str, quantized: bool
                         **meta),
             TraceTarget(name=f"step[{label}/mixed]", jaxpr=jx_mixed,
                         **meta)]
+
+
+def _build_basecaller_runner(read_until: bool):
+    from repro.config import get_config
+    from repro.models import api
+    from repro.models.basecaller import classifier as rc
+    from repro.serving.runner import BasecallerRunner
+    from repro.serving.stream import ReadUntil
+    cfg = get_config("bonito-smoke")
+    params = api.init_params(jax.random.key(0), cfg)
+    ru = None
+    if read_until:
+        # untrained head, threshold -inf: the PROGRAM is what's audited
+        ru = ReadUntil(params=rc.init_params(jax.random.key(1)),
+                       eject_after_chunks=2, threshold=-1e9)
+    return BasecallerRunner(params, cfg, n_slots=N_SLOTS,
+                            chunk_samples=300, read_until=ru)
+
+
+def basecaller_stream_targets() -> List[TraceTarget]:
+    """Trace the streaming basecall tick program (batched halo-window
+    forward; ``/read_until`` adds the fused classifier head) with the
+    exact argument layout ``BasecallerRunner.step`` builds."""
+    out: List[TraceTarget] = []
+    for read_until, tag in ((False, ""), (True, "/read_until")):
+        runner = _build_basecaller_runner(read_until)
+        W = runner.core + 2 * runner.halo
+        wins = np.zeros((N_SLOTS, W, 1), np.float32)
+        start = np.zeros((N_SLOTS,), np.int32)
+        read_len = np.full((N_SLOTS,), W, np.int32)
+        jx = jax.make_jaxpr(runner._fwd)(runner.params, runner.state,
+                                         wins, start, read_len)
+        out.append(TraceTarget(
+            name=f"step[bonito-smoke/stream{tag}]", jaxpr=jx,
+            kind="serving-step", backend=None, quantized=False,
+            n_slots=N_SLOTS))
+    return out
 
 
 def attention_op_targets(backends: Sequence[str] = BACKENDS

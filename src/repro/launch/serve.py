@@ -34,6 +34,21 @@ scheduler:
   (BasecallerRunner; ``--chunk-samples``/``--beam``); the summary
   reports reads/s and bases/s.
 
+Streaming + read-until (basecaller archs only)
+----------------------------------------------
+``--stream`` switches the basecaller traffic to LIVE reads: Poisson
+read starts, then each read's samples arrive over wall-clock time at
+the pore sample rate and are ``append()``-ed to a
+:class:`repro.serving.stream.StreamingRequest`; bases emit
+incrementally as their receptive field is covered (``--qos latency``)
+or per fully-covered window (``--qos accuracy``, bit-identical to the
+offline chunked path). ``--read-until`` trains the start-of-read
+classifier at launch and ejects off-target reads (a ``1 -
+--target-frac`` fraction of the stream is normalized white noise)
+after ``--eject-after-chunks`` windows; ejected reads free their slot,
+keep their bases-so-far, and the generator stops appending — the run
+report prints ejections, samples saved, and emit-latency p50/p99.
+
 Per-request sampling (``repro.serving.sampling.SamplingParams``):
 ``--temperature``/``--top-k``/``--top-p``/``--seed`` configure sampled
 decode; ``--sampled-frac`` mixes greedy and sampled requests in one
@@ -159,6 +174,115 @@ def resolved_backend_label(engine) -> str:
     return backend
 
 
+PORE_HZ = 4000.0          # nanopore sample rate the streamed traffic mimics
+
+
+def make_read_until(cfg, args):
+    """Train the start-of-read classifier on synthetic windows matching
+    the engine's window geometry and wrap it in a ReadUntil policy."""
+    from repro.models.basecaller import classifier as rc
+    from repro.models.basecaller import model as bc
+    from repro.serving.stream import ReadUntil
+    stride = bc.total_stride(cfg)
+    halo = bc.chunk_halo(cfg)
+    core = max(-(-args.chunk_samples // stride), 1) * stride
+    window = core + 2 * halo
+    rs = np.random.RandomState(args.seed + 77)
+    x, y = rc.make_training_set(rs, window, n_per_class=32)
+    cp = rc.init_params(jax.random.key(args.seed + 1))
+    cp, loss = rc.fit(cp, x, y, steps=150, lr=0.1)
+    print(f"[serve] read-until: classifier trained on {x.shape[0]} "
+          f"windows of {window} samples (bce {loss:.3f}), ejecting after "
+          f"{args.eject_after_chunks} chunks")
+    return ReadUntil(params=cp, eject_after_chunks=args.eject_after_chunks)
+
+
+def build_streamed_reads(cfg, args, seed: int = 0):
+    """Streamed basecaller traffic: Poisson read starts; each entry is
+    ``(start_time, on_target, full_signal)`` and the run loop appends
+    the signal in wall-clock order at PORE_HZ. With --read-until, a
+    ``1 - target_frac`` fraction are off-target white-noise reads."""
+    from repro.data.squiggle import (SquiggleConfig, normalize, pore_table,
+                                     simulate_read)
+    rs = np.random.RandomState(seed)
+    starts = np.cumsum(rs.exponential(1.0 / args.rate, size=args.requests))
+    sim = SquiggleConfig(noise=0.1, drift=0.0)
+    table = pore_table()
+    target_frac = args.target_frac if args.read_until else 1.0
+    reads = []
+    for i in range(args.requests):
+        n_bases = int(rs.randint(max(args.read_bases // 2, 8),
+                                 args.read_bases + 1))
+        on_target = bool(rs.rand() < target_frac)
+        if on_target:
+            sig, _ = simulate_read(rs, sim, table, n_bases)
+            sig = normalize(sig)
+        else:
+            sig = normalize(rs.randn(n_bases * 9).astype(np.float32))
+        reads.append((float(starts[i]), on_target, sig))
+    return reads
+
+
+def run_streamed(engine, cfg, args) -> None:
+    """Drive the engine from live StreamingRequests: submit each read at
+    its Poisson start, then append samples as wall-clock time covers
+    them (PORE_HZ per pore). Ejected reads stop appending — the forgone
+    tail is booked as samples saved."""
+    from repro.serving.stream import StreamingRequest
+    reads = build_streamed_reads(cfg, args, seed=args.seed)
+    on_target = {i: tgt for i, (_, tgt, _) in enumerate(reads)}
+    live = {}                       # rid -> [req, signal, appended_ptr]
+    t0 = time.perf_counter()
+    i = 0
+    while i < len(reads) or live:
+        now = time.perf_counter() - t0
+        while i < len(reads) and reads[i][0] <= now:
+            req = StreamingRequest(rid=i, arrival_time=reads[i][0])
+            engine.submit(req)
+            live[i] = [req, reads[i][2], 0]
+            i += 1
+        for rid in list(live):
+            req, sig, ptr = live[rid]
+            if req.done:
+                if req.ejected and ptr < sig.shape[0]:
+                    engine.metrics.record_samples_saved(sig.shape[0] - ptr)
+                del live[rid]
+                continue
+            due = min(int((now - req.arrival_time) * PORE_HZ), sig.shape[0])
+            if due > ptr:
+                req.append(sig[ptr:due])
+                live[rid][2] = due
+            elif ptr >= sig.shape[0] and not req.stream_finished:
+                req.finish()
+        if engine.busy:
+            engine.step()
+        else:
+            time.sleep(0.002)
+    done = engine.drain_completed()
+    ejected = [r for r in done.values() if r.ejected]
+    n_off = sum(not on_target[rid] for rid in done)
+    off_ejected = sum(not on_target[r.rid] for r in ejected)
+    total_samples = sum(s.shape[0] for _, _, s in reads)
+    s = engine.metrics.summary()
+    print(f"[serve] streamed: {len(done)} reads "
+          f"({n_off} off-target), qos={args.qos}, "
+          f"emit latency p50 {s['emit_latency_p50_s']*1e3:.1f}ms "
+          f"p99 {s['emit_latency_p99_s']*1e3:.1f}ms "
+          f"({s['emit_events']} emissions)")
+    if args.read_until:
+        print(f"[serve] read-until: {s['ejections']:.0f} ejections "
+              f"({off_ejected}/{n_off} off-target rejected, "
+              f"{len(ejected) - off_ejected} on-target lost) | "
+              f"samples saved {s['samples_saved']:.0f}"
+              f"/{total_samples} "
+              f"({s['samples_saved']/max(total_samples,1)*100:.0f}%) | "
+              f"basecalled {s['ejected_consumed_samples']:.0f} samples "
+              f"on ejected reads")
+    if done:
+        first = done[min(done)]
+        print(f"[serve] sample ({first.status}):", first.out_tokens[:16])
+
+
 def resolve_quant_policy(cfg, args):
     """Admission-time validation of ``--cache-dtype``/``--quant-policy``:
     an invalid mode or an override naming a group this arch does not
@@ -186,11 +310,18 @@ def resolve_quant_policy(cfg, args):
 
 
 def run_engine(params, cfg, args) -> None:
+    if (args.stream or args.read_until) and cfg.family != "basecaller":
+        raise SystemExit(
+            f"[serve] error: --stream/--read-until serve live squiggle "
+            f"reads; arch {cfg.name!r} is not a basecaller")
     quant_policy = resolve_quant_policy(cfg, args)
     runner_kw = {"attn_backend": args.attn_backend,
                  "quant_policy": quant_policy}
     if cfg.family == "basecaller":
-        runner_kw = dict(chunk_samples=args.chunk_samples, beam=args.beam)
+        runner_kw = dict(chunk_samples=args.chunk_samples, beam=args.beam,
+                         qos=args.qos)
+        if args.read_until:
+            runner_kw["read_until"] = make_read_until(cfg, args)
     engine = api.make_serving_engine(
         params, cfg, n_slots=args.slots, cache_len=args.cache_len,
         prefill_chunk=args.prefill_chunk,
@@ -199,8 +330,16 @@ def run_engine(params, cfg, args) -> None:
         cache_dtype=jnp.dtype(cfg.dtype),
         block_len=args.block_len, n_blocks=args.n_blocks,
         history_limit=args.history_limit or None, **runner_kw)
-    pending = build_request_stream(cfg, args)
     basecall = cfg.family == "basecaller"
+    if args.stream:
+        print(f"[serve] engine ({type(engine.runner).__name__}): "
+              f"{args.requests} LIVE reads (rate {args.rate}/s, "
+              f"{PORE_HZ:.0f} samples/s per pore), {args.slots} slots, "
+              f"chunk {engine.runner.core} samples (halo "
+              f"{engine.runner.halo}), qos={args.qos}")
+        run_streamed(engine, cfg, args)
+        return
+    pending = build_request_stream(cfg, args)
     print(f"[serve] engine ({type(engine.runner).__name__}): "
           f"{args.requests} requests over "
           f"{pending[-1].arrival_time:.2f}s (rate {args.rate}/s), "
@@ -251,6 +390,11 @@ def run_engine(params, cfg, args) -> None:
               f"{s['generated_tokens']} bases in {s['elapsed_s']:.2f}s "
               f"({s['requests_done']/max(s['elapsed_s'],1e-9):.2f} reads/s, "
               f"{s['tokens_per_s']:.0f} bases/s)")
+        if args.read_until:
+            print(f"[serve] read-until: {s['ejections']:.0f} ejections | "
+                  f"samples saved {s['samples_saved']:.0f} | basecalled "
+                  f"{s['ejected_consumed_samples']:.0f} samples on "
+                  f"ejected reads")
     else:
         print(f"[serve] done: {s['requests_done']} requests, "
               f"{s['generated_tokens']} tokens in {s['elapsed_s']:.2f}s "
@@ -404,6 +548,36 @@ def main():
     ap.add_argument("--beam", type=int, default=0,
                     help="basecaller archs: prefix-beam width for the "
                          "incremental CTC merge (0 = greedy)")
+    # ---- streaming + read-until (basecaller archs only) ----
+    ap.add_argument("--stream", action="store_true",
+                    help="basecaller archs: LIVE reads — samples arrive "
+                         "over wall-clock time at the pore rate and are "
+                         "appended to StreamingRequests; bases emit "
+                         "incrementally (see --qos)")
+    ap.add_argument("--qos", default="accuracy",
+                    choices=["latency", "accuracy"],
+                    help="streaming QoS knob: 'latency' re-forwards the "
+                         "live window each tick and flushes every frame "
+                         "the moment its receptive field is covered; "
+                         "'accuracy' forwards each window exactly once "
+                         "when fully covered (bit-identical to the "
+                         "offline chunked basecall). Both emit prefixes "
+                         "of the same final read")
+    ap.add_argument("--read-until", action="store_true",
+                    help="selective sequencing: train the start-of-read "
+                         "classifier at launch, score the first chunks "
+                         "of every read, and EJECT off-target reads "
+                         "(slot freed, bases-so-far kept, status "
+                         "'ejected'); with --stream the generator stops "
+                         "appending and books the forgone samples as "
+                         "saved")
+    ap.add_argument("--target-frac", type=float, default=0.5,
+                    help="streamed read-until traffic: fraction of reads "
+                         "that are on-target pore-model squiggle; the "
+                         "rest are off-target white noise")
+    ap.add_argument("--eject-after-chunks", type=int, default=2,
+                    help="read-until: decide after this many "
+                         "window-complete classifier scores")
     ap.add_argument("--cache-len", type=int, default=0,
                     help="per-request KV capacity (0 = prompt+tokens)")
     ap.add_argument("--block-len", type=int, default=16,

@@ -95,6 +95,14 @@ def make_sep_conv_params(rng, c_in: int, c_out: int, k: int) -> Params:
     }
 
 
+def make_conv_params(rng, k: int, c_in: int, c_out: int) -> jax.Array:
+    """Plain (non-separable) ``(K, Cin, Cout)`` conv kernel — the
+    basecaller blocks themselves are depthwise-separable (see
+    :func:`make_sep_conv_params`); the read-until classifier head uses
+    full convs because its channel counts are tiny."""
+    return truncated_normal_init(rng, (k, c_in, c_out), stddev=0.2)
+
+
 def sep_conv_state(c_out: int) -> State:
     return {"bn": make_bn_state(c_out)}
 

@@ -1,0 +1,97 @@
+"""Read-until start-of-read classifier: a small strided CNN that scores
+whether a read's early squiggle looks on-target.
+
+Selective sequencing ("read-until") wants to reject off-target reads
+after the first chunks, before the basecaller wastes compute on the
+whole read. This head is deliberately tiny — two strided convs, a
+global mean pool, and a linear logit — so the serving runner co-executes
+it INSIDE the basecall tick's jitted forward at negligible cost. The
+mean pool makes it window-length independent: the same params score any
+chunk geometry (core/halo/stride), and the runner feeds it the exact
+``(B, W, 1)`` windows the basecaller already materialized.
+
+Positive logits mean on-target. Training is a few hundred full-batch
+SGD steps of sigmoid cross-entropy on labeled windows (:func:`fit`);
+:func:`make_training_set` builds the synthetic set — pore-model reads
+(label 1) vs med/MAD-normalized white noise (label 0), separable by
+local signal statistics (pore dwell makes squiggle step-wise constant;
+amplitude alone cannot separate them after normalization).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.basecaller import blocks as bl
+from repro.models.lm.common import Params, truncated_normal_init
+
+
+def init_params(rng, channels: Tuple[int, int] = (8, 16),
+                kernel: int = 5) -> Params:
+    """Classifier head params (window-length independent)."""
+    k0, k1, k2 = jax.random.split(rng, 3)
+    c0, c1 = channels
+    return {
+        "conv0": bl.make_conv_params(k0, kernel, 1, c0),
+        "conv1": bl.make_conv_params(k1, kernel, c0, c1),
+        "head_w": truncated_normal_init(k2, (c1, 1)),
+        "head_b": jnp.zeros((1,), jnp.float32),
+    }
+
+
+def forward(params: Params, window: jax.Array) -> jax.Array:
+    """``window``: (B, W, 1) squiggle -> (B,) on-target logits."""
+    h = bl.conv1d(window.astype(jnp.float32), params["conv0"], stride=4)
+    h = jax.nn.relu(h)
+    h = bl.conv1d(h, params["conv1"], stride=4)
+    h = jax.nn.relu(h)
+    g = jnp.mean(h, axis=1)                       # length-free pooling
+    return (g @ params["head_w"])[:, 0] + params["head_b"][0]
+
+
+def fit(params: Params, windows, labels, *, steps: int = 200,
+        lr: float = 0.1) -> Tuple[Params, float]:
+    """Full-batch SGD on sigmoid cross-entropy. ``windows``: (N, W, 1)
+    float32, ``labels``: (N,) in {0, 1}. Returns (params, final loss)."""
+    x = jnp.asarray(windows, jnp.float32)
+    y = jnp.asarray(labels, jnp.float32)
+
+    def loss_fn(p):
+        z = forward(p, x)
+        return jnp.mean(jnp.logaddexp(0.0, z) - y * z)
+
+    grad = jax.jit(jax.value_and_grad(loss_fn))
+    loss = float("nan")
+    for _ in range(int(steps)):
+        l, g = grad(params)
+        params = jax.tree.map(lambda p_, g_: p_ - lr * g_, params, g)
+        loss = float(l)
+    return params, loss
+
+
+def make_training_set(rs: np.random.RandomState, window_len: int,
+                      n_per_class: int = 48, noise: float = 0.1
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """Labeled windows: pore-model squiggle (on-target, label 1) vs
+    white noise (off-target, label 0), both med/MAD normalized."""
+    from repro.data.squiggle import (SquiggleConfig, normalize, pore_table,
+                                     simulate_read)
+    sim = SquiggleConfig(noise=noise, drift=0.0)
+    table = pore_table()
+    xs, ys = [], []
+    for _ in range(int(n_per_class)):
+        n_bases = max(window_len // 6, 8)     # dwell ~9 => >= window_len
+        sig, _ = simulate_read(rs, sim, table, n_bases)
+        sig = normalize(sig)
+        if sig.shape[0] < window_len:
+            sig = np.pad(sig, (0, window_len - sig.shape[0]))
+        off = int(rs.randint(0, sig.shape[0] - window_len + 1))
+        xs.append(sig[off:off + window_len])
+        ys.append(1.0)
+        xs.append(normalize(rs.randn(window_len).astype(np.float32)))
+        ys.append(0.0)
+    x = np.stack(xs)[:, :, None].astype(np.float32)
+    return x, np.asarray(ys, np.float32)

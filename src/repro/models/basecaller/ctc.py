@@ -111,6 +111,13 @@ class GreedyCTCMerge:
     def finalize(self) -> List[int]:
         return []                       # greedy commits as it goes
 
+    def clone(self) -> "GreedyCTCMerge":
+        """Independent snapshot — the serving engine stashes a preempted
+        stream's merge and must not share mutable state with this one."""
+        c = GreedyCTCMerge()
+        c._prev = self._prev
+        return c
+
 
 class BeamCTCMerge:
     """Incremental prefix-beam CTC: feed per-chunk frame log-probs,
@@ -150,8 +157,17 @@ class BeamCTCMerge:
         return []
 
     def finalize(self) -> List[int]:
+        """Best prefix so far (non-destructive — feeding may continue,
+        and read-until ejection uses this as the partial-bases flush)."""
         best = max(self.beams.items(), key=lambda kv: _lse(*kv[1]))[0]
         return [int(v) for v in best]
+
+    def clone(self) -> "BeamCTCMerge":
+        """Independent snapshot for preemption stashes (``feed`` rebinds
+        ``beams`` wholesale, but the copy keeps the stash immune to it)."""
+        c = BeamCTCMerge(self.beam)
+        c.beams = dict(self.beams)
+        return c
 
 
 def beam_decode(log_probs: np.ndarray, beam: int = 5) -> np.ndarray:

@@ -206,6 +206,62 @@ traffic queues on the host and drains into freed slots — steady-state
 decode throughput stays at the full-batch rate instead of draining to
 the stragglers' rate (bench_serving.py).
 
+Streaming & read-until (PR 9, basecaller only)
+----------------------------------------------
+
+A :class:`~repro.serving.stream.StreamingRequest` is a basecaller read
+whose signal does not exist up front: callers ``append(samples)`` as
+the pore produces them and call ``finish()`` at the read end. Lifecycle:
+
+1. **Submit** — any time, even before the first sample. The engine
+   rejects streams at submit for every non-basecaller runner
+   (``supports_streaming``); ``TokenRunner.validate`` refuses them too.
+2. **Admit** — the slot gets a live :class:`~repro.serving.stream.
+   StreamCursor` (built by the runner — the engine stays model-free)
+   instead of a pre-chunked payload list.
+3. **Emit** — each tick the cursor issues at most one window span whose
+   frames' receptive fields are fully covered by arrived samples
+   (frame ``g`` is STABLE once ``arrived >= (g+1)*stride + halo``), so
+   every base that reaches ``out_tokens`` is FINAL: the emitted prefix
+   is exactly a prefix of the whole-read offline basecall under ANY
+   append schedule, and equals it bit-for-bit once the stream finishes
+   (tests/test_streaming.py sweeps dribble/window/bursty/whole
+   schedules). Preemption stashes the cursor + CTC merge and resumes
+   exactly where the stream left off.
+
+QoS semantics (``qos=`` runner kwarg / ``serve.py --qos``):
+
+``latency``   (emit_latency) re-forwards the live window whenever new
+              frames become stable — lowest sample-to-base latency
+              (the ``emit_latency_p50_s``/``p99`` summary keys track
+              sample-arrival -> base-emission), at the cost of
+              re-running the window forward as its tail fills in.
+``accuracy``  (halo_recompute, default) forwards each window exactly
+              once, when core + halo is fully covered — windows are
+              byte-identical to the offline chunked path for EVERY
+              config, including act-quantized ones.
+
+Read-until (selective sequencing): pass ``read_until=ReadUntil(params,
+eject_after_chunks, threshold)`` and the runner co-executes the tiny
+start-of-read classifier head (``models.basecaller.classifier``) inside
+the same jitted tick, scoring each read's first ``eject_after_chunks``
+window-complete forwards (content-complete windows only, so the verdict
+is append-schedule invariant). A read whose mean on-target logit falls
+below ``threshold`` is EJECTED: slot and pool freed, bases-so-far kept.
+
+Ejection status contract: ``Request.status`` moves ``queued ->
+running -> finished`` with two side states — ``preempted-pending``
+while evicted awaiting resume, and ``ejected`` as a terminal state
+distinct from ``finished`` (``req.done`` is true for both;
+``req.finished``/``req.ejected`` disambiguate, and
+``drain_completed(status=…)`` filters). An ejected read's
+``out_tokens`` hold the partial basecall — a prefix of what the full
+read would have produced — and the metrics book the ejection
+(``ejections``, ``ejected_consumed_samples``) plus the samples never
+basecalled (``samples_saved``; generators add the forgone tail via
+``record_samples_saved``). ``serve.py --stream --read-until`` drives
+all of this from a live Poisson pore simulation.
+
 Migration note (PR 4)
 ---------------------
 
@@ -312,8 +368,9 @@ from repro.serving.runner import (BasecallerRunner, EncoderPrefixRunner,
                                   ModelRunner, TokenRunner, make_runner,
                                   register_runner)
 from repro.serving.sampling import GREEDY, SamplingParams
+from repro.serving.stream import ReadUntil, StreamingRequest
 
 __all__ = ["CachePool", "Request", "ServingEngine", "ServingMetrics",
            "SamplingParams", "GREEDY", "ModelRunner", "TokenRunner",
            "EncoderPrefixRunner", "BasecallerRunner", "make_runner",
-           "register_runner"]
+           "register_runner", "StreamingRequest", "ReadUntil"]

@@ -44,7 +44,12 @@ class Request:
     they map onto a default-greedy SamplingParams and emit a
     DeprecationWarning.
 
-    ``out_tokens`` fills as the engine runs.
+    ``out_tokens`` fills as the engine runs. ``status`` tracks the
+    lifecycle — ``queued`` -> ``running`` -> ``finished``, with
+    ``preempted-pending`` while evicted-awaiting-resume and ``ejected``
+    for reads the read-until classifier rejected (their ``out_tokens``
+    hold the PARTIAL bases emitted before ejection; never mistake them
+    for a complete basecall — check ``status``/``ejected``).
     """
 
     def __init__(self, rid: int, prompt: Sequence[int] = (),
@@ -80,7 +85,7 @@ class Request:
         self.signal = signal
         self.arrival_time = arrival_time    # virtual arrival (Poisson replay)
         self.out_tokens: List[int] = []
-        self.finished = False               # set by the engine at _finish
+        self.status = "queued"              # engine-owned lifecycle state
 
     # legacy accessors (the pre-SamplingParams field names)
     @property
@@ -92,9 +97,19 @@ class Request:
         return self.sampling.eos_id
 
     @property
+    def finished(self) -> bool:
+        """Complete AND fully served (an ejected read is NOT finished)."""
+        return self.status == "finished"
+
+    @property
+    def ejected(self) -> bool:
+        """Read-until rejected this read; ``out_tokens`` are partial."""
+        return self.status == "ejected"
+
+    @property
     def done(self) -> bool:
         if self.signal is not None:         # reads end with their signal
-            return self.finished
+            return self.status in ("finished", "ejected")
         if len(self.out_tokens) >= self.sampling.max_new_tokens:
             return True
         eos = self.sampling.eos_id
@@ -109,6 +124,24 @@ class Request:
 
 
 @dataclasses.dataclass
+class StreamState:
+    """Per-slot lifecycle of a live :class:`StreamingRequest`.
+
+    The engine owns this; the ``cursor`` inside it is an opaque object
+    the runner built (``runner.open_stream``) that turns arrived samples
+    into work payloads — the engine never sees model geometry. On
+    preemption the whole StreamState (plus the runner's exported row
+    state, e.g. the CTC merge) is stashed on the request and restored at
+    re-admission, so a resumed stream continues exactly where it left.
+    """
+
+    cursor: Any                        # runner-built window/frame cursor
+    consumed: int = 0                  # samples issued to the runner
+    need: int = 0                      # samples enabling the in-flight work
+    needs_finish: bool = False         # ... or the finish() event
+
+
+@dataclasses.dataclass
 class _Slot:
     state: str = FREE
     req: Optional[Request] = None
@@ -117,6 +150,7 @@ class _Slot:
     last_token: int = 0                # next decode input
     fresh: bool = False                # first chunk must invalidate the row
     seq: int = -1                      # admission order (preemption picks max)
+    stream: Optional[StreamState] = None   # live StreamingRequest state
 
 
 class ServingEngine:
@@ -223,6 +257,13 @@ class ServingEngine:
 
     # ------------------------------------------------------------ intake
     def submit(self, req: Request) -> None:
+        if getattr(req, "streaming", False) and \
+                not getattr(self.runner, "supports_streaming", False):
+            raise ValueError(
+                f"request {req.rid}: {type(self.runner).__name__} cannot "
+                f"serve a StreamingRequest — live signal append is a "
+                f"basecaller-runner capability (use a basecaller arch or "
+                f"submit a whole-payload Request)")
         self.runner.validate(req)      # capacity/payload; raises ValueError
         n_in = (int(np.asarray(req.signal).size) if req.signal is not None
                 else len(req.prompt))
@@ -266,15 +307,46 @@ class ServingEngine:
 
     def run(self) -> Dict[int, Request]:
         """Drain queue + slots to completion; returns completed requests
-        (only the most recent ``history_limit`` when bounded)."""
+        (only the most recent ``history_limit`` when bounded). Raises
+        instead of spinning when progress is blocked on an unfinished
+        StreamingRequest — streaming callers drive ``step()`` from their
+        own loop, interleaved with ``append()``/``finish()``."""
+        stalled = 0
         while self.busy:
+            marker = (len(self.completed), self._admit_seq, len(self.queue),
+                      tuple(s.pos for s in self.slots))
             self.step()
+            now = (len(self.completed), self._admit_seq, len(self.queue),
+                   tuple(s.pos for s in self.slots))
+            stalled = stalled + 1 if now == marker else 0
+            if stalled > self.n_slots + 1 and self._stalled_on_streams():
+                raise RuntimeError(
+                    "run() is stalled on unfinished StreamingRequests — "
+                    "drive step() from your own loop and append()/"
+                    "finish() the streams as samples arrive")
         return self.completed
 
-    def drain_completed(self) -> Dict[int, Request]:
-        """Hand over and forget finished requests — the long-running
-        serve loop's hook for keeping host memory flat."""
-        done, self.completed = self.completed, {}
+    def _stalled_on_streams(self) -> bool:
+        live = [s.req for s in self.slots if s.req is not None]
+        live += list(self.queue)
+        return any(getattr(r, "streaming", False)
+                   and not getattr(r, "stream_finished", True) for r in live)
+
+    def drain_completed(self,
+                        status: Optional[str] = None) -> Dict[int, Request]:
+        """Hand over and forget completed requests — the long-running
+        serve loop's hook for keeping host memory flat. The map holds
+        both ``finished`` requests and read-until ``ejected`` ones
+        (partial bases!); check each request's ``status`` — or pass
+        ``status='finished'``/``'ejected'`` to drain only that kind and
+        leave the rest for a later drain."""
+        if status is None:
+            done, self.completed = self.completed, {}
+            return done
+        done = {rid: r for rid, r in self.completed.items()
+                if r.status == status}
+        for rid in done:
+            del self.completed[rid]
         return done
 
     def reset_stats(self) -> None:
@@ -292,7 +364,8 @@ class ServingEngine:
             if slot.state != FREE or not self.queue:
                 continue
             req = self.queue[0]
-            chunks = self.runner.make_chunks(req)
+            streaming = bool(getattr(req, "streaming", False))
+            chunks = [] if streaming else self.runner.make_chunks(req)
             if not self.runner.alloc_pool(i, sum(c.n_units for c in chunks)):
                 break                   # FIFO: no skipping the queue head
             self.queue.popleft()
@@ -304,12 +377,34 @@ class ServingEngine:
             slot.fresh = True           # row invalidated by the 1st chunk
             slot.seq = self._admit_seq
             self._admit_seq += 1
+            if streaming:
+                resume = getattr(req, "_stream_resume", None)
+                if resume is not None:  # preempted mid-stream: continue
+                    slot.stream, row_state = resume
+                    req._stream_resume = None
+                    self.runner.restore_row(i, row_state)
+                    slot.pos = slot.stream.consumed
+                else:
+                    slot.stream = StreamState(self.runner.open_stream(req))
+            req.status = "running"
             self.slot_history[i].append(req.rid)
             self.metrics.record_admit(req.rid)
 
     def _pop_chunk(self, works: List[Optional[Any]], i: int) -> None:
-        """Pop slot ``i``'s next pending chunk into ``works[i]``."""
+        """Pop slot ``i``'s next pending chunk into ``works[i]`` — or,
+        for a live stream, pull the next coverable window span from its
+        cursor (``works[i]`` stays None when no new frames' receptive
+        fields are covered by arrived samples yet)."""
         slot = self.slots[i]
+        if slot.stream is not None:
+            sw = slot.stream.cursor.next_work(slot.req)
+            if sw is None:
+                return
+            slot.stream.need = sw.need
+            slot.stream.needs_finish = sw.needs_finish
+            works[i] = PrefillWork(sw.payload, sw.n_units, slot.pos,
+                                   slot.fresh, sw.final, slot.req)
+            return
         chunk = slot.pending.pop(0)
         works[i] = PrefillWork(chunk.payload, chunk.n_units, slot.pos,
                                slot.fresh, not slot.pending, slot.req)
@@ -332,6 +427,8 @@ class ServingEngine:
                        key=lambda i: self.slots[i].seq)
         for i in order:
             self._pop_chunk(works, i)
+            if works[i] is None:        # stream with nothing coverable
+                continue
             if left is not None:
                 left -= works[i].n_units
                 if left <= 0:
@@ -362,6 +459,14 @@ class ServingEngine:
                 slot.fresh = False
                 slot.pos += w.n_units
                 self.metrics.record_prefill(w.n_units)
+                if slot.stream is not None:
+                    slot.stream.consumed = slot.pos
+                    if toks:    # sample-arrival -> base-emission latency
+                        t_en = slot.req.enable_time(slot.stream.need,
+                                                    slot.stream.needs_finish)
+                        if t_en is not None:
+                            self.metrics.record_emit(
+                                max(self.metrics.clock() - t_en, 0.0))
                 if toks:
                     first = not slot.req.out_tokens
                     slot.req.out_tokens.extend(toks)
@@ -386,6 +491,15 @@ class ServingEngine:
                 slot.last_token = token
                 if slot.req.done:
                     self._finish(i)
+        # read-until verdicts surface after the tick's tokens are booked
+        # (a read finishing this very tick wins over its ejection — its
+        # _finish already reset the row, clearing the pending verdict)
+        pop = getattr(self.runner, "pop_ejections", None)
+        if pop is not None:
+            for i in pop():
+                s = self.slots[i]
+                if s.state != FREE and s.req is not None and not s.req.done:
+                    self._eject(i)
 
     def _ensure_decode_blocks(self) -> None:
         """Every DECODE slot writes position ``slot.pos`` this tick;
@@ -405,10 +519,14 @@ class ServingEngine:
 
     def _preempt(self, i: int) -> None:
         """Evict a running request, free its pool row, and requeue it at
-        the FRONT for resume-by-re-prefill."""
+        the FRONT for resume-by-re-prefill (streams stash their cursor +
+        the runner's row state and resume exactly where they left)."""
         slot = self.slots[i]
         req = slot.req
+        if slot.stream is not None:     # export BEFORE the row resets
+            req._stream_resume = (slot.stream, self.runner.export_row(i))
         self.runner.reset_row(i)
+        req.status = "preempted-pending"
         self.metrics.record_preempt(req.rid)
         self.queue.appendleft(req)
         self.slots[i] = _Slot()
@@ -417,10 +535,32 @@ class ServingEngine:
         slot = self.slots[i]
         req = slot.req
         self.runner.reset_row(i)        # pool row back to the free lists
-        req.finished = True
+        req.status = "finished"
         self.metrics.record_done(req.rid, len(req.out_tokens))
+        self._complete(req)
+        self.slots[i] = _Slot()         # back to FREE; reset at next admit
+
+    def _eject(self, i: int) -> None:
+        """Read-until: the classifier rejected this read — flush the CTC
+        merge's best-so-far bases, free the slot + any pool rows, and
+        complete the request with status ``ejected`` (its out_tokens are
+        the PARTIAL bases emitted before ejection)."""
+        slot = self.slots[i]
+        req = slot.req
+        flush = getattr(self.runner, "flush_row", None)
+        if flush is not None:           # beam merges emit only at flush
+            req.out_tokens.extend(int(t) for t in flush(i))
+        self.runner.reset_row(i)
+        req.status = "ejected"
+        arrived = (int(np.asarray(req.signal).size)
+                   if req.signal is not None else 0)
+        self.metrics.record_eject(req.rid, consumed=slot.pos,
+                                  arrived=arrived)
+        self._complete(req)
+        self.slots[i] = _Slot()
+
+    def _complete(self, req: Request) -> None:
         self.completed[req.rid] = req
         if self.history_limit:
             while len(self.completed) > self.history_limit:
                 self.completed.pop(next(iter(self.completed)))
-        self.slots[i] = _Slot()         # back to FREE; reset at next admit

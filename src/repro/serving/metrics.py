@@ -66,10 +66,17 @@ class ServingMetrics:
         # decode-interval jitter reservoir (p50 = steady cadence, p99 =
         # the stall an admission injects under split-tick scheduling)
         self.decode_interval_samples = _samples()
+        # streaming: sample-arrival -> base-emission latency reservoir
+        self.emit_latency_samples = _samples()
         self._last_decode_time: Optional[float] = None
         self.done_count = 0             # exact even when `requests` rolls
         self.gen_count = 0
         self.preempts = 0
+        # read-until: ejection + samples-saved accounting (exact counters)
+        self.ejections = 0
+        self.ejected_consumed = 0       # samples basecalled before eject
+        self.ejected_arrived = 0        # samples arrived before eject
+        self.samples_saved = 0          # samples never sequenced/appended
         self.decode_steps = 0
         self.decode_tokens = 0          # useful (non-pad) tokens decoded
         self.decode_time = 0.0
@@ -101,6 +108,29 @@ class ServingMetrics:
 
     def record_preempt(self, rid: int) -> None:
         self.preempts += 1
+
+    def record_emit(self, latency_s: float) -> None:
+        """One streamed base-emission event: seconds from the arrival of
+        the sample that completed the emitted frames' receptive field to
+        the bases landing in ``out_tokens``."""
+        self.emit_latency_samples.append(latency_s)
+
+    def record_eject(self, rid: int, consumed: int, arrived: int) -> None:
+        """A read-until ejection: the read completed with status
+        ``ejected`` after basecalling ``consumed`` of its ``arrived``
+        samples. Arrived-but-never-basecalled samples count as saved
+        immediately; the traffic generator adds the forgone tail via
+        :meth:`record_samples_saved` when it stops appending."""
+        r = self._req(rid)
+        r.done = self.end_time = self.clock()
+        self.ejections += 1
+        self.ejected_consumed += consumed
+        self.ejected_arrived += arrived
+        self.samples_saved += max(arrived - consumed, 0)
+
+    def record_samples_saved(self, n: int) -> None:
+        """Samples a generator skipped because the read was ejected."""
+        self.samples_saved += n
 
     def record_done(self, rid: int, n_generated: int) -> None:
         r = self._req(rid)
@@ -146,6 +176,7 @@ class ServingMetrics:
         act = list(self.active_samples)
         pu = list(self.pool_util_samples)
         di = list(self.decode_interval_samples)
+        em = list(self.emit_latency_samples)
         return {
             "requests_done": self.done_count,
             "generated_tokens": gen,
@@ -163,6 +194,12 @@ class ServingMetrics:
             "ttft_p99_s": _pct(ttfts, 0.99),
             "decode_interval_p50_s": _pct(di, 0.50),
             "decode_interval_p99_s": _pct(di, 0.99),
+            "emit_events": len(em),
+            "emit_latency_p50_s": _pct(em, 0.50),
+            "emit_latency_p99_s": _pct(em, 0.99),
+            "ejections": self.ejections,
+            "ejected_consumed_samples": self.ejected_consumed,
+            "samples_saved": self.samples_saved,
             "queue_depth_max": max(qd, default=0),
             "queue_depth_mean": sum(qd) / len(qd) if qd else 0.0,
             "slot_occupancy": sum(act) / len(act) if act else 0.0,

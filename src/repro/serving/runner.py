@@ -98,10 +98,18 @@ class DecodeWork(NamedTuple):
 
 class ModelRunner:
     """Duck-typed base for serving backends (see the module docstring
-    for the contract). The engine only ever touches these members."""
+    for the contract). The engine only ever touches these members.
+
+    Streaming (``repro.serving.stream``) is opt-in: a runner that sets
+    ``supports_streaming = True`` must implement ``open_stream`` (build
+    the per-request window cursor) and ``export_row``/``restore_row``
+    (stash/restore per-slot state across preemption); ``flush_row`` and
+    ``pop_ejections`` back the read-until ejection path.
+    """
 
     autoregressive: bool = True
     pool = None                         # CachePool or None
+    supports_streaming: bool = False    # accepts StreamingRequest payloads
 
     def validate(self, req) -> None:
         raise NotImplementedError
@@ -120,6 +128,27 @@ class ModelRunner:
 
     def pool_util(self) -> float:
         return 0.0
+
+    # ---- streaming / read-until hooks (basecaller-only today) ----
+    def open_stream(self, req):
+        """Build the window cursor for a freshly admitted stream."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not serve StreamingRequests")
+
+    def export_row(self, slot: int):
+        """Snapshot per-slot state for a preempted stream's resume."""
+        return None
+
+    def restore_row(self, slot: int, state) -> None:
+        """Restore an :meth:`export_row` snapshot at re-admission."""
+
+    def flush_row(self, slot: int) -> List[int]:
+        """Best-so-far tokens held back by the slot's merge (ejection)."""
+        return []
+
+    def pop_ejections(self) -> List[int]:
+        """Slots whose read-until verdict said eject (cleared on read)."""
+        return []
 
     def step(self, works: List[Optional[Any]]) -> List[List[int]]:
         """Run one co-batched tick. ``works`` has one entry per slot:
@@ -249,6 +278,11 @@ class TokenRunner(ModelRunner):
 
     # ------------------------------------------------------------ intake
     def validate(self, req) -> None:
+        if getattr(req, "streaming", False):
+            raise ValueError(
+                f"request {req.rid}: {type(self).__name__} cannot serve a "
+                f"StreamingRequest — live signal append is basecaller-"
+                f"only (token prompts arrive whole)")
         if req.signal is not None:
             raise ValueError(
                 f"request {req.rid}: {type(self).__name__} serves token "
@@ -474,14 +508,40 @@ class BasecallerRunner(ModelRunner):
     are never read), with per-row ``(B,)`` start/read_len bounds; each
     row's core frames stay bit-identical to the whole-read forward, so
     batching changes throughput, not output.
+
+    Payload contract: ``(window, f_lo, f_hi, start, read_len,
+    classify)`` — the window's core frames ``[f_lo, f_hi)`` feed the
+    merge (offline chunks always span the full window; streaming spans
+    only the newly-STABLE frames under the latency QoS), ``start`` /
+    ``read_len`` are the read-edge mask bounds (``read_len`` is the
+    :data:`repro.serving.stream.UNBOUNDED` sentinel while a stream's
+    end is unknown), and ``classify`` marks windows the read-until
+    classifier scores.
+
+    Streaming (``supports_streaming``): :class:`StreamingRequest`
+    payloads skip ``make_chunks`` — the engine pulls works from the
+    :class:`repro.serving.stream.StreamCursor` built by
+    :meth:`open_stream`; ``qos`` picks eager per-frame flushing
+    (``"latency"``) or once-per-window forwards (``"accuracy"``).
+
+    Read-until (``read_until=ReadUntil(...)``): the start-of-read
+    classifier head runs INSIDE the same jitted tick (the forward
+    returns ``(log_probs, on-target logits)``; one readback either
+    way). The host accumulates each read's logit over its first
+    ``eject_after_chunks`` fully-covered windows and flags the slot for
+    ejection when the mean falls below ``threshold``; the engine
+    collects the flags via :meth:`pop_ejections` after booking the
+    tick's bases.
     """
 
     autoregressive = False
     pool = None
+    supports_streaming = True
 
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int,
                  chunk_samples: int = 1024, beam: int = 0,
-                 model_state=None, **_):
+                 model_state=None, qos: str = "accuracy",
+                 read_until=None, **_):
         from repro.models.basecaller import model as bc
         from repro.models.basecaller import ctc
         self._bc, self._ctc = bc, ctc
@@ -492,14 +552,32 @@ class BasecallerRunner(ModelRunner):
         self.halo = bc.chunk_halo(cfg)
         self.core = max(-(-int(chunk_samples) // self.stride), 1) * self.stride
         self.beam = int(beam)
+        self.qos = qos
+        self.read_until = read_until
         self.state = model_state if model_state is not None \
             else bc.init_state(cfg)
         self._merge: List[Optional[Any]] = [None] * self.n_slots
-        self._fwd = jax.jit(lambda p, s, w, start, read_len: bc.forward_window(
-            p, s, w, cfg, start, read_len))
+        # read-until bookkeeping: per-slot logit accumulator + verdicts
+        self._cls_sum = np.zeros((self.n_slots,), np.float64)
+        self._cls_n = np.zeros((self.n_slots,), np.int64)
+        self._cls_decided = [False] * self.n_slots
+        self._eject_pending: set = set()
+        if read_until is not None:
+            from repro.models.basecaller import classifier as rc
+            cls_params = read_until.params
+
+            def fwd(p, s, w, start, read_len):
+                return (bc.forward_window(p, s, w, cfg, start, read_len),
+                        rc.forward(cls_params, w))
+        else:
+            def fwd(p, s, w, start, read_len):
+                return bc.forward_window(p, s, w, cfg, start, read_len)
+        self._fwd = jax.jit(fwd)
 
     # ------------------------------------------------------------ intake
     def validate(self, req) -> None:
+        if getattr(req, "streaming", False):
+            return                      # samples arrive later via append()
         if req.signal is None:
             raise ValueError(
                 f"request {req.rid}: basecaller serving needs a `signal` "
@@ -510,12 +588,23 @@ class BasecallerRunner(ModelRunner):
     def make_chunks(self, req) -> List[Chunk]:
         sig = np.asarray(req.signal, np.float32).reshape(-1)
         wins = self._bc.chunk_windows(sig, self.core, self.halo, self.stride)
-        return [Chunk((w, nf, k * self.core - self.halo, sig.shape[0]), ns)
+        K = self.read_until.eject_after_chunks if self.read_until else 0
+        return [Chunk((w, 0, nf, k * self.core - self.halo, sig.shape[0],
+                       int(k < K)), ns)
                 for k, (w, nf, ns) in enumerate(wins)]
 
     def admit(self, slot: int, req) -> None:
         self._merge[slot] = (self._ctc.BeamCTCMerge(self.beam) if self.beam
                              else self._ctc.GreedyCTCMerge())
+        self._cls_sum[slot] = 0.0
+        self._cls_n[slot] = 0
+        self._cls_decided[slot] = False
+
+    def open_stream(self, req):
+        from repro.serving.stream import StreamCursor
+        K = self.read_until.eject_after_chunks if self.read_until else 0
+        return StreamCursor(self.core, self.halo, self.stride,
+                            qos=self.qos, classify_chunks=K)
 
     # ------------------------------------------------------------- pool
     def alloc_pool(self, slot: int, upto: int) -> bool:
@@ -523,6 +612,34 @@ class BasecallerRunner(ModelRunner):
 
     def reset_row(self, slot: int) -> None:
         self._merge[slot] = None
+        self._cls_sum[slot] = 0.0
+        self._cls_n[slot] = 0
+        self._cls_decided[slot] = False
+        self._eject_pending.discard(slot)
+
+    def export_row(self, slot: int):
+        """Preemption stash: the merge (cloned — its state is mutated in
+        place by feed) plus the read-until accumulator."""
+        merge = self._merge[slot]
+        return (merge.clone() if merge is not None else None,
+                float(self._cls_sum[slot]), int(self._cls_n[slot]),
+                self._cls_decided[slot])
+
+    def restore_row(self, slot: int, state) -> None:
+        merge, cls_sum, cls_n, decided = state
+        self._merge[slot] = merge
+        self._cls_sum[slot] = cls_sum
+        self._cls_n[slot] = cls_n
+        self._cls_decided[slot] = decided
+
+    def flush_row(self, slot: int) -> List[int]:
+        merge = self._merge[slot]
+        return list(merge.finalize()) if merge is not None else []
+
+    def pop_ejections(self) -> List[int]:
+        out = sorted(self._eject_pending)
+        self._eject_pending.clear()
+        return out
 
     def pool_util(self) -> float:
         return 0.0
@@ -537,28 +654,45 @@ class BasecallerRunner(ModelRunner):
         for i, w in enumerate(works):
             if w is None:
                 continue
-            window, _, st, rl = w.payload
+            window, _, _, st, rl, _ = w.payload
             wins[i] = window
             start[i] = st
             read_len[i] = rl
-        # sync: CTC merge (stitch/beam) is host-side by design — every
-        # basecall tick reads the window's log-probs back
-        lp = np.asarray(self._fwd(self.params, self.state, wins, start,
-                                  read_len))
+        if self.read_until is not None:
+            lp, cls = self._fwd(self.params, self.state, wins, start,
+                                read_len)
+            # sync: CTC merge (stitch/beam) and the read-until verdict
+            # are host-side by design — one readback covers both
+            lp, cls = np.asarray(lp), np.asarray(cls)
+        else:
+            # sync: CTC merge (stitch/beam) is host-side by design —
+            # every basecall tick reads the window's log-probs back
+            lp = np.asarray(self._fwd(self.params, self.state, wins,
+                                      start, read_len))
+            cls = None
         f0 = self.halo // self.stride
         out: List[List[int]] = []
         for i, w in enumerate(works):
             if w is None:
                 out.append([])
                 continue
-            _, n_frames, _, _ = w.payload
-            core = lp[i, f0:f0 + n_frames]
+            _, f_lo, f_hi, _, _, classify = w.payload
+            core = lp[i, f0 + f_lo:f0 + f_hi]
             merge = self._merge[i]
             toks = merge.feed(core if self.beam
                               else np.argmax(core, axis=-1))
             if w.final:
                 toks = toks + merge.finalize()
             out.append(toks)
+            if cls is not None and classify and not self._cls_decided[i]:
+                self._cls_sum[i] += float(cls[i])
+                self._cls_n[i] += 1
+                ru = self.read_until
+                if self._cls_n[i] >= ru.eject_after_chunks:
+                    self._cls_decided[i] = True
+                    mean = self._cls_sum[i] / self._cls_n[i]
+                    if mean < ru.threshold:
+                        self._eject_pending.add(i)
         return out
 
 

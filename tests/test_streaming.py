@@ -1,0 +1,329 @@
+"""Streaming serving + read-until (PR 9 acceptance).
+
+Parity contract: a StreamingRequest's emitted bases are ALWAYS a prefix
+of the whole-read offline basecall — after every append, under any
+append schedule, for both QoS modes — and equal it exactly once the
+stream finishes and drains. Read-until ejection completes requests with
+status ``ejected`` (bases-so-far kept, slot freed, samples-saved
+accounted); preemption stashes and resumes live cursor + merge state.
+"""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_config
+from repro.models import api
+from repro.models.basecaller import classifier as rc
+from repro.models.basecaller import model as bc
+from repro.models.basecaller.ctc import greedy_decode
+from repro.serving import Request, ServingEngine
+from repro.serving.runner import make_runner
+from repro.serving.stream import ReadUntil, StreamingRequest
+
+_rid = itertools.count(100)
+
+CHUNK = 300          # core samples per window (bonito-smoke: stride 3)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("bonito-smoke")
+    params = api.init_params(jax.random.key(0), cfg)
+    engines = {q: ServingEngine(params, cfg, n_slots=2, chunk_samples=CHUNK,
+                                qos=q) for q in ("accuracy", "latency")}
+    return cfg, params, engines
+
+
+def _offline_tokens(params, cfg, sig):
+    state = bc.init_state(cfg)
+    lp, _ = bc.forward(params, state, jnp.asarray(sig[None, :, None]), cfg,
+                       train=False)
+    return [int(v) for v in greedy_decode(np.asarray(lp))[0]]
+
+
+def _settle(eng):
+    """Step until no slot makes progress (nothing coverable yet)."""
+    for _ in range(400):
+        if not eng.busy:
+            return
+        marker = (tuple(s.pos for s in eng.slots), len(eng.completed))
+        eng.step()
+        if (tuple(s.pos for s in eng.slots), len(eng.completed)) == marker:
+            return
+    raise AssertionError("engine failed to settle in 400 ticks")
+
+
+def _random_chunks(sig, seed):
+    rs = np.random.RandomState(seed)
+    out, a = [], 0
+    while a < len(sig):
+        n = int(rs.randint(1, 220))
+        out.append(sig[a:a + n])
+        a += n
+    return out
+
+
+SCHEDULES = {
+    # 1-sample dribble (short read, every boundary exercised)
+    "dribble": lambda s: [s[i:i + 1] for i in range(len(s))],
+    # appends aligned exactly to the window core
+    "exact_window": lambda s: [s[a:a + CHUNK]
+                               for a in range(0, len(s), CHUNK)],
+    # bursty random chunk sizes
+    "bursty": lambda s: _random_chunks(s, seed=7),
+    # everything at once, then finish
+    "whole": lambda s: [s],
+}
+LENGTHS = {"dribble": 430, "exact_window": 901, "bursty": 700, "whole": 505}
+
+
+@pytest.mark.parametrize("qos", ["accuracy", "latency"])
+@pytest.mark.parametrize("schedule", sorted(SCHEDULES))
+def test_streaming_prefix_consistent_and_final_bit_identical(
+        setup, qos, schedule):
+    """Under ANY append schedule and either QoS mode, the emitted bases
+    after every append are a prefix of the offline whole-read basecall,
+    and the finished stream equals it exactly."""
+    cfg, params, engines = setup
+    eng = engines[qos]
+    sig = np.random.RandomState(hash(schedule) % 2**31) \
+        .randn(LENGTHS[schedule]).astype(np.float32)
+    want = _offline_tokens(params, cfg, sig)
+    req = StreamingRequest(rid=next(_rid))
+    eng.submit(req)
+    assert req.status == "queued"
+    for chunk in SCHEDULES[schedule](sig):
+        req.append(chunk)
+        _settle(eng)
+        n = len(req.out_tokens)
+        assert req.out_tokens == want[:n], \
+            f"{qos}/{schedule}: emitted bases are not a prefix"
+    req.finish()
+    _settle(eng)
+    assert req.done and req.status == "finished"
+    assert req.out_tokens == want, f"{qos}/{schedule}: final mismatch"
+    done = eng.drain_completed()
+    assert done[req.rid] is req
+
+
+@pytest.mark.parametrize("attn_backend", ["xla", "pallas"])
+def test_streaming_parity_under_either_attn_backend(setup, attn_backend):
+    """The basecaller runner has no KV attention, but the engine must
+    accept the shared runner knob and stream identically under both."""
+    cfg, params, _ = setup
+    eng = ServingEngine(params, cfg, n_slots=1, chunk_samples=CHUNK,
+                        qos="latency", attn_backend=attn_backend)
+    sig = np.random.RandomState(11).randn(640).astype(np.float32)
+    req = StreamingRequest(rid=next(_rid))
+    eng.submit(req)
+    for a in range(0, 640, 160):
+        req.append(sig[a:a + 160])
+        _settle(eng)
+    req.finish()
+    _settle(eng)
+    assert req.out_tokens == _offline_tokens(params, cfg, sig)
+
+
+def test_streaming_preempt_resume_mid_stream(setup):
+    """Preempting a live stream stashes its cursor + CTC merge; the
+    resumed request continues from where it left and still finishes
+    bit-identical to the offline basecall."""
+    cfg, params, engines = setup
+    eng = engines["accuracy"]
+    sig = np.random.RandomState(21).randn(960).astype(np.float32)
+    req = StreamingRequest(rid=next(_rid))
+    eng.submit(req)
+    req.append(sig[:700])                 # covers window 0 (669 samples)
+    _settle(eng)
+    i = next(i for i, s in enumerate(eng.slots) if s.req is req)
+    assert eng.slots[i].pos > 0
+    eng._preempt(i)
+    assert req.status == "preempted-pending"
+    assert not req.done
+    req.append(sig[700:])                 # append while evicted
+    req.finish()
+    _settle(eng)                          # re-admits from the queue front
+    assert req.status == "finished"
+    assert req.out_tokens == _offline_tokens(params, cfg, sig)
+    assert eng.metrics.preempts >= 1
+
+
+def test_non_basecaller_runners_reject_streaming_requests():
+    """Engine submit and the token runner itself both refuse live
+    streams with a clear error."""
+    qcfg = get_config("qwen1.5-4b-smoke")
+    qparams = api.init_params(jax.random.key(0), qcfg)
+    eng = ServingEngine(qparams, qcfg, n_slots=1, cache_len=16,
+                        prefill_chunk=4, cache_dtype=jnp.float32)
+    with pytest.raises(ValueError, match="StreamingRequest"):
+        eng.submit(StreamingRequest(rid=0))
+    runner = make_runner(qparams, qcfg, n_slots=1, cache_len=16,
+                         prefill_chunk=4, cache_dtype=jnp.float32)
+    with pytest.raises(ValueError, match="StreamingRequest"):
+        runner.validate(StreamingRequest(rid=1))
+
+
+def test_streaming_append_finish_contract():
+    req = StreamingRequest(rid=0)
+    with pytest.raises(ValueError, match="empty stream"):
+        req.finish()
+    assert req.append(np.ones(4, np.float32)) == 4
+    req.finish()
+    req.finish()                           # idempotent
+    with pytest.raises(RuntimeError, match="after finish"):
+        req.append(np.ones(1, np.float32))
+
+
+def test_run_raises_instead_of_spinning_on_unfinished_streams(setup):
+    """run() drains whole-payload requests; on a stream that will never
+    finish by itself it must raise, not live-lock."""
+    cfg, params, _ = setup
+    eng = ServingEngine(params, cfg, n_slots=1, chunk_samples=CHUNK)
+    req = StreamingRequest(rid=next(_rid))
+    eng.submit(req)
+    req.append(np.ones(32, np.float32))
+    with pytest.raises(RuntimeError, match="stalled"):
+        eng.run()
+    req.finish()                           # leave the engine drainable
+    _settle(eng)
+    assert req.done
+
+
+# ---------------------------------------------------------- read-until
+
+
+def _force_eject_policy(eject_after_chunks=1, threshold=None):
+    """A ReadUntil whose untrained classifier plus extreme threshold
+    makes the verdict deterministic: +inf ejects everything, -inf keeps
+    everything — isolates ejection MECHANICS from classifier quality."""
+    params = rc.init_params(jax.random.key(3))
+    return ReadUntil(params=params, eject_after_chunks=eject_after_chunks,
+                     threshold=1e9 if threshold is None else threshold)
+
+
+def test_request_status_lifecycle_and_drain_filter(setup):
+    """finished / ejected / preempted-pending are distinct statuses;
+    drain_completed(status=...) filters; ejected keeps bases-so-far and
+    books samples saved (the PR-9 status regression)."""
+    cfg, params, _ = setup
+    eng = ServingEngine(params, cfg, n_slots=2, chunk_samples=CHUNK,
+                        read_until=_force_eject_policy(eject_after_chunks=1,
+                                                       threshold=-1e9))
+    keep = np.random.RandomState(5).randn(700).astype(np.float32)
+    eng.submit(Request(rid=0, signal=keep))
+    done = eng.run()
+    assert done[0].status == "finished" and done[0].finished \
+        and not done[0].ejected
+
+    eng2 = ServingEngine(params, cfg, n_slots=2, chunk_samples=CHUNK,
+                         read_until=_force_eject_policy())
+    sig = np.random.RandomState(6).randn(900).astype(np.float32)
+    eng2.submit(Request(rid=1, signal=sig))
+    done2 = eng2.run()
+    r = done2[1]
+    assert r.status == "ejected" and r.ejected and not r.finished
+    assert r.done
+    want = _offline_tokens(params, cfg, sig)
+    assert 0 < len(r.out_tokens) < len(want)
+    assert r.out_tokens == want[:len(r.out_tokens)]
+    m = eng2.metrics.summary()
+    assert m["ejections"] == 1
+    assert m["samples_saved"] > 0               # 900 arrived, 300 consumed
+    assert m["ejected_consumed_samples"] == CHUNK
+    assert eng2.drain_completed(status="finished") == {}
+    assert eng2.drain_completed(status="ejected") == {1: r}
+    assert eng2.drain_completed() == {}         # drain really drains
+    # statuses survive in the request object after draining
+    assert r.ejected
+
+
+def test_read_until_ejects_streamed_noise_keeps_target(setup):
+    """End-to-end with a TRAINED classifier: a live white-noise read is
+    ejected after <= eject_after_chunks windows while a pore-model read
+    streams through to a full basecall."""
+    cfg, params, _ = setup
+    from repro.data.squiggle import (SquiggleConfig, normalize, pore_table,
+                                     simulate_read)
+    stride = bc.total_stride(cfg)
+    halo = bc.chunk_halo(cfg)
+    window = -(-CHUNK // stride) * stride + 2 * halo
+    x, y = rc.make_training_set(np.random.RandomState(8), window,
+                                n_per_class=16)
+    cls, _ = rc.fit(rc.init_params(jax.random.key(9)), x, y, steps=80,
+                    lr=0.1)
+    eng = ServingEngine(params, cfg, n_slots=2, chunk_samples=CHUNK,
+                        read_until=ReadUntil(params=cls,
+                                             eject_after_chunks=2))
+    rs = np.random.RandomState(10)
+    target, _ = simulate_read(rs, SquiggleConfig(noise=0.1, drift=0.0),
+                              pore_table(), 160)
+    target = normalize(target)
+    noise = normalize(rs.randn(1400).astype(np.float32))
+    reqs = {0: StreamingRequest(rid=0), 1: StreamingRequest(rid=1)}
+    sigs = {0: target, 1: noise}
+    for r in reqs.values():
+        eng.submit(r)
+    ptr = {0: 0, 1: 0}
+    while not all(r.done for r in reqs.values()):
+        for k, r in reqs.items():
+            if r.done:
+                continue
+            nxt = min(ptr[k] + 250, len(sigs[k]))
+            if nxt > ptr[k]:
+                r.append(sigs[k][ptr[k]:nxt])
+                ptr[k] = nxt
+            elif not r.stream_finished:
+                r.finish()
+        _settle(eng)
+    assert reqs[0].status == "finished"
+    assert reqs[0].out_tokens == _offline_tokens(params, cfg, target)
+    assert reqs[1].status == "ejected"
+    # decided after at most eject_after_chunks windows of basecalling
+    m = eng.metrics.summary()
+    assert m["ejections"] == 1
+    assert m["ejected_consumed_samples"] <= 2 * CHUNK
+
+
+def test_classifier_separates_pore_signal_from_noise():
+    """The tiny strided-CNN head learns pore-vs-noise from synthetic
+    windows with high held-out accuracy."""
+    x, y = rc.make_training_set(np.random.RandomState(0), 640,
+                                n_per_class=24)
+    xt, yt = rc.make_training_set(np.random.RandomState(1), 640,
+                                  n_per_class=12)
+    params, loss = rc.fit(rc.init_params(jax.random.key(0)), x, y,
+                          steps=120, lr=0.1)
+    assert loss < 0.5
+    pred = (np.asarray(rc.forward(params, jnp.asarray(xt))) > 0)
+    assert (pred == (yt > 0.5)).mean() >= 0.9
+
+
+def test_emit_latency_metrics_with_fake_clock(setup):
+    """Emit latency = clock at emission - clock when the enabling sample
+    (or finish) arrived; with a shared fake clock the reservoir fills
+    deterministically and the summary exposes p50/p99."""
+    cfg, params, _ = setup
+    t = [0.0]
+
+    def clock():
+        t[0] += 1.0
+        return t[0]
+
+    eng = ServingEngine(params, cfg, n_slots=1, chunk_samples=CHUNK,
+                        qos="latency", clock=clock)
+    req = StreamingRequest(rid=next(_rid), clock=clock)
+    eng.submit(req)
+    sig = np.random.RandomState(12).randn(800).astype(np.float32)
+    for a in range(0, 800, 200):
+        req.append(sig[a:a + 200])
+        _settle(eng)
+    req.finish()
+    _settle(eng)
+    assert req.status == "finished"
+    m = eng.metrics.summary()
+    assert m["emit_events"] > 0
+    assert np.isfinite(m["emit_latency_p50_s"])
+    assert 0 <= m["emit_latency_p50_s"] <= m["emit_latency_p99_s"]
