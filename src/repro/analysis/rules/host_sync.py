@@ -11,8 +11,13 @@ structured ``# sync: <reason>`` annotation on its line (or the line
 above). New unannotated syncs fail the gate; the annotation is the
 reviewable record of why the round trip is intentional.
 
-Scope: functions matching ``^(step|_step_\\w+|_run_works)$`` (the
-per-tick hot path) in ``serving/engine.py`` and ``serving/runner.py``.
+Scope: the per-tick hot path in ``serving/engine.py`` and
+``serving/runner.py`` — ``step``/``_step_*``/``_run_works`` plus the
+pipelined split (``dispatch``/``_dispatch_*``, ``collect``/
+``_collect_*``, ``_harvest*``). The async engine's whole point is that
+its dispatch half performs ZERO syncs (the one token readback lives in
+``collect``, a tick behind), so an unannotated sync creeping into a
+dispatch function silently re-serializes the pipeline.
 Sync calls detected: ``np.asarray``/``numpy.asarray``, ``.item()``,
 ``jax.device_get``, ``.block_until_ready()``. Suppress a false
 positive (a call on a host value) with ``# repro-allow: host-sync``.
@@ -27,7 +32,9 @@ from repro.analysis.findings import Finding, inline_allowed
 from repro.analysis.rules import rule
 
 TICK_FILES = ("serving/engine.py", "serving/runner.py")
-TICK_FUNC_RE = re.compile(r"^(step|_step_\w+|_run_works)$")
+TICK_FUNC_RE = re.compile(
+    r"^(step|_step_\w+|_run_works"
+    r"|dispatch|_dispatch_\w+|collect|_collect_\w+|_harvest\w*)$")
 SYNC_MARKER_RE = re.compile(r"#\s*sync:\s*\S")
 
 

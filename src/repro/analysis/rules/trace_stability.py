@@ -11,7 +11,12 @@ twice each with identical shape buckets and assert the underlying
 compiled-program caches did not grow on the repeat — and that one
 bucket compiled exactly one program in the first place (a cache that
 starts above 1 means a static-arg hash is unstable within a single
-call batch).
+call batch). The bucket-coverage audit closes the loop from the other
+side: every tick shape the ENGINE SCHEDULER can emit (decode-only
+plus every mixed chunk width 1..prefill_chunk, greedy and sampled)
+must round to a registered plan bucket — a width that escapes the
+bucket set is exactly the shape that would compile mid-traffic after
+``--warmup`` claimed the plan set was closed.
 """
 from __future__ import annotations
 
@@ -57,10 +62,49 @@ def audit_program(name: str, jitted, call: Callable[[], None],
     return findings
 
 
+def bucket_coverage(runner, label: str) -> List[Finding]:
+    """Schedulable-shape closure: every (kind, width, flavor) the engine
+    scheduler can hand this runner rounds to a registered plan bucket,
+    so ``warmup()`` genuinely pre-pays every mid-traffic compile."""
+    from repro.serving.plan import round_chunk
+    findings: List[Finding] = []
+    for flavor in ("greedy", "sampled"):
+        if ("decode", 1, flavor) not in runner.plans:
+            findings.append(Finding(
+                "trace-stability", f"{label}::bucket-coverage",
+                f"no ('decode', 1, {flavor!r}) plan — the lockstep "
+                f"decode tick would compile lazily mid-traffic"))
+        for n in range(1, runner.chunk_tokens + 1):
+            try:
+                b = round_chunk(n, runner.buckets)
+            except ValueError:
+                findings.append(Finding(
+                    "trace-stability", f"{label}::bucket-coverage",
+                    f"mixed chunk width {n} does not round to any "
+                    f"bucket in {runner.buckets} — the scheduler can "
+                    f"emit a shape outside the warmed plan set"))
+                continue
+            if ("mixed", b, flavor) not in runner.plans:
+                findings.append(Finding(
+                    "trace-stability", f"{label}::bucket-coverage",
+                    f"mixed width {n} rounds to bucket {b} but no "
+                    f"('mixed', {b}, {flavor!r}) plan is registered"))
+    stats = runner.plans.stats()
+    if stats["retraces"]:
+        findings.append(Finding(
+            "trace-stability", f"{label}::plan-retrace",
+            f"{stats['retraces']} plan-cache retrace(s): a warmed plan's "
+            f"compiled-program cache grew past one entry — each bucket "
+            f"pins exactly one argument shape, so this is a mid-traffic "
+            f"compile the warmup did not pre-pay"))
+    return findings
+
+
 @rule("trace-stability", "runtime",
       "ticking the same shape bucket twice hits the jit cache (retrace-"
       "counter audit over the real TokenRunner + streaming-basecaller "
-      "step programs)")
+      "step programs) and every schedulable tick shape rounds to a "
+      "registered plan bucket")
 def check(ctx) -> List[Finding]:
     runner, works_decode, works_mixed = ctx.trace_stability_setup()
     findings: List[Finding] = []
@@ -70,6 +114,7 @@ def check(ctx) -> List[Finding]:
     findings += audit_program(
         "TokenRunner._step_greedy[qwen1.5-4b-smoke]",
         runner._step_greedy, lambda: runner.step(works_mixed))
+    findings += bucket_coverage(runner, "TokenRunner[qwen1.5-4b-smoke]")
     # streaming tick: live-window forward + fused read-until classifier
     # (pre-finish payloads vary only in VALUES — UNBOUNDED read_len,
     # window content — never in shape, so repeats must hit the cache)

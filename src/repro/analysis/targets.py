@@ -129,11 +129,14 @@ def _trace_runner_steps(runner, label: str, quantized: bool
                 quantized=quantized, n_slots=B, block_len=pool.block_len,
                 arena_sigs=_pool_sigs(pool))
     tables = pool.device_tables()
+    chain = np.zeros((B,), np.int32)        # async chained-token args:
+    prev = np.zeros((B,), np.int32)         # all-zero = sync semantics
     # decode-only tick: the lockstep (B, 1) greedy program
     tok1 = np.zeros((B, 1), np.int32)
     t1 = np.arange(3, 3 + B, dtype=np.int32).reshape(B, 1)
     jx_decode = jax.make_jaxpr(runner._decode_greedy)(
-        runner.params, pool.caches, tok1, t1, tables, runner.enc_kv)
+        runner.params, pool.caches, tok1, t1, chain, prev, tables,
+        runner.enc_kv)
     # mixed tick: chunk row co-batched with a padded decode row
     tokC = np.zeros((B, C), np.int32)
     tC = np.full((B, C), -1, np.int32)
@@ -142,8 +145,8 @@ def _trace_runner_steps(runner, label: str, quantized: bool
     fresh = np.zeros((B,), np.int32)
     last = np.zeros((B,), np.int32)
     jx_mixed = jax.make_jaxpr(runner._step_greedy)(
-        runner.params, pool.caches, tokC, tC, fresh, last, tables,
-        runner.enc_kv)
+        runner.params, pool.caches, tokC, tC, chain, prev, fresh, last,
+        tables, runner.enc_kv)
     return [TraceTarget(name=f"step[{label}/decode]", jaxpr=jx_decode,
                         **meta),
             TraceTarget(name=f"step[{label}/mixed]", jaxpr=jx_mixed,

@@ -63,7 +63,14 @@ group — leave it 0 for full backing, or set it below
 ``slots * ceil(cache_len/block_len)`` to oversubscribe decode slots
 against KV bytes (short requests only pay for blocks they touch; the
 engine preempts the youngest request if the pool runs dry). The run
-summary reports pool utilization and preemptions. ``--attn-backend``
+summary reports pool utilization and preemptions. ``--warmup`` pre-compiles
+every bucketed tick plan at launch (the run report's ``retraces=``
+line should then stay 0); ``--async-dispatch`` pipelines the tick
+(dispatch tick N, harvest tick N-1 — token-identical, one-tick lag);
+``--max-queue``/``--queue-timeout`` bound admission, shedding overflow
+and expired waiters with explicit ``rejected`` statuses (see
+``repro.serving`` "Dispatch pipeline, buckets & backpressure").
+``--attn-backend``
 picks the decode-attention read path over that pool: ``pallas`` fuses
 decode ticks directly against the block arena (no per-layer logical-view
 gather), ``xla`` is the reference, ``auto`` resolves per hardware; the
@@ -174,6 +181,28 @@ def resolved_backend_label(engine) -> str:
     return backend
 
 
+def print_dispatch_report(s, args) -> None:
+    """Dispatch-pipeline section of the end-of-run report: plan-cache
+    health (the ``retraces=`` line is the mid-traffic-compile gate),
+    tick-latency percentiles, idle fast-path skips, and backpressure."""
+    print(f"[serve] plans: {s['plans']:.0f} registered, "
+          f"{s['plans_warmed']:.0f} warmed | bucket hits "
+          f"{s['bucket_hits']:.0f} misses {s['bucket_misses']:.0f} | "
+          f"retraces={s['retraces']:.0f}")
+    print(f"[serve] ticks ({'async pipelined' if args.async_dispatch else 'sync'}): "
+          f"p50 {s['tick_latency_p50_s']*1e3:.2f}ms "
+          f"p99 {s['tick_latency_p99_s']*1e3:.2f}ms | "
+          f"idle skipped {s['idle_ticks']:.0f} | "
+          f"queue hwm {s['queue_depth_hwm']:.0f}"
+          + (f" (max {args.max_queue})" if args.max_queue else "")
+          + f" | rejected {s['rejections']:.0f}")
+    if args.warmup and s["retraces"] > 0:
+        raise SystemExit(
+            f"[serve] error: {s['retraces']:.0f} mid-traffic retrace(s) "
+            f"after --warmup — traffic produced an argument signature "
+            f"warmup never compiled (CI gates this at zero)")
+
+
 PORE_HZ = 4000.0          # nanopore sample rate the streamed traffic mimics
 
 
@@ -278,6 +307,7 @@ def run_streamed(engine, cfg, args) -> None:
               f"({s['samples_saved']/max(total_samples,1)*100:.0f}%) | "
               f"basecalled {s['ejected_consumed_samples']:.0f} samples "
               f"on ejected reads")
+    print_dispatch_report(s, args)
     if done:
         first = done[min(done)]
         print(f"[serve] sample ({first.status}):", first.out_tokens[:16])
@@ -329,8 +359,15 @@ def run_engine(params, cfg, args) -> None:
         co_batch=not args.split_tick,
         cache_dtype=jnp.dtype(cfg.dtype),
         block_len=args.block_len, n_blocks=args.n_blocks,
-        history_limit=args.history_limit or None, **runner_kw)
+        history_limit=args.history_limit or None,
+        async_dispatch=args.async_dispatch, max_queue=args.max_queue,
+        queue_timeout_s=args.queue_timeout, **runner_kw)
     basecall = cfg.family == "basecaller"
+    if args.warmup:
+        t0 = time.perf_counter()
+        n = engine.warmup()
+        print(f"[serve] warmup: {n} tick plans pre-compiled in "
+              f"{time.perf_counter() - t0:.2f}s")
     if args.stream:
         print(f"[serve] engine ({type(engine.runner).__name__}): "
               f"{args.requests} LIVE reads (rate {args.rate}/s, "
@@ -418,6 +455,7 @@ def run_engine(params, cfg, args) -> None:
               f"max {s['pool_util_max']:.2f} | "
               f"preemptions {s['preemptions']:.0f} | "
               f"attn backend {resolved_backend_label(engine)}")
+    print_dispatch_report(s, args)
     done = engine.drain_completed()
     if done:
         sample = done[min(done)].out_tokens[:16]
@@ -515,6 +553,27 @@ def main():
                          "0 = unlimited), so a burst of admissions "
                          "cannot inflate the running slots' decode "
                          "interval")
+    ap.add_argument("--warmup", action="store_true",
+                    help="pre-compile every bucketed tick plan at launch "
+                         "(decode + all mixed chunk-width buckets x "
+                         "greedy/sampled, encoder staging, basecaller "
+                         "window) so traffic performs zero mid-run "
+                         "compiles — the report's retraces= line gates it")
+    ap.add_argument("--async-dispatch", action="store_true",
+                    help="pipeline the engine tick: dispatch tick N's "
+                         "device work, then harvest tick N-1's tokens — "
+                         "host scheduling/CTC-merge overlaps device "
+                         "compute behind a one-tick readback lag that is "
+                         "token-identical to the sync engine")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bounded admission: reject new submits (status "
+                         "'rejected', never silent) once this many fresh "
+                         "requests are queued; preempted requests are "
+                         "exempt (0 = unbounded)")
+    ap.add_argument("--queue-timeout", type=float, default=0.0,
+                    help="deadline-aware load-shed: reject queued "
+                         "requests still unadmitted this many seconds "
+                         "after arrival (0 = no deadline)")
     ap.add_argument("--split-tick", action="store_true",
                     help="legacy scheduler: one runner step per prefill "
                          "slot, then a decode-only step (admissions "

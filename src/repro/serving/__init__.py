@@ -262,6 +262,70 @@ basecalled (``samples_saved``; generators add the forgone tail via
 ``record_samples_saved``). ``serve.py --stream --read-until`` drives
 all of this from a live Poisson pore simulation.
 
+Dispatch pipeline, buckets & backpressure (PR 10)
+-------------------------------------------------
+
+How ticks reach the device is now a pipelined dispatch path built on a
+bucketed plan cache (:mod:`repro.serving.plan`):
+
+**Plan buckets + warmup.** Every schedulable tick shape rounds to a
+small fixed bucket set and each bucket owns its OWN ``jax.jit``
+wrapping (a *plan*): the pinned ``("decode", 1, flavor)`` lockstep
+programs plus one ``("mixed", w, flavor)`` program per chunk-width
+bucket — ``chunk_buckets(C)`` = powers of two below ``C`` plus ``C``
+itself, and the scheduler pads a mixed tick only up to
+``round_chunk(widest chunk)`` instead of always to the full
+``prefill_chunk``. ``engine.warmup()`` (``serve.py --warmup``)
+executes every registered plan once with representative padded
+arguments at launch, so a full traffic run performs ZERO mid-traffic
+compiles; ``PlanCache.stats()`` audits this by comparing each step
+callable's compiled-signature count against its warmed-key count
+(``retraces`` in the metrics summary and serve report — serve hard-
+fails on a nonzero count after ``--warmup``, and tests set
+``require_warm`` to turn any unwarmed plan lookup into a hard
+:class:`~repro.serving.plan.PlanMissError`).
+
+**Async pipelined dispatch** (``async_dispatch=True`` /
+``serve.py --async-dispatch``): the runner's tick splits into a
+dispatch half (enqueue the jitted step — NO host syncs, enforced by
+the host-sync analyzer rule) and a harvest half (read back emitted
+tokens). The engine dispatches tick N, then harvests tick N-1 — host
+scheduling, CTC merging and queue work overlap device compute instead
+of serializing behind ``device_get``. The one-tick readback lag is
+semantically invisible: decode programs chain the previous tick's
+on-device token into column 0 themselves (``chain``/``prev``
+operands), so token sequences are IDENTICAL to sync mode across every
+cache family, preemption/resume, and streamed reads
+(tests/test_dispatch.py parity sweeps; ``bench_serving --smoke``
+gates parity plus an async-over-sync throughput floor). Idle ticks
+(every live slot a stream waiting on unarrived samples) skip dispatch
+entirely.
+
+**Full-carry donation.** Every plan is jitted with the whole tick
+carry (cache pytree, sampler state, chained tokens) in
+``donate_argnums``, so each bucket's program aliases the carry
+in-place — steady-state decode allocates no second copy of any cache
+leaf. ``cache.carry_leaves``/``cache.donated_fraction`` expose the
+live-buffer accounting the donation test pins at 1.0. One measured
+backend interaction (``runner.resolve_donate_carry``): the CPU PJRT
+client executes a DONATING computation synchronously inside the jit
+call, which would serialize the async dispatch half — so ``auto``
+skips carry donation exactly when async dispatch runs on a multi-core
+CPU host (where the overlap is real and worth the copy), and keeps it
+everywhere else (TPU/GPU enqueue donating calls fine; a single-core
+host has no second core to overlap onto).
+
+**Admission backpressure.** ``max_queue`` bounds FRESH queued
+arrivals (``submit`` returns False and the request completes
+immediately with ``status='rejected'`` + ``reject_reason`` — never a
+silent drop) and ``queue_timeout_s`` sheds queued waiters whose
+deadline passed at the next tick. Preempted-pending requests hold
+generated tokens and are EXEMPT from both: they never count against
+the bound and are never shed. The metrics summary books
+``rejections``, ``queue_depth_hwm``, tick-latency p50/p99,
+``idle_ticks`` and the plan-cache counters; ``serve.py`` prints them
+as the dispatch report.
+
 Migration note (PR 4)
 ---------------------
 

@@ -256,6 +256,26 @@ def _tree_mask_fresh_rows(row, fresh, spec):
     return jax.tree.map(one, row, spec)
 
 
+def carry_leaves(caches) -> List[Any]:
+    """Every device-buffer leaf of a tick-carry pytree — arena blocks,
+    k/v/c scale leaves, pos rows, SSM state. The donation-accounting
+    unit: a jitted step with the carry donated must consume (alias)
+    every one of these in place rather than double-allocating the
+    arena for the tick's output."""
+    return [leaf for leaf in jax.tree.leaves(caches)
+            if hasattr(leaf, "is_deleted")]
+
+
+def donated_fraction(leaves) -> float:
+    """Fraction of previously-captured carry leaves a jitted call
+    actually consumed (``is_deleted()`` — XLA aliased the input buffer
+    into the output). 1.0 means the whole carry was donated; anything
+    less is a leaf the tick silently double-buffers."""
+    if not leaves:
+        return 0.0
+    return sum(bool(leaf.is_deleted()) for leaf in leaves) / len(leaves)
+
+
 def _tree_reset_row(pool, slot, spec):
     """Invalidate one slot in place per the reset spec (non-``keep``
     leaves are per slot by construction: positions and SSM state)."""
@@ -321,9 +341,16 @@ class CachePool:
         self.quant_policy = policy.resolve()
         self.group_dtypes: Dict[str, Any] = {
             g: self.quant_policy.dtype_for(g) for g in all_groups}
-        self.caches: Dict[str, Any] = tfm.init_caches_paged(
-            cfg, self.n_slots, cache_len, self.n_blocks, self.block_len,
-            cache_dtype=self.group_dtypes)
+        # committed to the device from birth: ticks replace the carry
+        # with (committed) jit outputs, and the committed flag is part
+        # of the jit cache signature — an uncommitted initial carry
+        # would make every step program's first tick compile a second,
+        # never-again-used signature
+        self.caches: Dict[str, Any] = jax.device_put(
+            tfm.init_caches_paged(
+                cfg, self.n_slots, cache_len, self.n_blocks, self.block_len,
+                cache_dtype=self.group_dtypes),
+            jax.devices()[0])
         self.reset_spec: Dict[str, Any] = tfm.caches_reset_specs(
             cfg, cache_dtype=self.group_dtypes)
         self.slot_axes: Dict[str, Any] = tfm.caches_slot_axes(

@@ -24,6 +24,10 @@ from repro.serving.runner import (Chunk, DecodeWork, PrefillWork,
 from repro.serving.sampling import GREEDY, SamplingParams
 
 FREE, PREFILL, DECODE = "free", "prefill", "decode"
+# async pipeline only: the request completed at a harvest, but a newer
+# speculative tick for the slot is still in flight — the slot keeps its
+# pool row until that tick is harvested (and its output discarded)
+DRAIN = "drain"
 
 
 class Request:
@@ -46,10 +50,13 @@ class Request:
 
     ``out_tokens`` fills as the engine runs. ``status`` tracks the
     lifecycle — ``queued`` -> ``running`` -> ``finished``, with
-    ``preempted-pending`` while evicted-awaiting-resume and ``ejected``
+    ``preempted-pending`` while evicted-awaiting-resume, ``ejected``
     for reads the read-until classifier rejected (their ``out_tokens``
     hold the PARTIAL bases emitted before ejection; never mistake them
-    for a complete basecall — check ``status``/``ejected``).
+    for a complete basecall — check ``status``/``ejected``), and
+    ``rejected`` for requests the bounded admission queue shed
+    (``max_queue`` full or the queue deadline expired) — an EXPLICIT
+    terminal status with ``reject_reason`` set, never a silent drop.
     """
 
     def __init__(self, rid: int, prompt: Sequence[int] = (),
@@ -86,6 +93,8 @@ class Request:
         self.arrival_time = arrival_time    # virtual arrival (Poisson replay)
         self.out_tokens: List[int] = []
         self.status = "queued"              # engine-owned lifecycle state
+        self.reject_reason: Optional[str] = None
+        self._deadline: Optional[float] = None   # queue-shed deadline
 
     # legacy accessors (the pre-SamplingParams field names)
     @property
@@ -107,7 +116,14 @@ class Request:
         return self.status == "ejected"
 
     @property
+    def rejected(self) -> bool:
+        """The bounded admission queue shed this request before it ran."""
+        return self.status == "rejected"
+
+    @property
     def done(self) -> bool:
+        if self.status == "rejected":       # shed: terminal, never served
+            return True
         if self.signal is not None:         # reads end with their signal
             return self.status in ("finished", "ejected")
         if len(self.out_tokens) >= self.sampling.max_new_tokens:
@@ -151,6 +167,12 @@ class _Slot:
     fresh: bool = False                # first chunk must invalidate the row
     seq: int = -1                      # admission order (preemption picks max)
     stream: Optional[StreamState] = None   # live StreamingRequest state
+    # async pipeline bookkeeping (dispatch-time state; unused when sync)
+    emitted: int = 0                   # tokens emitted OR in flight
+    inflight_emit: bool = False        # newest dispatched tick emits for
+                                       # this slot (token not read back yet)
+    eject_pending: bool = False        # eject once the speculative tick
+                                       # in flight is harvested+discarded
 
 
 class ServingEngine:
@@ -210,6 +232,20 @@ class ServingEngine:
         to the old contiguous one-row-per-slot layout).
     n_blocks : arena blocks per full-length layer group; 0 = full
         backing. Set lower to oversubscribe slots against KV bytes.
+    async_dispatch : pipeline the tick — dispatch tick N's device work,
+        THEN harvest tick N-1's deferred readback, so host scheduling
+        and CTC-merge overlap device compute. Token-identical to the
+        synchronous engine (decode rows whose input token is still in
+        flight chain to the previous tick's on-device output; see
+        ``repro.serving.runner``), one tick of extra output latency.
+        Requires a runner with ``supports_async``.
+    max_queue : bounded admission — ``submit`` beyond this queue depth
+        sheds load with an explicit ``status='rejected'`` instead of
+        growing the queue (0 = unbounded). Preempted-pending requests
+        never count against (or fall to) the bound.
+    queue_timeout_s : deadline-aware shedding — a request still QUEUED
+        this many seconds after submit is rejected at the next
+        submit/admission scan rather than served late (0 = no deadline).
     history_limit : bound host-side growth for indefinite serves (slot
         history, completed map, metrics reservoirs roll; aggregate
         counters stay exact). None = unbounded (tests, benches).
@@ -221,6 +257,8 @@ class ServingEngine:
     def __init__(self, params, cfg, *, n_slots: int = 4,
                  cache_len: int = 256, prefill_chunk: int = 16,
                  max_prefill_tokens: int = 0, co_batch: bool = True,
+                 async_dispatch: bool = False, max_queue: int = 0,
+                 queue_timeout_s: float = 0.0,
                  cache_dtype=None, block_len: int = 0,
                  n_blocks: int = 0, history_limit: Optional[int] = None,
                  clock: Callable[[], float] = time.perf_counter,
@@ -238,7 +276,26 @@ class ServingEngine:
         self.runner = runner if runner is not None else make_runner(
             params, cfg, n_slots=self.n_slots, cache_len=self.cache_len,
             prefill_chunk=self.prefill_chunk, cache_dtype=cache_dtype,
-            block_len=block_len, n_blocks=n_blocks, **runner_kw)
+            block_len=block_len, n_blocks=n_blocks,
+            async_dispatch=bool(async_dispatch), **runner_kw)
+        self.async_dispatch = bool(async_dispatch)
+        self.max_queue = int(max_queue)
+        self.queue_timeout_s = float(queue_timeout_s)
+        if self.async_dispatch:
+            if not co_batch:
+                raise ValueError(
+                    "async_dispatch requires co_batch=True — the legacy "
+                    "split-tick scheduler has no single tick to pipeline")
+            if not getattr(self.runner, "supports_async", False):
+                raise ValueError(
+                    f"async_dispatch needs a runner with dispatch/collect "
+                    f"support; {type(self.runner).__name__} is "
+                    f"synchronous-only")
+        # the one in-flight tick under async dispatch:
+        # [works, handle, discard-slot set, per-slot stream (need,
+        #  needs_finish) metadata] — harvested one step later
+        self._inflight: Optional[list] = None
+        self._last_idle_sig = None      # idle-tick fast path witness
         self.history_limit = history_limit
         self.metrics = ServingMetrics(clock, max_samples=history_limit)
         self.queue: Deque[Request] = deque()
@@ -256,7 +313,11 @@ class ServingEngine:
         return self.runner.pool
 
     # ------------------------------------------------------------ intake
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
+        """Queue a request. Invalid payloads still raise ValueError
+        (they can NEVER run); a full bounded queue instead sheds load —
+        the request completes immediately with ``status='rejected'``
+        and ``submit`` returns False. Accepted submits return True."""
         if getattr(req, "streaming", False) and \
                 not getattr(self.runner, "supports_streaming", False):
             raise ValueError(
@@ -268,11 +329,51 @@ class ServingEngine:
         n_in = (int(np.asarray(req.signal).size) if req.signal is not None
                 else len(req.prompt))
         self.metrics.record_arrival(req.rid, n_in)
+        if self.queue_timeout_s:
+            req._deadline = self.metrics.clock() + self.queue_timeout_s
+        if self.max_queue and self._queued_depth() >= self.max_queue:
+            self._shed_expired()       # expired waiters make room first
+            if self._queued_depth() >= self.max_queue:
+                self._reject(req, f"queue full (max_queue="
+                                  f"{self.max_queue})")
+                return False
         self.queue.append(req)
+        return True
+
+    def _queued_depth(self) -> int:
+        """Fresh waiters only: preempted-pending requests re-queued for
+        resume hold generated tokens and are never shed, so they don't
+        count against the admission bound either."""
+        return sum(r.status == "queued" for r in self.queue)
+
+    def _shed_expired(self) -> None:
+        """Deadline-aware load-shed: reject every QUEUED request whose
+        queue deadline has passed (explicit ``rejected`` status — never
+        a silent drop). Preempted-pending requests are exempt."""
+        if not self.queue_timeout_s:
+            return
+        now = self.metrics.clock()
+        kept: Deque[Request] = deque()
+        while self.queue:
+            r = self.queue.popleft()
+            if (r.status == "queued" and r._deadline is not None
+                    and now > r._deadline):
+                self._reject(r, f"queue deadline expired "
+                                f"({self.queue_timeout_s}s)")
+            else:
+                kept.append(r)
+        self.queue = kept
+
+    def _reject(self, req: Request, reason: str) -> None:
+        req.status = "rejected"
+        req.reject_reason = reason
+        self.metrics.record_reject(req.rid)
+        self._complete(req)
 
     @property
     def busy(self) -> bool:
-        return bool(self.queue) or any(s.state != FREE for s in self.slots)
+        return (bool(self.queue) or self._inflight is not None
+                or any(s.state != FREE for s in self.slots))
 
     @property
     def n_active(self) -> int:
@@ -281,17 +382,31 @@ class ServingEngine:
     # --------------------------------------------------------- scheduler
     def step(self) -> None:
         """One scheduler tick: admit -> schedule -> one co-batched
-        runner step (or the legacy split ticks when ``co_batch=False``)."""
+        runner step (or the legacy split ticks when ``co_batch=False``;
+        dispatch + deferred harvest when ``async_dispatch``)."""
+        t0 = self.metrics.clock()
+        self._shed_expired()
         self._admit()
-        if self.co_batch:
+        sig = self._idle_signature()
+        if sig is not None and sig == self._last_idle_sig:
+            # idle fast path: every live slot is a stream still waiting
+            # on the same unarrived samples — skip rebuilding (and, in
+            # async mode, re-dispatching) an all-empty work list
+            self.metrics.record_idle_tick()
+            return
+        if self.async_dispatch:
+            dispatched = self._step_async()
+        elif self.co_batch:
             if self.runner.autoregressive:
                 self._ensure_decode_blocks()
             works = self._schedule()
+            dispatched = any(w is not None for w in works)
             self._run_works(works)
         else:
             # legacy split ticks: one runner step per prefill slot,
             # then a decode-only step — the pre-unified-tick scheduler,
             # where a long admission stalls every running slot's decode
+            dispatched = True
             for i in [j for j, s in enumerate(self.slots)
                       if s.state == PREFILL]:
                 works: List[Optional[Any]] = [None] * self.n_slots
@@ -302,8 +417,198 @@ class ServingEngine:
                 works = [None] * self.n_slots
                 self._add_decode_works(works)
                 self._run_works(works)
+        self._last_idle_sig = None if dispatched else sig
+        self.metrics.record_plan_stats(self.runner.plan_stats())
         self.metrics.record_step(len(self.queue), self.n_active,
                                  self.runner.pool_util())
+        self.metrics.record_tick(self.metrics.clock() - t0)
+
+    def _idle_signature(self):
+        """Hashable witness that NOTHING can progress without new
+        external input (stream appends/finish or a submit): every live
+        slot is a stream mid-wait. None whenever some slot has
+        dispatchable work or a tick is in flight. Two consecutive
+        identical witnesses let ``step`` skip the schedule/dispatch
+        machinery entirely — ``run()``-style loops stop busy-spinning
+        the runner while a pore fills a buffer."""
+        if self.queue or self._inflight is not None:
+            return None
+        sig = []
+        for s in self.slots:
+            if s.state == FREE:
+                continue
+            if s.state != PREFILL or s.stream is None:
+                return None             # decode/drain/chunked work exists
+            sig.append((s.req.rid, s.req.arrived, s.req.stream_finished))
+        return tuple(sig)
+
+    def warmup(self) -> int:
+        """Pre-compile every tick-plan bucket (runner ``warmup``) so a
+        full traffic run performs zero mid-traffic compiles; returns
+        the number of plans warmed. Call before the first ``step``."""
+        fn = getattr(self.runner, "warmup", None)
+        return int(fn()) if fn is not None else 0
+
+    # -------------------------------------------------- async pipeline
+    def _step_async(self) -> bool:
+        """Dispatch tick N, THEN harvest tick N-1: the deferred
+        readback (and the host-side booking it feeds) overlaps the
+        device computing tick N. Scheduling uses dispatch-time booked
+        state only — the single token value the host can't know yet (a
+        slot that emitted in the still-in-flight tick) rides as a
+        CHAINED decode row, resolved on device. Returns True when
+        device work was dispatched."""
+        if self.runner.autoregressive:
+            self._ensure_decode_blocks()
+        works = self._schedule(async_=True)
+        prev, self._inflight = self._inflight, None
+        if any(w is not None for w in works):
+            meta = self._stream_meta(works)
+            self._book_dispatch(works)
+            handle = self.runner.dispatch(works)
+            self._inflight = [works, handle, set(), meta]
+        if prev is not None:
+            self._harvest(prev)
+        return self._inflight is not None
+
+    def flush(self) -> None:
+        """Harvest the in-flight tick, if any. After a flush every
+        emitted token is booked and no speculative work exists — the
+        state preemption and external inspection need."""
+        prev, self._inflight = self._inflight, None
+        if prev is not None:
+            self._harvest(prev)
+
+    def _stream_meta(self, works) -> List[Optional[tuple]]:
+        """Capture each streaming work's (need, needs_finish) enabling
+        event AT DISPATCH — by harvest time the cursor may already have
+        issued the next window and overwritten the slot's copy."""
+        meta: List[Optional[tuple]] = [None] * self.n_slots
+        for i, w in enumerate(works):
+            s = self.slots[i]
+            if isinstance(w, PrefillWork) and s.stream is not None:
+                meta[i] = (s.stream.need, s.stream.needs_finish)
+        return meta
+
+    def _book_dispatch(self, works) -> None:
+        """Dispatch-time booking: every host-deterministic transition
+        (positions, chunk accounting, PREFILL->DECODE, emit counters)
+        happens when the work is ENQUEUED, so the next tick schedules
+        without waiting for this tick's readback. Token values, stream
+        emissions, EOS/completions and ejection verdicts book at
+        harvest."""
+        for i, w in enumerate(works):
+            slot = self.slots[i]
+            if w is None:
+                if slot.state != FREE:
+                    # no emitting work this tick: by the time the NEXT
+                    # schedule runs, any earlier emission is harvested
+                    slot.inflight_emit = False
+                continue
+            if isinstance(w, PrefillWork):
+                slot.fresh = False
+                slot.pos += w.n_units
+                slot.inflight_emit = False
+                self.metrics.record_prefill(w.n_units)
+                if slot.stream is not None:
+                    slot.stream.consumed = slot.pos
+                if not w.final:
+                    continue
+                if self.runner.autoregressive:
+                    # prompt fully cached: this chunk emits the next
+                    # generated token (in flight until harvest)
+                    slot.state = DECODE
+                    slot.inflight_emit = True
+                    slot.emitted += 1
+                else:
+                    slot.state = DRAIN  # read ends here; finish at harvest
+            else:
+                slot.pos += 1
+                slot.emitted += 1
+                slot.inflight_emit = True
+
+    def _harvest(self, inflight) -> None:
+        """Deferred readback + all token-dependent bookkeeping for a
+        previously dispatched tick: emitted tokens, stream emissions,
+        completions (EOS / max_new / final chunk), read-until
+        ejections. Slots whose request completed while a newer
+        speculative tick was already in flight park in DRAIN and
+        resolve here one tick later, their speculative output
+        discarded."""
+        works, handle, discard, meta = inflight
+        n_decode = sum(isinstance(w, DecodeWork) for w in works)
+        t0 = self.metrics.clock()
+        # sync: the tick's one deferred readback — collect() returns
+        # the emitted tokens to the host, a full tick behind dispatch
+        emitted = self.runner.collect(handle, discard=frozenset(discard))
+        dt = self.metrics.clock() - t0
+        if n_decode:
+            self.metrics.record_decode(n_decode, dt)
+        for i, w in enumerate(works):
+            if w is None:
+                continue
+            slot = self.slots[i]
+            if i in discard:
+                # post-completion speculative work: its token was
+                # dropped in collect; resolve the slot the way the
+                # earlier harvest decided
+                if slot.eject_pending:
+                    self._eject(i)
+                elif slot.state == DRAIN:
+                    self._finish(i)
+                continue
+            toks = [int(x) for x in emitted[i]]
+            if isinstance(w, PrefillWork):
+                if slot.stream is not None and toks and meta[i] is not None:
+                    t_en = slot.req.enable_time(*meta[i])
+                    if t_en is not None:
+                        self.metrics.record_emit(
+                            max(self.metrics.clock() - t_en, 0.0))
+                if toks:
+                    first = not slot.req.out_tokens
+                    slot.req.out_tokens.extend(toks)
+                    if first:
+                        self.metrics.record_first_token(slot.req.rid)
+                if not w.final:
+                    continue
+                if self.runner.autoregressive:
+                    slot.last_token = slot.req.out_tokens[-1]
+                    self._resolve_done(i)
+                else:
+                    self._finish(i)     # slot sat in DRAIN since dispatch
+            else:
+                token = toks[0]
+                slot.req.out_tokens.append(token)
+                slot.last_token = token
+                self._resolve_done(i)
+        # read-until verdicts surface after the tick's tokens are booked
+        pop = getattr(self.runner, "pop_ejections", None)
+        if pop is not None:
+            for i in pop():
+                s = self.slots[i]
+                if s.state == FREE or s.req is None or s.req.done:
+                    continue
+                if self._inflight is not None \
+                        and self._inflight[0][i] is not None:
+                    # a newer window is in flight: discard it at its
+                    # harvest, then eject
+                    s.eject_pending = True
+                    self._inflight[2].add(i)
+                else:
+                    self._eject(i)
+
+    def _resolve_done(self, i: int) -> None:
+        """Completion check at harvest: finish now, or — when a newer
+        speculative tick for the slot is already in flight — park in
+        DRAIN and discard that tick's output at its harvest."""
+        slot = self.slots[i]
+        if not slot.req.done:
+            return
+        if self._inflight is not None and self._inflight[0][i] is not None:
+            slot.state = DRAIN
+            self._inflight[2].add(i)
+        else:
+            self._finish(i)
 
     def run(self) -> Dict[int, Request]:
         """Drain queue + slots to completion; returns completed requests
@@ -314,9 +619,11 @@ class ServingEngine:
         stalled = 0
         while self.busy:
             marker = (len(self.completed), self._admit_seq, len(self.queue),
+                      self._inflight is not None,
                       tuple(s.pos for s in self.slots))
             self.step()
             now = (len(self.completed), self._admit_seq, len(self.queue),
+                   self._inflight is not None,
                    tuple(s.pos for s in self.slots))
             stalled = stalled + 1 if now == marker else 0
             if stalled > self.n_slots + 1 and self._stalled_on_streams():
@@ -386,6 +693,7 @@ class ServingEngine:
                     slot.pos = slot.stream.consumed
                 else:
                     slot.stream = StreamState(self.runner.open_stream(req))
+            slot.emitted = len(req.out_tokens)  # resumes count prior tokens
             req.status = "running"
             self.slot_history[i].append(req.rid)
             self.metrics.record_admit(req.rid)
@@ -414,7 +722,26 @@ class ServingEngine:
             if s.state == DECODE and works[i] is None:
                 works[i] = DecodeWork(s.last_token, s.pos, s.req)
 
-    def _schedule(self) -> List[Optional[Any]]:
+    def _add_decode_works_async(self, works: List[Optional[Any]]) -> None:
+        """Async decode rows carry dispatch-time state: the sampling
+        step index is the emit counter (out_tokens lags one tick), and
+        a slot whose latest token is still in flight CHAINS — the step
+        program substitutes the previous tick's on-device output. Slots
+        that already dispatched their last allowed token (max_new)
+        schedule nothing and finish at that token's harvest."""
+        for i, s in enumerate(self.slots):
+            if s.state != DECODE or works[i] is not None:
+                continue
+            if s.emitted >= s.req.sampling.max_new_tokens:
+                continue
+            if s.inflight_emit:
+                works[i] = DecodeWork(0, s.pos, s.req, step=s.emitted,
+                                      chained=True)
+            else:
+                works[i] = DecodeWork(s.last_token, s.pos, s.req,
+                                      step=s.emitted)
+
+    def _schedule(self, async_: bool = False) -> List[Optional[Any]]:
         """Build the unified tick's work list: every DECODE slot gets a
         DecodeWork; PREFILL slots get their next chunk oldest-admission-
         first until the cumulative payload reaches ``max_prefill_tokens``
@@ -433,7 +760,10 @@ class ServingEngine:
                 left -= works[i].n_units
                 if left <= 0:
                     break
-        self._add_decode_works(works)
+        if async_:
+            self._add_decode_works_async(works)
+        else:
+            self._add_decode_works(works)
         return works
 
     def _run_works(self, works: List[Optional[Any]]) -> None:
@@ -509,9 +839,20 @@ class ServingEngine:
         for i in range(self.n_slots):
             if self.slots[i].state != DECODE:
                 continue
+            if self.async_dispatch and self.slots[i].emitted >= \
+                    self.slots[i].req.sampling.max_new_tokens:
+                continue    # last token in flight: schedules nothing more
             # re-read slots[i] each pass: _preempt may replace it (even i)
             while self.slots[i].state == DECODE and \
                     not self.runner.alloc_pool(i, self.slots[i].pos + 1):
+                if self._inflight is not None:
+                    # flush the pipeline before preempting: harvesting
+                    # books the in-flight tokens a resume re-prefills
+                    # from, resolves DRAIN slots (freeing their rows —
+                    # often enough by itself), and guarantees no
+                    # speculative work targets the victim's row
+                    self.flush()
+                    continue
                 victim = max(
                     (j for j, s in enumerate(self.slots) if s.state != FREE),
                     key=lambda j: self.slots[j].seq)

@@ -62,6 +62,10 @@ class ServingMetrics:
         self.queue_depth_samples = _samples()
         self.active_samples = _samples()
         self.pool_util_samples = _samples()
+        # dispatch pipeline: wall time of each non-idle engine tick
+        # (schedule + dispatch + deferred harvest) — p50 is the steady
+        # cadence, p99 the worst stall a tick injects
+        self.tick_latency_samples = _samples()
         # wall-clock gap between consecutive decode-bearing ticks — the
         # decode-interval jitter reservoir (p50 = steady cadence, p99 =
         # the stall an admission injects under split-tick scheduling)
@@ -77,6 +81,12 @@ class ServingMetrics:
         self.ejected_consumed = 0       # samples basecalled before eject
         self.ejected_arrived = 0        # samples arrived before eject
         self.samples_saved = 0          # samples never sequenced/appended
+        # backpressure + dispatch-pipeline accounting (exact counters)
+        self.rejections = 0             # bounded-queue load-shed count
+        self.idle_ticks = 0             # ticks the fast path skipped
+        self.queue_depth_hwm = 0        # exact high-water mark (the
+                                        # rolling sample window may miss it)
+        self.plan_stats: Dict[str, int] = {}   # runner PlanCache.stats()
         self.decode_steps = 0
         self.decode_tokens = 0          # useful (non-pad) tokens decoded
         self.decode_time = 0.0
@@ -146,11 +156,40 @@ class ServingMetrics:
                 if self.requests[old].done is not None:
                     del self.requests[old]
 
+    def record_reject(self, rid: int) -> None:
+        """Bounded-admission load-shed: the request completed with
+        status ``rejected`` without ever running."""
+        r = self._req(rid)
+        r.done = self.clock()           # terminal: evictable when rolling
+        self.rejections += 1
+        if self.max_samples and len(self.requests) > self.max_samples:
+            for old in list(self.requests):
+                if len(self.requests) <= self.max_samples:
+                    break
+                if self.requests[old].done is not None:
+                    del self.requests[old]
+
+    def record_tick(self, dt: float) -> None:
+        """Wall time of one non-idle engine tick."""
+        self.tick_latency_samples.append(dt)
+
+    def record_idle_tick(self) -> None:
+        """The idle fast path skipped a tick's schedule/dispatch."""
+        self.idle_ticks += 1
+
+    def record_plan_stats(self, stats: Dict[str, int]) -> None:
+        """Latest runner ``PlanCache.stats()`` snapshot (cumulative
+        counters — overwrite, don't accumulate)."""
+        if stats:
+            self.plan_stats = dict(stats)
+
     def record_step(self, queue_depth: int, n_active: int,
                     pool_util: float = 0.0) -> None:
         self.queue_depth_samples.append(queue_depth)
         self.active_samples.append(n_active)
         self.pool_util_samples.append(pool_util)
+        if queue_depth > self.queue_depth_hwm:
+            self.queue_depth_hwm = queue_depth
 
     def record_decode(self, n_tokens: int, dt: float) -> None:
         now = self.clock()
@@ -177,6 +216,8 @@ class ServingMetrics:
         pu = list(self.pool_util_samples)
         di = list(self.decode_interval_samples)
         em = list(self.emit_latency_samples)
+        tl = list(self.tick_latency_samples)
+        ps = self.plan_stats
         return {
             "requests_done": self.done_count,
             "generated_tokens": gen,
@@ -202,7 +243,17 @@ class ServingMetrics:
             "samples_saved": self.samples_saved,
             "queue_depth_max": max(qd, default=0),
             "queue_depth_mean": sum(qd) / len(qd) if qd else 0.0,
+            "queue_depth_hwm": self.queue_depth_hwm,
             "slot_occupancy": sum(act) / len(act) if act else 0.0,
             "pool_util_mean": sum(pu) / len(pu) if pu else 0.0,
             "pool_util_max": max(pu, default=0.0),
+            "tick_latency_p50_s": _pct(tl, 0.50),
+            "tick_latency_p99_s": _pct(tl, 0.99),
+            "idle_ticks": self.idle_ticks,
+            "rejections": self.rejections,
+            "plans": ps.get("plans", 0),
+            "plans_warmed": ps.get("warmed", 0),
+            "bucket_hits": ps.get("bucket_hits", 0),
+            "bucket_misses": ps.get("bucket_misses", 0),
+            "retraces": ps.get("retraces", 0),
         }

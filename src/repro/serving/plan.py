@@ -1,0 +1,180 @@
+"""Bucketed tick-plan cache: one pre-compiled jitted program per
+(tick kind, chunk width, sampling flavor) bucket.
+
+The flashinfer idiom (plan/replay wrappers pinned to a batch size) for
+our serving tick: instead of one ``jax.jit`` callable whose internal
+cache silently grows a compiled program per tick shape, every
+SCHEDULABLE shape rounds to a small fixed set of buckets and each
+bucket owns its OWN ``jax.jit`` wrapping. That buys three things:
+
+- **Warmup is enumerable.** ``warmup()`` (runner-side) iterates the
+  registered keys and executes each plan once at launch, so a full
+  traffic run performs zero mid-traffic compiles — and tests can make
+  a plan miss a hard error (``require_warm``).
+- **Retraces are attributable.** Each plan key corresponds to exactly
+  one argument signature, so the compiled-signature count of a step
+  callable must equal its number of warmed plan keys forever;
+  ``stats()["retraces"]`` counts any growth past that (an unhashable
+  static arg, a weak-type flip, a host-vs-committed placement change,
+  a host scalar captured as a fresh constant).
+- **Mixed ticks stop over-padding.** The (B, C) mixed program used to
+  pad every tick to the full ``prefill_chunk`` width; with buckets the
+  runner pads only to ``round_chunk(max actual chunk len)`` — powers
+  of two plus the full width — trading a handful of extra compiles
+  (all pre-paid by warmup) for less compute per small tick.
+
+Bucket rounding rule
+--------------------
+``chunk_buckets(C)`` is the powers of two below ``C`` plus ``C``
+itself (e.g. C=16 -> 1, 2, 4, 8, 16; C=6 -> 1, 2, 4, 6), and
+``round_chunk(n)`` rounds a tick's widest chunk UP to the next bucket.
+Every chunk the scheduler can emit has ``1 <= n <= prefill_chunk``, so
+every schedulable tick shape maps to a registered bucket — the
+``repro.analysis`` trace-stability rule audits exactly this closure.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Sequence, Tuple
+
+import jax
+
+# (kind, width, flavor): ("decode", 1, "greedy"|"sampled") for the
+# pinned (B, 1) lockstep tick, ("mixed", w, ...) per chunk-width bucket
+# of the (B, w) unified tick, plus runner-specific kinds (the audio
+# runner's ("stage", ...) encoder staging, the basecaller's
+# ("window", ...) forward).
+PlanKey = Tuple[str, int, str]
+
+
+def chunk_buckets(chunk_tokens: int) -> Tuple[int, ...]:
+    """Mixed-tick width buckets: powers of two up to ``chunk_tokens``,
+    plus the full width itself."""
+    if chunk_tokens < 1:
+        raise ValueError(f"chunk_tokens must be >= 1, got {chunk_tokens}")
+    buckets: List[int] = []
+    b = 1
+    while b < chunk_tokens:
+        buckets.append(b)
+        b *= 2
+    buckets.append(int(chunk_tokens))
+    return tuple(buckets)
+
+
+def round_chunk(n: int, buckets: Sequence[int]) -> int:
+    """Round a tick's widest chunk UP to its covering bucket."""
+    for b in buckets:
+        if n <= b:
+            return b
+    raise ValueError(
+        f"chunk width {n} exceeds the largest bucket {buckets[-1]} — "
+        f"the scheduler emitted a shape outside the warmed plan set")
+
+
+def plan_cache_size(jitted) -> int:
+    """Compiled-program cache entries of a ``jax.jit`` callable (-1
+    when this JAX build doesn't expose the counter)."""
+    fn = getattr(jitted, "_cache_size", None)
+    try:
+        return int(fn()) if fn is not None else -1
+    except Exception:
+        return -1
+
+
+class PlanMissError(RuntimeError):
+    """A tick needed a plan that warmup did not pre-compile — under
+    ``require_warm`` a mid-traffic compile is a hard error, not a
+    multi-second stall."""
+
+
+class PlanCache:
+    """Registry of per-bucket jitted step programs with hit/miss and
+    retrace accounting.
+
+    ``register`` wraps the underlying python step function in its own
+    ``jax.jit`` per key (donation preserved per program, so the carry
+    pytree aliases in-place through EVERY bucket). ``lookup`` is the
+    tick-time access path: it counts a bucket hit when the plan was
+    already compiled (warmup or a previous tick) and a miss when this
+    call is the plan's first — raising :class:`PlanMissError` instead
+    when ``require_warm`` is set.
+    """
+
+    def __init__(self) -> None:
+        self._fns: Dict[PlanKey, Any] = {}
+        self._raw: Dict[PlanKey, Callable] = {}
+        self._warmed: set = set()
+        self.hits = 0
+        self.misses = 0
+        self.require_warm = False
+
+    # ------------------------------------------------------------ build
+    def register(self, key: PlanKey, fn: Callable,
+                 donate: Tuple[int, ...] = ()) -> None:
+        if key in self._fns:
+            raise ValueError(f"plan {key} registered twice")
+        self._raw[key] = fn
+        self._fns[key] = jax.jit(fn, donate_argnums=donate)
+
+    def keys(self) -> List[PlanKey]:
+        return list(self._fns)
+
+    def __contains__(self, key: PlanKey) -> bool:
+        return key in self._fns
+
+    def fn(self, key: PlanKey):
+        """Raw access to a plan's jitted callable (warmup, analysis)."""
+        return self._fns[key]
+
+    def mark_warmed(self, key: PlanKey) -> None:
+        self._warmed.add(key)
+
+    @property
+    def warmed(self) -> int:
+        return len(self._warmed)
+
+    # ------------------------------------------------------------- tick
+    def lookup(self, key: PlanKey):
+        """Tick-time plan access with bucket accounting."""
+        fn = self._fns.get(key)
+        if fn is None:
+            raise PlanMissError(
+                f"no plan registered for tick bucket {key} — the "
+                f"scheduler emitted a shape outside the bucket set "
+                f"{sorted(self._fns)}")
+        if key in self._warmed:
+            self.hits += 1
+        else:
+            self.misses += 1
+            if self.require_warm:
+                raise PlanMissError(
+                    f"plan {key} invoked before warmup — this tick "
+                    f"would compile mid-traffic (run warmup(), or clear "
+                    f"require_warm to allow lazy first-use compiles)")
+            self._warmed.add(key)   # compiled by this call: later uses hit
+        return fn
+
+    # ------------------------------------------------------------ stats
+    def stats(self) -> Dict[str, int]:
+        """``{plans, warmed, bucket_hits, bucket_misses, retraces}``.
+
+        JAX shares the compiled-signature counter across every
+        ``jax.jit`` wrapper of the same underlying python callable, so
+        the audit groups plans by that callable: each warmed key pins
+        exactly one argument signature, so a group's shared cache must
+        hold exactly (warmed keys in group) entries — anything above
+        that is a mid-traffic retrace (an argument signature traffic
+        produced that warmup never compiled)."""
+        groups: Dict[int, list] = {}
+        for key in self._fns:
+            groups.setdefault(id(self._raw[key]), []).append(key)
+        retraces = 0
+        for keys in groups.values():
+            warmed = [k for k in keys if k in self._warmed]
+            if not warmed:
+                continue
+            size = plan_cache_size(self._fns[warmed[0]])
+            if size > len(warmed):
+                retraces += size - len(warmed)
+        return {"plans": len(self._fns), "warmed": len(self._warmed),
+                "bucket_hits": self.hits, "bucket_misses": self.misses,
+                "retraces": retraces}

@@ -17,6 +17,19 @@ lives behind a :class:`ModelRunner`:
                    chunks and idle slots; the final chunk of an
                    autoregressive prompt emits exactly the first
                    generated token).
+``dispatch``/      the async split of ``step``: ``dispatch`` enqueues
+``collect``        the tick's device work and returns an opaque handle
+                   with the emitted tokens still ON DEVICE; ``collect``
+                   performs the deferred readback (plus any host-side
+                   merge work) one tick later. ``step`` ==
+                   ``collect(dispatch(works))`` exactly, so the
+                   synchronous engine path is unchanged. ``collect``
+                   takes a ``discard`` slot set — post-completion
+                   speculative rows whose tokens (and basecaller merge
+                   feeds) must be dropped.
+``warmup``         pre-compile every tick-plan bucket at launch (see
+                   :mod:`repro.serving.plan`); ``plan_stats`` reports
+                   the bucket hit/miss/retrace counters.
 ``reset_row``      release a slot's pool blocks / per-slot runner state
 
 MIGRATION (unified tick): the former ``prefill_chunk(slot, payload,
@@ -65,6 +78,7 @@ import numpy as np
 
 from repro.config import ModelConfig
 from repro.serving.cache import CachePool
+from repro.serving.plan import PlanCache, chunk_buckets, round_chunk
 from repro.serving.sampling import any_sampled, pack_rows, sample_tokens
 
 
@@ -86,10 +100,21 @@ class PrefillWork(NamedTuple):
 
 
 class DecodeWork(NamedTuple):
-    """One scheduled lockstep decode token for one slot."""
+    """One scheduled lockstep decode token for one slot.
+
+    ``step`` is the sampling step index at DISPATCH time (the count of
+    tokens already emitted or in flight); -1 means "read it from
+    ``len(req.out_tokens)``" — the synchronous path, where nothing is
+    in flight. ``chained`` marks a token the host does not know yet:
+    the previous dispatched tick emitted it and its readback is still
+    deferred, so the step program substitutes the previous tick's
+    on-device output for this row (``last_token`` is ignored).
+    """
     last_token: int
     pos: int
     req: Any                    # repro.serving.engine.Request
+    step: int = -1
+    chained: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -110,6 +135,8 @@ class ModelRunner:
     autoregressive: bool = True
     pool = None                         # CachePool or None
     supports_streaming: bool = False    # accepts StreamingRequest payloads
+    supports_async: bool = False        # dispatch/collect pipeline the tick
+                                        # (incl. chained decode tokens)
 
     def validate(self, req) -> None:
         raise NotImplementedError
@@ -159,9 +186,57 @@ class ModelRunner:
         several bases)."""
         raise NotImplementedError
 
+    # ---- async dispatch pipeline (opt-in: supports_async) ----
+    def dispatch(self, works: List[Optional[Any]]) -> Any:
+        """Enqueue one tick's device work; the default defers the whole
+        step to ``collect`` (no overlap — real pipelining needs the
+        runner to enqueue the jitted program here and read back later).
+        """
+        return works
+
+    def collect(self, handle: Any,
+                discard: frozenset = frozenset()) -> List[List[int]]:
+        """Deferred readback for a ``dispatch`` handle. ``discard``
+        names slots whose emitted tokens (and any per-slot host merge
+        side effects) must be dropped — post-completion speculative
+        work under the engine's one-tick readback lag."""
+        emitted = self.step(handle)
+        return [[] if i in discard else toks
+                for i, toks in enumerate(emitted)]
+
+    def warmup(self) -> int:
+        """Pre-compile every tick-plan bucket; returns plans warmed."""
+        return 0
+
+    def plan_stats(self) -> Dict[str, int]:
+        """Bucket/retrace accounting (see ``PlanCache.stats``)."""
+        return {}
+
 
 # ---------------------------------------------------------------------------
 # TokenRunner — token-only archs over the paged KV pool
+
+
+def resolve_donate_carry(mode, async_dispatch: bool) -> bool:
+    """Whether the tick plans donate the carry pytree (arena + scale +
+    pos + state leaves alias in place through every program).
+
+    ``auto`` donates everywhere EXCEPT async dispatch on a MULTI-CORE
+    CPU host: the CPU PJRT client executes a donating computation
+    synchronously inside the jit call (measured: a donated call returns
+    after the full compute; the identical non-donated call returns in
+    ~0.1ms), which would serialize the dispatch half of the pipeline
+    and erase the overlap the async engine exists for. On a single-core
+    CPU host there is no second core to overlap onto — host and
+    "device" time-slice the same core — so donation stays on (aliasing
+    beats the copy-per-tick a non-donated carry costs). On TPU/GPU
+    donation and async dispatch compose — the call is enqueued either
+    way — so both stay on. Pass True/False to force."""
+    if mode != "auto":
+        return bool(mode)
+    import os
+    return not (async_dispatch and jax.default_backend() == "cpu"
+                and (os.cpu_count() or 1) > 1)
 
 
 class TokenRunner(ModelRunner):
@@ -193,11 +268,13 @@ class TokenRunner(ModelRunner):
     """
 
     autoregressive = True
+    supports_async = True
 
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int,
                  cache_len: int, prefill_chunk: int, cache_dtype,
                  block_len: int = 0, n_blocks: int = 0,
                  attn_backend: str = "auto", quant_policy=None,
+                 donate_carry="auto", async_dispatch: bool = False,
                  _check: bool = True, **_):
         from repro.models.lm import transformer as tfm
         if _check and not tfm.supports_slot_serving(cfg):
@@ -219,6 +296,8 @@ class TokenRunner(ModelRunner):
                               quant_policy=quant_policy)
         self.quant_policy = self.pool.quant_policy
         self.attn_backend = self.pool.attn_backend       # resolved
+        self.donate_carry = resolve_donate_carry(donate_carry,
+                                                 async_dispatch)
         self.enc_kv: Optional[Dict[str, Dict]] = None    # audio subclass
         self._build_programs()
 
@@ -230,51 +309,155 @@ class TokenRunner(ModelRunner):
         # programs: the host sees token ids, not (B,1,vocab) logits —
         # one dispatch and a tiny transfer per tick. The chunk step
         # unembeds only the requested position (`logits_at`). The pool
-        # is donated: scatter updates alias the input buffers. Block
-        # tables and sampling rows arrive as tiny (non-donated) int32/
-        # f32 pytrees each call; ``ekv`` is None for token-only archs
-        # and the per-slot encoder K/V buffers for the audio runner.
+        # is donated IN EVERY PLAN (when ``donate_carry`` resolves on —
+        # see :func:`resolve_donate_carry` for the async-on-CPU
+        # exception): scatter updates alias the input buffers, so the
+        # full tick carry (arena + k/v/c scale leaves + pos rows + SSM
+        # state — all leaves of ``pool.caches``) never
+        # double-allocates within a tick. Block tables and sampling
+        # rows arrive as tiny (non-donated) int32/f32 pytrees each
+        # call; ``ekv`` is None for token-only archs and the per-slot
+        # encoder K/V buffers for the audio runner.
+        #
+        # ``chain``/``prev`` back the async pipeline's one-tick
+        # readback lag: a chained row's input token is the PREVIOUS
+        # dispatched tick's on-device output for that row (the host
+        # hasn't read it back yet). ``prev`` is never donated — the
+        # engine still collects it after the next tick is enqueued.
+        # With ``chain`` all-zero the substitution is the identity, so
+        # synchronous ticks are token-identical to the pre-pipeline
+        # programs.
         backend = self.attn_backend
 
-        def decode_greedy(p, pool, tok, t, tables, ekv):
+        def chain_tok(tok, chain, prev):
+            col0 = jnp.where(chain > 0, prev, tok[:, 0])
+            return tok.at[:, 0].set(col0)
+
+        def decode_greedy(p, pool, tok, t, chain, prev, tables, ekv):
+            tok = chain_tok(tok, chain, prev)
             logits, npool = tfm.decode_step_slots(p, pool, tok, t, cfg,
                                                   tables=tables, enc_kv=ekv,
                                                   attn_backend=backend)
             return jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32), \
                 npool
 
-        def decode_sampled(p, pool, tok, t, tables, sp, ekv):
+        def decode_sampled(p, pool, tok, t, chain, prev, tables, sp, ekv):
+            tok = chain_tok(tok, chain, prev)
             logits, npool = tfm.decode_step_slots(p, pool, tok, t, cfg,
                                                   tables=tables, enc_kv=ekv,
                                                   attn_backend=backend)
             return sample_tokens(logits[:, 0, :], sp), npool
 
-        def step_body(p, pool, tok, t, fresh, last, tables, ekv):
+        def step_body(p, pool, tok, t, chain, prev, fresh, last, tables,
+                      ekv):
             # recycle every freshly admitted row in-step, per the
             # cache's own reset spec (mask stale positions / zero SSM
             # recurrent state; arena bytes are shared and stay put —
             # the empty pos row is what keeps a recycled block's old KV
             # out of attention)
+            tok = chain_tok(tok, chain, prev)
             pool = CachePool.mask_fresh_rows(pool, fresh, reset_spec)
             return tfm.decode_step_slots(p, pool, tok, t, cfg,
                                          logits_at=last, tables=tables,
                                          enc_kv=ekv, attn_backend=backend)
 
-        def step_greedy(p, pool, tok, t, fresh, last, tables, ekv):
-            logits, npool = step_body(p, pool, tok, t, fresh, last,
-                                      tables, ekv)
+        def step_greedy(p, pool, tok, t, chain, prev, fresh, last,
+                        tables, ekv):
+            logits, npool = step_body(p, pool, tok, t, chain, prev,
+                                      fresh, last, tables, ekv)
             return jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32), \
                 npool
 
-        def step_sampled(p, pool, tok, t, fresh, last, tables, sp, ekv):
-            logits, npool = step_body(p, pool, tok, t, fresh, last,
-                                      tables, ekv)
+        def step_sampled(p, pool, tok, t, chain, prev, fresh, last,
+                        tables, sp, ekv):
+            logits, npool = step_body(p, pool, tok, t, chain, prev,
+                                      fresh, last, tables, ekv)
             return sample_tokens(logits[:, 0, :], sp), npool
 
-        self._decode_greedy = jax.jit(decode_greedy, donate_argnums=(1,))
-        self._decode_sampled = jax.jit(decode_sampled, donate_argnums=(1,))
-        self._step_greedy = jax.jit(step_greedy, donate_argnums=(1,))
-        self._step_sampled = jax.jit(step_sampled, donate_argnums=(1,))
+        # one jitted plan per (kind, width, flavor) bucket: decode-only
+        # ticks stay pinned at (B, 1); mixed ticks round their widest
+        # chunk to a power-of-two bucket instead of always padding to
+        # the full prefill_chunk width
+        self.buckets = chunk_buckets(self.chunk_tokens)
+        self.plans = PlanCache()
+        don = (1,) if self.donate_carry else ()
+        self.plans.register(("decode", 1, "greedy"), decode_greedy,
+                            donate=don)
+        self.plans.register(("decode", 1, "sampled"), decode_sampled,
+                            donate=don)
+        for w in self.buckets:
+            self.plans.register(("mixed", w, "greedy"), step_greedy,
+                                donate=don)
+            self.plans.register(("mixed", w, "sampled"), step_sampled,
+                                donate=don)
+        # previous tick's on-device token outputs, (B,) int32 — the
+        # chained rows' input source under the one-tick readback lag.
+        # Committed to the runtime device: ticks pass the previous jit
+        # call's (committed) output here, and a committed-vs-host
+        # placement difference is a fresh jit cache signature
+        self._prev_tokens = jax.device_put(
+            np.zeros((self.n_slots,), np.int32), jax.devices()[0])
+
+    # plan aliases: the widest-bucket programs, kept under the pre-plan
+    # attribute names for the analysis targets and retrace audits
+    @property
+    def _decode_greedy(self):
+        return self.plans.fn(("decode", 1, "greedy"))
+
+    @property
+    def _decode_sampled(self):
+        return self.plans.fn(("decode", 1, "sampled"))
+
+    @property
+    def _step_greedy(self):
+        return self.plans.fn(("mixed", self.chunk_tokens, "greedy"))
+
+    @property
+    def _step_sampled(self):
+        return self.plans.fn(("mixed", self.chunk_tokens, "sampled"))
+
+    def plan_stats(self) -> Dict[str, int]:
+        return self.plans.stats()
+
+    def warmup(self) -> int:
+        """Pre-compile every bucket plan by executing it once over an
+        all-pad tick, threading the REAL donated carry through each
+        program. Pad rows (``t = -1``) write nothing into the arena —
+        their scatter indices clamp out of bounds and drop (see
+        ``repro.serving.cache``) — and ``fresh`` is all-zero, so the
+        carry round-trips bit-unchanged; any garbage a pad row leaves
+        in per-slot recurrent state is wiped by the first real chunk's
+        ``fresh`` reset, exactly as for the pad rows every live tick
+        already carries. Runs at launch, before traffic."""
+        B = self.n_slots
+        chain = np.zeros((B,), np.int32)
+        # match the runtime argument PLACEMENT exactly: mid-traffic the
+        # carry and chained-prev are committed jit outputs, and a
+        # committed-vs-host difference is a fresh jit cache signature —
+        # warming with host buffers would leave the real ones cold
+        dev = jax.devices()[0]
+        self.pool.caches = jax.device_put(self.pool.caches, dev)
+        prev = jax.device_put(np.zeros((B,), np.int32), dev)
+        sp = pack_rows([None] * B)
+        warmed = 0
+        for key in self.plans.keys():
+            kind, w, flavor = key
+            if kind not in ("decode", "mixed"):
+                continue
+            tok = np.zeros((B, w), np.int32)
+            t = np.full((B, w), -1, np.int32)
+            args = [self.params, self.pool.caches, tok, t, chain, prev]
+            if kind == "mixed":
+                args += [np.zeros((B,), np.int32), np.zeros((B,), np.int32)]
+            args.append(self.pool.device_tables())
+            if flavor == "sampled":
+                args.append(sp)
+            args.append(self.enc_kv)
+            toks, self.pool.caches = self.plans.fn(key)(*args)
+            toks.block_until_ready()        # compile + execute NOW, not
+            self.plans.mark_warmed(key)     # lazily at the first tick
+            warmed += 1
+        return warmed
 
     # ------------------------------------------------------------ intake
     def validate(self, req) -> None:
@@ -334,48 +517,85 @@ class TokenRunner(ModelRunner):
 
     # ------------------------------------------------------------ device
     def step(self, works: List[Optional[Any]]) -> List[List[int]]:
-        if any(isinstance(w, PrefillWork) for w in works):
-            return self._step_mixed(works)
-        return self._step_decode_only(works)
+        return self.collect(self.dispatch(works))
 
-    def _step_decode_only(self, works) -> List[List[int]]:
-        """Pure-decode tick: the lockstep (B, 1) programs, byte-for-byte
-        the pre-unified-tick decode path (the greedy-parity gate)."""
+    def dispatch(self, works: List[Optional[Any]]) -> Any:
+        """Enqueue one tick's device work (the jitted plan call returns
+        with the tokens still on device); ``collect`` reads them back.
+        """
+        if any(isinstance(w, PrefillWork) for w in works):
+            return self._dispatch_mixed(works)
+        return self._dispatch_decode_only(works)
+
+    def collect(self, handle: Any,
+                discard: frozenset = frozenset()) -> List[List[int]]:
+        works, toks = handle
+        # the one intentional round trip per tick (a full tick behind
+        # dispatch under the async engine):
+        # sync: scheduler needs the tick's emitted tokens on the host
+        toks = np.asarray(toks)
+        out: List[List[int]] = []
+        for i, w in enumerate(works):
+            if w is None or i in discard:
+                out.append([])
+            elif isinstance(w, DecodeWork) or w.final:
+                out.append([int(toks[i])])
+            else:
+                out.append([])
+        return out
+
+    def _row(self, w) -> Tuple:
+        """Sampling row for a work: the step index is dispatch-time
+        state (``w.step``) under the async engine, the booked token
+        count otherwise."""
+        step = w.step if isinstance(w, DecodeWork) and w.step >= 0 \
+            else len(w.req.out_tokens)
+        return (w.req.sampling, w.req.rid, step)
+
+    def _dispatch_decode_only(self, works) -> Any:
+        """Pure-decode tick: the lockstep (B, 1) plan, token-identical
+        to the pre-unified-tick decode path (the greedy-parity gate)."""
         B = self.n_slots
         tok = np.zeros((B, 1), np.int32)
         t = np.full((B, 1), -1, np.int32)
+        chain = np.zeros((B,), np.int32)
         rows: List[Optional[Tuple]] = [None] * B
         for i, w in enumerate(works):
             if w is None:
                 continue
             tok[i, 0] = w.last_token
             t[i, 0] = w.pos
-            rows[i] = (w.req.sampling, w.req.rid, len(w.req.out_tokens))
+            chain[i] = int(w.chained)
+            rows[i] = self._row(w)
         tables = self.pool.device_tables()
+        args = (self.params, self.pool.caches, tok, t, chain,
+                self._prev_tokens, tables)
         if any_sampled(rows):
-            toks, self.pool.caches = self._decode_sampled(
-                self.params, self.pool.caches, tok, t, tables,
-                pack_rows(rows), self.enc_kv)
+            fn = self.plans.lookup(("decode", 1, "sampled"))
+            toks, self.pool.caches = fn(*args, pack_rows(rows), self.enc_kv)
         else:
-            toks, self.pool.caches = self._decode_greedy(
-                self.params, self.pool.caches, tok, t, tables, self.enc_kv)
-        # the one intentional round trip per decode tick:
-        # sync: scheduler needs this tick's emitted tokens on the host
-        toks = np.asarray(toks)
-        return [[int(toks[i])] if w is not None else []
-                for i, w in enumerate(works)]
+            fn = self.plans.lookup(("decode", 1, "greedy"))
+            toks, self.pool.caches = fn(*args, self.enc_kv)
+        self._prev_tokens = toks
+        return (works, toks)
 
-    def _step_mixed(self, works) -> List[List[int]]:
+    def _dispatch_mixed(self, works) -> Any:
         """Mixed tick: decode rows (column 0) and prefill chunks share
-        one (B, C) program — chunked admissions no longer stall decode
-        for the running slots. Every row's logits are read at its own
-        emitting position; only decode rows and final chunks commit
-        their token (mid-prompt chunk tokens are speculative and
-        discarded, so those rows pack as greedy — the sampled program's
-        sort/top-k/Gumbel work would be thrown away)."""
-        B, C = self.n_slots, self.chunk_tokens
+        one (B, C) plan — chunked admissions no longer stall decode
+        for the running slots. C is the tick's widest chunk rounded UP
+        to its bucket (not always the full prefill_chunk width). Every
+        row's logits are read at its own emitting position; only decode
+        rows and final chunks commit their token (mid-prompt chunk
+        tokens are speculative and discarded, so those rows pack as
+        greedy — the sampled program's sort/top-k/Gumbel work would be
+        thrown away)."""
+        B = self.n_slots
+        width = max(len(w.payload) for w in works
+                    if isinstance(w, PrefillWork))
+        C = round_chunk(width, self.buckets)
         tok = np.zeros((B, C), np.int32)
         t = np.full((B, C), -1, np.int32)
+        chain = np.zeros((B,), np.int32)
         fresh = np.zeros((B,), np.int32)
         last = np.zeros((B,), np.int32)
         rows: List[Optional[Tuple]] = [None] * B
@@ -385,7 +605,8 @@ class TokenRunner(ModelRunner):
             if isinstance(w, DecodeWork):
                 tok[i, 0] = w.last_token
                 t[i, 0] = w.pos
-                rows[i] = (w.req.sampling, w.req.rid, len(w.req.out_tokens))
+                chain[i] = int(w.chained)
+                rows[i] = self._row(w)
                 continue
             n = len(w.payload)
             tok[i, :n] = w.payload
@@ -393,21 +614,18 @@ class TokenRunner(ModelRunner):
             fresh[i] = int(w.fresh)
             last[i] = n - 1
             if w.final and w.req.sampling.temperature > 0:
-                rows[i] = (w.req.sampling, w.req.rid, len(w.req.out_tokens))
+                rows[i] = self._row(w)
         tables = self.pool.device_tables()
-        args = (self.params, self.pool.caches, tok, t, fresh, last, tables)
+        args = (self.params, self.pool.caches, tok, t, chain,
+                self._prev_tokens, fresh, last, tables)
         if any_sampled(rows):
-            toks, self.pool.caches = self._step_sampled(
-                *args, pack_rows(rows), self.enc_kv)
+            fn = self.plans.lookup(("mixed", C, "sampled"))
+            toks, self.pool.caches = fn(*args, pack_rows(rows), self.enc_kv)
         else:
-            toks, self.pool.caches = self._step_greedy(*args, self.enc_kv)
-        # sync: emitted tokens feed the next scheduling decision (same
-        # single round trip as the decode-only tick)
-        toks = np.asarray(toks)
-        return [[int(toks[i])]
-                if w is not None and (isinstance(w, DecodeWork) or w.final)
-                else []
-                for i, w in enumerate(works)]
+            fn = self.plans.lookup(("mixed", C, "greedy"))
+            toks, self.pool.caches = fn(*args, self.enc_kv)
+        self._prev_tokens = toks
+        return (works, toks)
 
 
 # ---------------------------------------------------------------------------
@@ -437,12 +655,16 @@ class EncoderPrefixRunner(TokenRunner):
         tfm = self._tfm
         Hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
         Se = cfg.frontend_tokens
-        self.enc_kv = {
+        # committed placement from birth, like the pool carry: admit()
+        # replaces this with a committed jit output, and the committed
+        # flag is part of the jit cache signature
+        self.enc_kv = jax.device_put({
             gname: {"k": jnp.zeros((n, self.n_slots, Se, Hkv, hd),
                                    cache_dtype),
                     "v": jnp.zeros((n, self.n_slots, Se, Hkv, hd),
                                    cache_dtype)}
-            for gname, kind, n in tfm.group_names(cfg) if kind == "xdec"}
+            for gname, kind, n in tfm.group_names(cfg) if kind == "xdec"},
+            jax.devices()[0])
 
         def stage(p, bufs, frames, slot):
             from repro.models.lm import encdec
@@ -458,7 +680,25 @@ class EncoderPrefixRunner(TokenRunner):
                     bufs[gname], kv)
             return new
 
-        self._stage = jax.jit(stage, donate_argnums=(1,))
+        # admission-time staging is a tick-adjacent compile too: plan
+        # it so warmup pre-pays it and a mid-traffic admit never traces
+        self.plans.register(("stage", 0, "enc"), stage, donate=(1,))
+
+    @property
+    def _stage(self):
+        return self.plans.fn(("stage", 0, "enc"))
+
+    def warmup(self) -> int:
+        warmed = super().warmup()
+        frames = np.zeros((self.cfg.frontend_tokens, self.cfg.d_model),
+                          np.float32)
+        # stage zeros into slot 0 pre-traffic: admit() restages the
+        # real frames at every admission, so nothing leaks forward
+        self.enc_kv = self.plans.fn(("stage", 0, "enc"))(
+            self.params, self.enc_kv, frames, np.int32(0))
+        jax.block_until_ready(self.enc_kv)
+        self.plans.mark_warmed(("stage", 0, "enc"))
+        return warmed + 1
 
     def validate(self, req) -> None:
         super().validate(req)
@@ -474,8 +714,9 @@ class EncoderPrefixRunner(TokenRunner):
 
     def admit(self, slot: int, req) -> None:
         frames = np.asarray(req.frames, np.float32)
-        self.enc_kv = self._stage(self.params, self.enc_kv, frames,
-                                  np.int32(slot))
+        stage = self.plans.lookup(("stage", 0, "enc"))
+        self.enc_kv = stage(self.params, self.enc_kv, frames,
+                            np.int32(slot))
 
 
 # ---------------------------------------------------------------------------
@@ -537,6 +778,7 @@ class BasecallerRunner(ModelRunner):
     autoregressive = False
     pool = None
     supports_streaming = True
+    supports_async = True
 
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int,
                  chunk_samples: int = 1024, beam: int = 0,
@@ -572,7 +814,30 @@ class BasecallerRunner(ModelRunner):
         else:
             def fwd(p, s, w, start, read_len):
                 return bc.forward_window(p, s, w, cfg, start, read_len)
-        self._fwd = jax.jit(fwd)
+        # one window geometry -> one plan; warmup pre-pays the compile
+        # and the plan cache's retrace counter covers streaming ticks
+        self._plan_key = ("window", self.core + 2 * self.halo, "fwd")
+        self.plans = PlanCache()
+        self.plans.register(self._plan_key, fwd)
+
+    @property
+    def _fwd(self):
+        return self.plans.fn(self._plan_key)
+
+    def plan_stats(self) -> Dict[str, int]:
+        return self.plans.stats()
+
+    def warmup(self) -> int:
+        """Compile the window forward on an all-idle tick (zero windows,
+        ``read_len == 0`` masks every frame to the read-edge value — no
+        merge state exists yet, nothing is fed)."""
+        B, W = self.n_slots, self.core + 2 * self.halo
+        out = self.plans.fn(self._plan_key)(
+            self.params, self.state, np.zeros((B, W, 1), np.float32),
+            np.zeros((B,), np.int32), np.zeros((B,), np.int32))
+        jax.block_until_ready(out)
+        self.plans.mark_warmed(self._plan_key)
+        return 1
 
     # ------------------------------------------------------------ intake
     def validate(self, req) -> None:
@@ -646,6 +911,11 @@ class BasecallerRunner(ModelRunner):
 
     # ------------------------------------------------------------ device
     def step(self, works: List[Optional[Any]]) -> List[List[int]]:
+        return self.collect(self.dispatch(works))
+
+    def dispatch(self, works: List[Optional[Any]]) -> Any:
+        """Enqueue the tick's batched window forward; log-probs (and
+        classifier logits) stay on device until ``collect``."""
         B = self.n_slots
         W = self.core + 2 * self.halo
         wins = np.zeros((B, W, 1), np.float32)
@@ -658,22 +928,30 @@ class BasecallerRunner(ModelRunner):
             wins[i] = window
             start[i] = st
             read_len[i] = rl
+        fwd = self.plans.lookup(self._plan_key)
+        return (works, fwd(self.params, self.state, wins, start, read_len))
+
+    def collect(self, handle: Any,
+                discard: frozenset = frozenset()) -> List[List[int]]:
+        """Deferred readback + host-side CTC merge / read-until verdict.
+        ``discard`` rows (post-ejection speculative windows under the
+        async engine) are dropped BEFORE the merge sees them, so an
+        ejected read's bases match the synchronous engine exactly."""
+        works, dev = handle
         if self.read_until is not None:
-            lp, cls = self._fwd(self.params, self.state, wins, start,
-                                read_len)
+            lp, cls = dev
             # sync: CTC merge (stitch/beam) and the read-until verdict
             # are host-side by design — one readback covers both
             lp, cls = np.asarray(lp), np.asarray(cls)
         else:
             # sync: CTC merge (stitch/beam) is host-side by design —
             # every basecall tick reads the window's log-probs back
-            lp = np.asarray(self._fwd(self.params, self.state, wins,
-                                      start, read_len))
+            lp = np.asarray(dev)
             cls = None
         f0 = self.halo // self.stride
         out: List[List[int]] = []
         for i, w in enumerate(works):
-            if w is None:
+            if w is None or i in discard:
                 out.append([])
                 continue
             _, f_lo, f_hi, _, _, classify = w.payload

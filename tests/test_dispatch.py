@@ -1,0 +1,426 @@
+"""Async pipelined dispatch (PR 10): bucketed plan cache + warmup,
+one-tick readback-lag token parity, full-carry donation, idle fast
+path, and bounded-admission backpressure.
+
+The load-bearing invariants:
+
+- after ``engine.warmup()`` a full Poisson run performs ZERO new
+  compiles (``retraces == 0`` with mid-traffic plan misses a hard
+  error) across mixed prefill+decode tick shapes, every cache family,
+  both attention backends;
+- the async engine (dispatch tick N, harvest tick N-1) is
+  token-identical to the synchronous engine everywhere — including
+  preemption/resume and streamed reads;
+- rejected requests complete loudly: explicit ``rejected`` status and
+  reason, never a silent drop, accepted outputs unchanged.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_config
+from repro.models import api
+from repro.serving import Request, ServingEngine
+from repro.serving.cache import carry_leaves, donated_fraction
+from repro.serving.plan import (PlanCache, PlanMissError, chunk_buckets,
+                                round_chunk)
+from repro.serving.sampling import SamplingParams
+
+CACHE_LEN = 28
+
+SLOT_FAMILY_ARCHS = ["qwen1.5-4b-smoke", "mamba2-130m-smoke",
+                     "hymba-1.5b-smoke", "deepseek-v3-671b-smoke"]
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_config("qwen1.5-4b-smoke")
+    params = api.init_params(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def _arch_params(arch):
+    cfg = get_config(arch)
+    return cfg, api.init_params(jax.random.key(0), cfg)
+
+
+def make_engine(params, cfg, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("cache_len", CACHE_LEN)
+    kw.setdefault("prefill_chunk", 4)
+    kw.setdefault("cache_dtype", jnp.float32)
+    return ServingEngine(params, cfg, **kw)
+
+
+def mixed_requests(cfg, n=8, seed=0, eos=None):
+    """Variable prompt/output lengths, every other request sampled —
+    exercises every bucket width and both sampler flavors."""
+    rs = np.random.RandomState(seed)
+    reqs = []
+    for i in range(n):
+        p = rs.randint(1, cfg.vocab_size,
+                       size=int(rs.randint(2, 10))).tolist()
+        m = int(rs.randint(2, 12))
+        if i % 2:
+            sp = SamplingParams(max_new_tokens=m, eos_id=eos,
+                                temperature=0.8, top_k=8, top_p=0.9,
+                                seed=100 + i)
+        else:
+            sp = SamplingParams(max_new_tokens=m, eos_id=eos)
+        reqs.append(Request(rid=i, prompt=p, sampling=sp))
+    return reqs
+
+
+def poisson_drain(engine, reqs, mean_gap=1.5, seed=7):
+    """Staggered Poisson-gap submission in scheduler ticks — admissions
+    land mid-decode so ticks mix prefill chunks with running decodes."""
+    rs = np.random.RandomState(seed)
+    arrive = np.cumsum(rs.poisson(mean_gap, size=len(reqs)))
+    arrive -= arrive[0]
+    i, tick = 0, 0
+    while i < len(reqs) or engine.busy:
+        while i < len(reqs) and arrive[i] <= tick:
+            engine.submit(reqs[i])
+            i += 1
+        engine.step()
+        tick += 1
+    return engine.drain_completed()
+
+
+# ---------------------------------------------------------------- plan unit
+
+
+def test_chunk_buckets_and_rounding():
+    assert chunk_buckets(16) == (1, 2, 4, 8, 16)
+    assert chunk_buckets(6) == (1, 2, 4, 6)
+    assert chunk_buckets(1) == (1,)
+    b = chunk_buckets(6)
+    assert round_chunk(1, b) == 1
+    assert round_chunk(3, b) == 4
+    assert round_chunk(5, b) == 6
+    with pytest.raises(ValueError):
+        round_chunk(7, b)       # outside the schedulable closure
+    with pytest.raises(ValueError):
+        chunk_buckets(0)
+
+
+def test_plan_cache_miss_is_hard_error_when_warm_required():
+    plans = PlanCache()
+    plans.register(("decode", 1, "greedy"), lambda x: x)
+    plans.require_warm = True
+    with pytest.raises(PlanMissError):
+        plans.lookup(("decode", 1, "greedy"))     # registered, not warmed
+    with pytest.raises(PlanMissError):
+        plans.lookup(("mixed", 2, "greedy"))      # not even registered
+    plans.mark_warmed(("decode", 1, "greedy"))
+    plans.lookup(("decode", 1, "greedy"))
+    assert plans.stats()["bucket_hits"] == 1
+    with pytest.raises(ValueError):
+        plans.register(("decode", 1, "greedy"), lambda x: x)  # duplicate
+
+
+def test_engine_mid_traffic_retrace_is_hard_error(qwen):
+    """require_warm WITHOUT warmup: the very first tick must raise, not
+    silently compile mid-traffic."""
+    cfg, params = qwen
+    eng = make_engine(params, cfg)
+    eng.runner.plans.require_warm = True
+    eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=2))
+    with pytest.raises(PlanMissError):
+        eng.run()
+
+
+# ------------------------------------------------- zero compiles after warmup
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", SLOT_FAMILY_ARCHS)
+def test_warmup_zero_retraces_poisson(arch):
+    """After warmup, a Poisson run (mixed ticks, sampled mix, EOS early
+    exits) performs zero new compiles on every cache family — misses
+    are hard errors, and the retrace counter stays 0."""
+    cfg, params = _arch_params(arch)
+    eng = make_engine(params, cfg, async_dispatch=True)
+    n = eng.warmup()
+    assert n >= 2 + 2 * len(eng.runner.buckets)
+    eng.runner.plans.require_warm = True
+    done = poisson_drain(eng, mixed_requests(cfg, eos=3))
+    assert all(r.status == "finished" for r in done.values())
+    s = eng.metrics.summary()
+    assert s["retraces"] == 0, s
+    assert s["bucket_misses"] == 0, s
+    assert s["plans_warmed"] == s["plans"]
+    assert s["bucket_hits"] > 0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_warmup_zero_retraces_both_backends(qwen, backend):
+    """The warmed-plan closure holds under both decode-attention read
+    paths (pallas runs in interpret mode on CPU)."""
+    cfg, params = qwen
+    eng = make_engine(params, cfg, async_dispatch=True, block_len=4,
+                      attn_backend=backend)
+    eng.warmup()
+    eng.runner.plans.require_warm = True
+    done = poisson_drain(eng, mixed_requests(cfg))
+    assert all(r.status == "finished" for r in done.values())
+    assert eng.metrics.summary()["retraces"] == 0
+
+
+# --------------------------------------------------------- async-sync parity
+
+
+def _drain_pair(params, cfg, reqs_fn, **kw):
+    outs = []
+    for async_ in (False, True):
+        eng = make_engine(params, cfg, async_dispatch=async_, **kw)
+        eng.warmup()
+        done = poisson_drain(eng, reqs_fn())
+        outs.append(({i: r.out_tokens for i, r in done.items()},
+                     {i: r.status for i, r in done.items()}, eng))
+    return outs
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", SLOT_FAMILY_ARCHS)
+def test_async_token_identical_all_families(arch):
+    """One-tick readback lag is a latency change only: token-identical
+    to the sync engine on dense/GQA, SSM, hybrid-SWA and MLA caches,
+    sampled rows and EOS early exits included."""
+    cfg, params = _arch_params(arch)
+    (out_s, st_s, _), (out_a, st_a, _) = _drain_pair(
+        params, cfg, lambda: mixed_requests(cfg, eos=3))
+    assert out_a == out_s
+    assert st_a == st_s
+
+
+@pytest.mark.slow
+def test_async_token_identical_under_preemption(qwen):
+    """Oversubscribed block pool: the async engine flushes its inflight
+    tick before preempting, so preemption/resume stays token-identical
+    to the sync schedule."""
+    cfg, params = qwen
+    kw = dict(cache_len=24, block_len=4, n_blocks=6)
+    reqs = lambda: [Request(rid=i,
+                            prompt=[(7 * i + j) % 50 + 1 for j in range(8)],
+                            max_new_tokens=8) for i in range(4)]
+    (out_s, st_s, eng_s), (out_a, st_a, eng_a) = _drain_pair(
+        params, cfg, reqs, **kw)
+    assert eng_a.metrics.summary()["preemptions"] > 0, \
+        "workload did not exercise preemption"
+    assert out_a == out_s
+    assert st_a == st_s
+
+
+@pytest.mark.slow
+def test_async_token_identical_streamed_reads():
+    """Streamed basecaller reads (live append + incremental emission)
+    through the async engine equal the sync engine's bases."""
+    from repro.data.squiggle import (SquiggleConfig, normalize, pore_table,
+                                     simulate_read)
+    from repro.serving.stream import StreamingRequest
+    cfg, params = _arch_params("bonito-smoke")
+    rs = np.random.RandomState(3)
+    sim = SquiggleConfig(noise=0.1, drift=0.0)
+    table = pore_table()
+    sigs = []
+    for i in range(4):
+        sig, _ = simulate_read(rs, sim, table, int(rs.randint(40, 90)))
+        sigs.append(normalize(sig))
+
+    def drain(async_):
+        eng = ServingEngine(params, cfg, n_slots=2, chunk_samples=256,
+                            async_dispatch=async_)
+        eng.warmup()
+        live = {}
+        for i, s in enumerate(sigs):
+            req = StreamingRequest(rid=i)
+            eng.submit(req)
+            live[i] = [req, s, 0]
+        while live:
+            for rid in list(live):
+                req, s, ptr = live[rid]
+                if req.done:
+                    del live[rid]
+                    continue
+                nxt = min(ptr + 300, s.shape[0])
+                if nxt > ptr:
+                    req.append(s[ptr:nxt])
+                    live[rid][2] = nxt
+                elif not req.stream_finished:
+                    req.finish()
+            if eng.busy:
+                eng.step()
+        while eng.busy:
+            eng.step()
+        return {i: r.out_tokens for i, r in eng.drain_completed().items()}
+
+    assert drain(True) == drain(False)
+
+
+def test_async_requires_cobatch_and_capable_runner(qwen):
+    cfg, params = qwen
+    with pytest.raises(ValueError):
+        make_engine(params, cfg, async_dispatch=True, co_batch=False)
+
+
+# ----------------------------------------------------------------- donation
+
+
+def test_full_carry_donation_no_double_alloc(qwen):
+    """Every carry leaf (arena + scales + pos + SSM state) is consumed
+    in place by the jitted tick — ``is_deleted`` on 100% of the donated
+    input buffers, for both the mixed and decode-only programs."""
+    cfg, params = qwen
+    eng = make_engine(params, cfg)
+    eng.warmup()
+    eng.submit(Request(rid=0, prompt=[1, 2, 3, 4, 5], max_new_tokens=4))
+    leaves = carry_leaves(eng.pool.caches)
+    assert leaves, "carry has no device leaves to account"
+    eng.step()                                  # mixed tick (prefill)
+    assert donated_fraction(leaves) == 1.0
+    leaves = carry_leaves(eng.pool.caches)
+    eng.step()                                  # decode-only tick
+    assert donated_fraction(leaves) == 1.0
+    eng.run()
+
+
+# ----------------------------------------------------------- idle fast path
+
+
+def test_idle_ticks_skip_runner_calls():
+    """All slots waiting on unarrived stream samples: ``step()`` must
+    not build/dispatch empty work lists tick after tick."""
+    from repro.serving.stream import StreamingRequest
+    cfg, params = _arch_params("bonito-smoke")
+    eng = ServingEngine(params, cfg, n_slots=2, chunk_samples=256)
+    calls = {"n": 0}
+    orig_step, orig_dispatch = eng.runner.step, eng.runner.dispatch
+
+    def count_step(*a, **k):
+        calls["n"] += 1
+        return orig_step(*a, **k)
+
+    def count_dispatch(*a, **k):
+        calls["n"] += 1
+        return orig_dispatch(*a, **k)
+
+    eng.runner.step = count_step
+    eng.runner.dispatch = count_dispatch
+    req = StreamingRequest(rid=0)
+    eng.submit(req)
+    for _ in range(6):
+        eng.step()              # admitted, but zero samples have arrived
+    assert calls["n"] == 0, "idle ticks still dispatched runner work"
+    assert eng.metrics.summary()["idle_ticks"] >= 4
+    rs = np.random.RandomState(0)
+    from repro.data.squiggle import (SquiggleConfig, normalize, pore_table,
+                                     simulate_read)
+    sig, _ = simulate_read(rs, SquiggleConfig(noise=0.1, drift=0.0),
+                           pore_table(), 50)
+    req.append(normalize(sig))
+    req.finish()
+    done = eng.run()            # work resumed after the idle stretch
+    assert done[0].status == "finished"
+    assert calls["n"] > 0
+    assert len(done[0].out_tokens) > 0
+
+
+# -------------------------------------------------------------- backpressure
+
+
+def test_rejected_lifecycle_queue_full(qwen):
+    """Bounded admission: overflow submits return False and complete
+    with status 'rejected' + a reason — and the accepted requests'
+    outputs are unchanged vs the unbounded engine."""
+    cfg, params = qwen
+    reqs = lambda: mixed_requests(cfg, n=6, seed=2)
+    ref_eng = make_engine(params, cfg)
+    for r in reqs():
+        ref_eng.submit(r)
+    ref = ref_eng.run()
+
+    eng = make_engine(params, cfg, max_queue=2)
+    accepted = [eng.submit(r) for r in reqs()]
+    assert accepted[:2] == [True, True] and not all(accepted)
+    done = eng.run()
+    assert sorted(done) == list(range(6))       # nothing dropped silently
+    rejected = {i for i, r in done.items() if r.status == "rejected"}
+    assert rejected == {i for i, ok in enumerate(accepted) if not ok}
+    for i in rejected:
+        assert done[i].rejected and done[i].done
+        assert "queue full" in done[i].reject_reason
+        assert done[i].out_tokens == []
+    for i in set(done) - rejected:
+        assert done[i].status == "finished"
+        assert done[i].out_tokens == ref[i].out_tokens
+    s = eng.metrics.summary()
+    assert s["rejections"] == len(rejected)
+    assert s["queue_depth_hwm"] <= 2
+
+
+def test_rejected_lifecycle_deadline_expiry(qwen):
+    """Deadline-aware shed: a queued request that waited past
+    ``queue_timeout_s`` is rejected at the next step, loudly."""
+    cfg, params = qwen
+    eng = make_engine(params, cfg, n_slots=2, queue_timeout_s=0.005)
+    for i in range(4):          # 2 admit immediately, 2 wait queued
+        eng.submit(Request(rid=i, prompt=[1 + i, 2, 3], max_new_tokens=8))
+    eng.step()
+    time.sleep(0.02)            # both waiters blow their deadline
+    eng.step()
+    done = eng.run()
+    expired = {i for i, r in done.items() if r.status == "rejected"}
+    assert expired == {2, 3}
+    for i in expired:
+        assert "deadline" in done[i].reject_reason
+    assert {done[i].status for i in (0, 1)} == {"finished"}
+    assert eng.metrics.summary()["rejections"] == 2
+
+
+def test_preempted_requests_exempt_from_queue_bound(qwen):
+    """A preempted-and-requeued request must never be load-shed: the
+    bound applies to FRESH queued arrivals only."""
+    cfg, params = qwen
+    eng = make_engine(params, cfg, cache_len=24, block_len=4, n_blocks=6,
+                      max_queue=1)
+    # Stagger submits across steps so the bound (1) never sheds a fresh
+    # arrival — both requests reach slots, then fight over 6 blocks.
+    for i in range(2):
+        assert eng.submit(Request(
+            rid=i, prompt=[(5 * i + j) % 50 + 1 for j in range(8)],
+            max_new_tokens=8))
+        eng.step()
+    while not eng.metrics.preempts and eng.busy:
+        eng.step()
+    assert eng.metrics.preempts > 0
+    # The preempted request sits re-queued but does NOT count as a
+    # fresh waiter: a new arrival still fits under max_queue=1.
+    assert eng._queued_depth() == 0
+    assert eng.submit(Request(rid=2, prompt=[9, 8, 7], max_new_tokens=4))
+    done = eng.run()
+    assert all(r.status == "finished" for r in done.values())
+    assert eng.metrics.summary()["rejections"] == 0
+
+
+# ------------------------------------------------------------------ metrics
+
+
+def test_metrics_dispatch_keys(qwen):
+    cfg, params = qwen
+    eng = make_engine(params, cfg, async_dispatch=True)
+    eng.warmup()
+    poisson_drain(eng, mixed_requests(cfg, n=4, seed=5))
+    s = eng.metrics.summary()
+    for key in ("tick_latency_p50_s", "tick_latency_p99_s", "idle_ticks",
+                "queue_depth_hwm", "rejections", "plans", "plans_warmed",
+                "bucket_hits", "bucket_misses", "retraces"):
+        assert key in s, key
+    assert s["tick_latency_p50_s"] <= s["tick_latency_p99_s"]
+    assert s["queue_depth_hwm"] >= s["queue_depth_max"]
+    assert s["plans"] > 0 and s["plans_warmed"] == s["plans"]
+    assert s["rejections"] == 0
